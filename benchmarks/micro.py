@@ -1,0 +1,73 @@
+"""Measured micro-benchmarks (CPU wall time) for the pool-space hot path:
+ravel/unravel, bucket slicing, CSC select/compact/scatter, kernels (interp)
+vs refs, fused update. These are the operations GradientFlow adds on top of
+the collectives — the paper's 'minimal GPU memory copy overhead' claim
+(§3.1) corresponds to these staying trivially cheap vs the wire time."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csc
+from repro.core.pool import GradientPool
+from repro.kernels import ops, ref
+
+CHUNK = 32768
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> List[Dict]:
+    rows = []
+    params = {f"t{i}": jnp.zeros((s,), jnp.float32)
+              for i, s in enumerate([4_000_000, 1_000_000, 250_000,
+                                     60_000, 4_096])}
+    pool = GradientPool(params, pad_to=CHUNK)
+    grads = jax.tree_util.tree_map(
+        lambda x: jnp.ones_like(x), params)
+
+    ravel = jax.jit(lambda g: pool.ravel(g))
+    rows.append({"name": "pool_ravel_5.3M", "us": timeit(ravel, grads),
+                 "derived": f"{pool.size} elems"})
+    flat = ravel(grads)
+    unravel = jax.jit(lambda p: pool.unravel(p))
+    rows.append({"name": "pool_unravel_5.3M", "us": timeit(unravel, flat),
+                 "derived": ""})
+
+    n_chunks = pool.size // CHUNK
+    idx = jnp.arange(0, n_chunks, 4, dtype=jnp.int32)
+    l1_ref = jax.jit(lambda p: ref.chunk_l1norm(p, CHUNK))
+    rows.append({"name": "chunk_l1norm_ref", "us": timeit(l1_ref, flat),
+                 "derived": f"{n_chunks} chunks"})
+    rows.append({"name": "chunk_l1norm_kernel(interp)",
+                 "us": timeit(lambda p: ops.chunk_l1norm(p, CHUNK), flat),
+                 "derived": "CPU interpret mode"})
+    comp_ref = jax.jit(lambda p, i: ref.csc_compact(p, i, CHUNK))
+    rows.append({"name": "csc_compact_ref", "us": timeit(comp_ref, flat,
+                                                         idx),
+                 "derived": f"k={idx.shape[0]}"})
+
+    mom = jnp.zeros_like(flat)
+    mask = jnp.ones(flat.shape, bool)
+    upd = jax.jit(lambda m, g, mo, ma: ref.fused_update(
+        m, g, mo, ma, lr=0.1, momentum=0.9, weight_decay=1e-4))
+    rows.append({"name": "fused_update_ref",
+                 "us": timeit(upd, flat, flat, mom, mask), "derived": ""})
+
+    sel = jax.jit(lambda n: csc.select_chunks(n, max(n_chunks // 8, 1)))
+    norms = jnp.arange(float(n_chunks))
+    rows.append({"name": "csc_select_topk", "us": timeit(sel, norms),
+                 "derived": f"top-{max(n_chunks // 8, 1)}"})
+    return rows

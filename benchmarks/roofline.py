@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape x mesh) cell, reads benchmarks/results/dryrun JSON and
+derives the three per-device roofline terms for TPU v5e:
+
+  compute    = HLO_FLOPs            / (197e12 FLOP/s)
+  memory     = HLO_bytes            / (819e9  B/s HBM)
+  collective = collective_bytes     / (50e9   B/s per ICI link)
+
+(cost_analysis flops/bytes are per-partition on the SPMD module; the
+collective bytes were parsed from the partitioned HLO — all already
+per-device, so no further division by chip count.)
+
+Also reports MODEL_FLOPS / HLO_FLOPs — the useful-compute fraction that
+catches remat/redundancy waste — where MODEL_FLOPS is 6·N·D for training
+(2·N·D for forward-only prefill, 2·N_active·B per decode step), with
+N_active discounting inactive MoE experts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def active_params(arch_id: str) -> float:
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.parallel.sharding import count_params
+    cfg, _ = get_arch(arch_id)
+    model = build_model(cfg)
+    total = count_params(model.param_specs())
+    if cfg.moe is None:
+        return float(total)
+    # discount inactive experts: every expert tensor is used k/E of the time
+    from repro.models.layers import moe as moe_mod
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    expert_total = 3 * cfg.d_model * cfg.d_ff * e * cfg.num_layers
+    return float(total - expert_total * (1.0 - k / e))
+
+
+def model_flops(arch_id: str, record: Dict) -> float:
+    """Per-DEVICE useful model FLOPs for the cell."""
+    n_act = active_params(arch_id)
+    devices = record["num_devices"]
+    shape = record["shape"]
+    from repro.configs.shapes import SHAPES
+    sc = SHAPES[shape]
+    if record["kind"] == "train":
+        tokens = sc.global_batch * sc.seq_len
+        return 6.0 * n_act * tokens / devices
+    if record["kind"] == "prefill":
+        tokens = sc.global_batch * sc.seq_len
+        return 2.0 * n_act * tokens / devices
+    # decode: one token per sequence
+    return 2.0 * n_act * sc.global_batch / devices
+
+
+def analyze_record(rec: Dict) -> Dict:
+    flops = rec["flops_per_device"]
+    mem_bytes = rec["bytes_per_device"]
+    coll = rec["collectives"]["total_bytes"]
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_n = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    mf = model_flops(rec["arch"], rec)
+    bound = max(t_c, t_m, t_n)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_flops_frac": mf / flops if flops else 0.0,
+        # roofline fraction: useful work at peak over the modeled step time
+        "roofline_frac": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "hbm_gib": rec["memory"]["argument_bytes"] / 2 ** 30,
+        "coll_ops": rec["collectives"]["total_count"],
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+EXTRACTED = os.path.join(os.path.dirname(__file__), "results", "roofline")
+
+
+def load_all(subdir: str = "pod16x16") -> List[Dict]:
+    """Dry-run records, with flops/bytes/collectives replaced by the
+    L-extrapolated measurements (roofline_extract.py) when available —
+    cost_analysis counts scan bodies once, so the extracted numbers are
+    the accurate ones; memory_analysis comes from the full-config compile."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, subdir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        ex_path = os.path.join(EXTRACTED, subdir, os.path.basename(path))
+        if os.path.exists(ex_path):
+            with open(ex_path) as f:
+                ex = json.load(f)
+            rec["flops_per_device"] = ex["flops"]
+            rec["bytes_per_device"] = ex["bytes"]
+            rec["collectives"] = {
+                "total_bytes": ex["coll_bytes"],
+                "total_count": rec["collectives"]["total_count"],
+            }
+            rec["extracted"] = True
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MF/HLO | roofline |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_flops_frac']:.2f} | "
+            f"{r['roofline_frac']:.2%} |")
+    return "\n".join(lines)
+
+
+def main():
+    for sub in ("pod16x16", "pod2x16x16", "pod16x16_opt"):
+        rows = load_all(sub)
+        if not rows:
+            continue
+        print(f"\n== roofline: {sub} ({len(rows)} cells) ==")
+        print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

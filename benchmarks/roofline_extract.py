@@ -1,0 +1,132 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ must precede jax import (own process; run via run_roofline_sweep.sh)
+
+"""Accurate per-device roofline inputs via 2-point layer extrapolation.
+
+XLA's ``cost_analysis`` counts a ``while``-loop (lax.scan over layers) body
+ONCE, so the full-config dry-run's FLOPs/bytes understate per-step work by
+~num_layers. The full-config compile remains the dry-run deliverable (its
+memory_analysis is exact); for the roofline we compile the SAME cell at two
+small UNROLLED depths L1 < L2 on the production mesh and extrapolate:
+
+    per_layer = (v(L2) - v(L1)) / (L2 - L1)
+    v(L_full) = v(L1) + per_layer * (L_full - L1)
+
+which is exact for any cost that is affine in depth (transformer stacks
+are: embedding/head/pool costs are the intercept, block costs the slope).
+Collective bytes and HHO bytes extrapolate the same way.
+
+Usage: python -m benchmarks.roofline_extract --arch X --shape Y [--multi-pod]
+       [--opt]   (optimized profile: causal_skip, hierarchical reduce, ...)
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict
+
+import jax
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "roofline")
+
+
+def _depths(arch_id: str):
+    """(L1, L2) honouring structural constraints (zamba2 group size)."""
+    if arch_id == "zamba2-2.7b":
+        return 6, 12
+    return 2, 4
+
+
+def lower_cell(arch_id: str, shape_name: str, num_layers: int, *,
+               multi_pod: bool, optimized: bool) -> Dict:
+    from repro.configs import get_arch
+    from repro.configs.shapes import SHAPES
+    from repro.launch.dryrun import build_train_cfg, collective_stats
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.trainer import Trainer
+    from repro.models.layers import attention
+    attention.SCAN_UNROLL = True  # count every attention block's FLOPs
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    model_cfg, rules = get_arch(arch_id)
+    model_cfg = dataclasses.replace(model_cfg, num_layers=num_layers)
+    cfg = build_train_cfg(arch_id, shape, "", optimized)
+    cfg = dataclasses.replace(cfg, model=model_cfg, scan_layers=False)
+
+    trainer = Trainer(cfg, mesh, rules)
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            step = trainer.build_train_step(donate=False)
+            lowered = step.lower(trainer.abstract_state(),
+                                 trainer.abstract_train_batch(shape))
+        else:
+            mode = "prefill" if shape.kind == "prefill" else "decode"
+            long = shape.global_batch < trainer.num_data
+            kv = trainer.data_axes if (optimized and mode == "decode"
+                                       and long) else None
+            step, srules = trainer.build_serve_step(
+                shape, mode=mode, kv_seq_shard=kv,
+                split_combine=optimized and mode == "decode",
+                flash_decode=optimized)
+            args = trainer.abstract_serve_args(shape, srules, mode)
+            lowered = step.lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "coll_count": int(coll["total_count"]),
+    }
+
+
+def extract(arch_id: str, shape_name: str, *, multi_pod: bool,
+            optimized: bool) -> Dict:
+    from repro.configs import get_arch
+    model_cfg, _ = get_arch(arch_id)
+    l1, l2 = _depths(arch_id)
+    t0 = time.time()
+    v1 = lower_cell(arch_id, shape_name, l1, multi_pod=multi_pod,
+                    optimized=optimized)
+    v2 = lower_cell(arch_id, shape_name, l2, multi_pod=multi_pod,
+                    optimized=optimized)
+    lfull = model_cfg.num_layers
+    out = {"arch": arch_id, "shape": shape_name,
+           "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+           "optimized": optimized, "L1": l1, "L2": l2, "L": lfull,
+           "extract_s": round(time.time() - t0, 1)}
+    for key in ("flops", "bytes", "coll_bytes"):
+        slope = (v2[key] - v1[key]) / (l2 - l1)
+        out[key] = v1[key] + slope * (lfull - l1)
+        out[f"{key}_per_layer"] = slope
+        out[f"{key}_fixed"] = v1[key] - slope * l1
+    out["coll_count_L1"] = v1["coll_count"]
+    return out
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--opt", action="store_true")
+    args = p.parse_args()
+    rec = extract(args.arch, args.shape, multi_pod=args.multi_pod,
+                  optimized=args.opt)
+    sub = rec["mesh"] + ("_opt" if args.opt else "")
+    os.makedirs(os.path.join(RESULTS, sub), exist_ok=True)
+    path = os.path.join(RESULTS, sub,
+                        f"{args.arch}__{args.shape}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[roofline_extract] {args.arch} x {args.shape} ({sub}): "
+          f"flops/dev={rec['flops']:.3e} bytes/dev={rec['bytes']:.3e} "
+          f"coll/dev={rec['coll_bytes']/2**20:.1f}MiB "
+          f"({rec['extract_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

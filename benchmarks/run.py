@@ -1,0 +1,65 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * micro           — measured CPU wall times of the pool-space hot path
+  * fig8            — allreduce bandwidth vs message size (calibrated model)
+  * table1 / table2 — AlexNet / ResNet-50 optimization-combo throughput
+                      (REAL GradientFlow bucketing + comm model) vs paper
+  * table3_4        — end-to-end training-time reproduction
+  * roofline        — per-cell terms from the dry-run (if results exist)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    rows = []
+
+    from benchmarks import micro
+    for r in micro.run():
+        rows.append((f"micro/{r['name']}", f"{r['us']:.1f}", r["derived"]))
+
+    from benchmarks import paper_tables
+    for r in paper_tables.fig8_allreduce_sweep():
+        rows.append((f"fig8/{r['backend']}/{r['msg_MB']}MB", "",
+                     f"{r['algo_GBps']:.2f}GBps"))
+
+    for tname, fn in [("table1_alexnet", paper_tables.table1_alexnet),
+                      ("table2_resnet50", paper_tables.table2_resnet50)]:
+        for r in fn():
+            rows.append((
+                f"{tname}/{r['combo']}",
+                f"{r['t_compute_ms'] + r['t_comm_ms']:.1f}ms",
+                f"model={r['model_img_s']/1e3:.1f}K img/s "
+                f"({r['model_speedup']:.1f}x) "
+                f"paper={r['paper_img_s']/1e3:.1f}K ({r['paper_speedup']:.1f}x) "
+                f"wire={r['wire_MB']:.0f}MB msgs={r['messages']}"))
+
+    for r in paper_tables.tables34_end_to_end():
+        paper = (f" paper={r['paper_minutes']:.1f}min"
+                 if r["paper_minutes"] else "")
+        rows.append((f"table3_4/{r['model']}/{r['combo']}", "",
+                     f"model={r['model_minutes']:.1f}min{paper}"))
+
+    try:
+        from benchmarks import roofline
+        for sub in ("pod16x16", "pod2x16x16", "pod16x16_opt"):
+            for r in roofline.load_all(sub):
+                rows.append((
+                    f"roofline/{sub}/{r['arch']}/{r['shape']}", "",
+                    f"dom={r['dominant']} c={r['compute_s']:.2e}s "
+                    f"m={r['memory_s']:.2e}s n={r['collective_s']:.2e}s "
+                    f"useful={r['useful_flops_frac']:.2f} "
+                    f"roofline={r['roofline_frac']:.1%}"))
+    except Exception as e:  # roofline needs dry-run artifacts
+        rows.append(("roofline/unavailable", "", repr(e)))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

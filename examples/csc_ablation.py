@@ -1,0 +1,79 @@
+"""CSC ablation (the paper's Table 3 accuracy story, §3.2):
+
+  1. dense training            (reference)
+  2. CSC @ 85% sparsity        (with momentum correction + warm-up)
+  3. CSC without correction    (historical gradients dropped)
+
+On the synthetic Markov task, (2) should track (1) closely and (3) should
+lag — reproducing the motivation for Algorithm 1.
+
+  PYTHONPATH=src python examples/csc_ablation.py --steps 120
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
+                                TrainConfig)
+from repro.data.synthetic import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.launch.trainer import Trainer
+
+
+def run(steps, mode, sparsity, momentum_corr, warmup):
+    model_cfg, rules = get_smoke("smollm-135m")
+    gf = GradientFlowConfig(mode=mode, bucket_elems=8192, chunk_elems=512,
+                            sparsity=sparsity,
+                            momentum=0.9 if momentum_corr else 0.0,
+                            warmup_steps=warmup, warmup_stages=4)
+    cfg = TrainConfig(model=model_cfg, gradientflow=gf,
+                      optimizer=OptimizerConfig(name="momentum_sgd",
+                                                learning_rate=0.3,
+                                                momentum=0.9,
+                                                warmup_steps=5,
+                                                total_steps=steps,
+                                                schedule="constant"),
+                      seq_len=64, global_batch=8, attn_chunk=0)
+    mesh = make_host_mesh()
+    trainer = Trainer(cfg, mesh, rules)
+    data = SyntheticLM(model_cfg.vocab_size, seed=0)
+    losses = []
+    with jax.sharding.set_mesh(mesh):
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        steps_by_stage = {s.index: trainer.build_train_step(stage=s)
+                          for s in trainer.gf.stages}
+        for t in range(steps):
+            stage = trainer.gf.stage_for_step(t)
+            state, m = steps_by_stage[stage.index](
+                state, jax.device_put(data.batch(t, 8, 64)))
+            losses.append(float(m["loss"]))
+    return np.asarray(losses)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=120)
+    args = p.parse_args()
+    dense = run(args.steps, "dense", 0.0, True, 0)
+    csc = run(args.steps, "csc", 0.85, True, args.steps // 4)
+    nocorr = run(args.steps, "csc", 0.85, False, 0)
+    k = max(args.steps // 10, 1)
+    print(f"{'variant':<28} first-{k}  last-{k}")
+    for name, ls in [("dense", dense),
+                     ("csc-0.85 (+corr,+warmup)", csc),
+                     ("csc-0.85 (no correction)", nocorr)]:
+        print(f"{name:<28} {ls[:k].mean():7.4f}  {ls[-k:].mean():7.4f}")
+    gap_corr = csc[-k:].mean() - dense[-k:].mean()
+    gap_nocorr = nocorr[-k:].mean() - dense[-k:].mean()
+    print(f"\ncsc-with-correction gap to dense : {gap_corr:+.4f}")
+    print(f"csc-sans-correction gap to dense : {gap_nocorr:+.4f}")
+    print("=> momentum correction recovers most of the sparsity-induced "
+          "loss" if gap_corr < gap_nocorr else "=> unexpected: check setup")
+
+
+if __name__ == "__main__":
+    main()

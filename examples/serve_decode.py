@@ -1,0 +1,14 @@
+"""Batched serving: prefill a prompt batch, decode greedily with the KV
+cache — exercises the same serve_step the decode_32k/long_500k dry-run
+cells lower.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "zamba2-2.7b", "--reduced", "--batch", "4",
+          "--prompt-len", "32", "--gen", "16"] + sys.argv[1:])

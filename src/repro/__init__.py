@@ -1,0 +1,2 @@
+"""repro — GradientFlow-on-TPU: communication-optimal data-parallel training in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint import reshard

@@ -1,0 +1,70 @@
+"""Elastic resharding: restore a checkpoint onto a *different* mesh.
+
+Checkpoints store full logical arrays (manager.py), so resharding is a
+placement problem, not a data-transform problem: given the new mesh and the
+architecture's sharding rules, ``place`` device_puts every leaf with its
+NamedSharding. The pool-space optimizer/GradientFlow state is mesh-
+independent by construction (1-D logical vectors replicated across data
+axes), so elastic scaling changes *only* the data-parallel degree — the
+global batch is re-split and the data pipeline's (step, shard)-pure
+indexing keeps sample order consistent.
+
+``plan`` validates feasibility first (divisibility of sharded dims on the
+new mesh) so a supervisor can decide between meshes before moving bytes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def plan(abstract_state: Any, pspecs: Any, mesh: Mesh) -> List[str]:
+    """Returns a list of problems (empty = resharding is feasible)."""
+    problems = []
+    flat_s = jax.tree_util.tree_leaves(abstract_state)
+    flat_p = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    axis_sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            group = names if isinstance(names, tuple) else (names,)
+            total = int(np.prod([axis_sizes[n] for n in group]))
+            if dim >= len(leaf.shape) or leaf.shape[dim] % total != 0:
+                problems.append(
+                    f"dim {dim} of shape {leaf.shape} not divisible by "
+                    f"{total} ({group})")
+    return problems
+
+
+def place(state: Any, shardings: Any) -> Any:
+    """device_put every leaf with its (new-mesh) sharding."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+def reshard_hg(old_hg: np.ndarray, new_num_data: int) -> np.ndarray:
+    """Re-distribute CSC's per-shard historical gradients across a new
+    data-parallel degree.
+
+    The algorithm only ever consumes hg additively before a sum-reduce
+    (Algorithm 1 line 7 followed by the allreduce), so any transform that
+    preserves the *column-wise total* is semantically exact. We split the
+    total evenly across the new shards to keep per-shard magnitudes (and
+    the L1 norm census) balanced.
+    """
+    total = np.asarray(old_hg).sum(axis=0, keepdims=True)
+    return np.tile(total / new_num_data, (new_num_data, 1))
+
+
+def reshard_batch_split(global_batch: int, old_shards: int,
+                        new_shards: int) -> Tuple[int, int]:
+    """(old_per_shard, new_per_shard) batch sizes after elastic remesh."""
+    assert global_batch % old_shards == 0
+    assert global_batch % new_shards == 0, (
+        f"global batch {global_batch} not divisible by {new_shards} shards")
+    return global_batch // old_shards, global_batch // new_shards

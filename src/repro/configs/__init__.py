@@ -1,0 +1,38 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs import (arctic_480b, falcon_mamba_7b, grok1_314b,
+                           internvl2_26b, musicgen_large, olmo_1b, qwen3_32b,
+                           smollm_135m, stablelm_12b, zamba2_27b)
+from repro.configs.base import (GradientFlowConfig, MeshConfig, ModelConfig,
+                                MoEConfig, OptimizerConfig, ShapeConfig,
+                                SSMConfig, TrainConfig)
+from repro.configs.shapes import SHAPES, shapes_for
+
+_MODULES = {
+    "musicgen-large": musicgen_large,
+    "grok-1-314b": grok1_314b,
+    "arctic-480b": arctic_480b,
+    "internvl2-26b": internvl2_26b,
+    "qwen3-32b": qwen3_32b,
+    "stablelm-12b": stablelm_12b,
+    "olmo-1b": olmo_1b,
+    "smollm-135m": smollm_135m,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "zamba2-2.7b": zamba2_27b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str) -> Tuple[ModelConfig, Dict[str, str]]:
+    """(full config, sharding rule table) for an --arch id."""
+    mod = _MODULES[arch_id]
+    return mod.CONFIG, mod.RULES
+
+
+def get_smoke(arch_id: str) -> Tuple[ModelConfig, Dict[str, str]]:
+    mod = _MODULES[arch_id]
+    return mod.SMOKE, mod.RULES

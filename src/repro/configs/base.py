@@ -1,0 +1,215 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything is a frozen dataclass so configs are hashable (usable as jit
+static args) and safely shareable across threads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for an FFN block."""
+
+    num_experts: int = 8
+    top_k: int = 2
+    # Arctic-style dense residual MLP running in parallel with the MoE FFN.
+    dense_residual: bool = False
+    residual_d_ff: int = 0
+    # Load-balancing auxiliary loss weight (Switch-style).
+    aux_loss_weight: float = 0.01
+    # Capacity factor for expert token buffers (static shapes under jit).
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """State-space (Mamba) block settings."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    # mamba2 uses multi-head SSD with scalar A per head.
+    version: int = 1
+    n_heads: int = 0  # mamba2 only; 0 => derived as d_inner // head_dim
+    head_dim: int = 64  # mamba2 only
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture config. One instance per assigned architecture.
+
+    ``family`` selects the model builder:
+      'dense'  — decoder-only transformer (GQA, rotary, RMS/LN)
+      'moe'    — transformer with MoE FFN blocks
+      'ssm'    — attention-free Mamba LM
+      'hybrid' — Mamba2 backbone with shared attention blocks (zamba2)
+      'vlm'    — dense LM backbone + stub vision frontend (internvl2)
+      'audio'  — dense LM backbone over codec tokens (musicgen)
+    """
+
+    name: str = "model"
+    family: str = "dense"
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 => d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    max_seq_len: int = 8192
+    # Norm style: 'rmsnorm' | 'layernorm' | 'nonparametric_ln' (olmo)
+    norm: str = "rmsnorm"
+    qk_norm: bool = False  # qwen3
+    # MLP activation: 'swiglu' | 'gelu' | 'geglu'
+    activation: str = "swiglu"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one shared attention block applied every k mamba blocks
+    hybrid_attn_every: int = 6
+    # vlm: number of stub vision patch embeddings prepended to the sequence
+    num_vision_tokens: int = 0
+    # audio: number of codec codebooks interleaved (musicgen uses delay
+    # pattern over 4 codebooks; backbone sees one merged token stream)
+    num_codebooks: int = 0
+    # dtype policy
+    param_dtype: str = "float32"     # master storage dtype
+    compute_dtype: str = "bfloat16"  # fwd/bwd compute dtype
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic (recurrent-state) decode => long_500k is runnable."""
+        return self.family in ("ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientFlowConfig:
+    """Configuration of the paper's communication backend.
+
+    mode:
+      'dense'      — per-tensor psum (baseline §2.3)
+      'lazy'       — lazy allreduce, θ-bucketed fused psum (§3.1)
+      'csc'        — lazy + coarse-grained sparse communication (§3.2)
+    """
+
+    mode: str = "lazy"
+    # Lazy-allreduce fusion threshold θ, in *elements* of the pool
+    # (paper uses bytes; elements keeps it dtype-agnostic). 0 => single
+    # fused allreduce over the whole pool ('disable-overlap' in §3.1).
+    bucket_elems: int = 16 * 1024 * 1024
+    # Wire dtype for gradient collectives (paper: fp16; TPU: bf16).
+    wire_dtype: str = "bfloat16"
+    # CSC: chunk granularity in gradients (paper: 32K).
+    chunk_elems: int = 32768
+    # CSC: fraction of chunks NOT transmitted (paper: 0.85 for AlexNet).
+    sparsity: float = 0.85
+    # CSC: momentum used by the correction algorithm (must match optimizer).
+    momentum: float = 0.9
+    # Warm-up dense training: list of (step_fraction, sparsity) stages.
+    # Before warmup_steps the schedule linearly ramps sparsity in
+    # len(warmup_stages) discrete compiled stages.
+    warmup_steps: int = 0
+    warmup_stages: int = 4
+    # Reduction axes (mesh axis names) — e.g. ('data',) or ('pod','data').
+    reduce_axes: Tuple[str, ...] = ("data",)
+    # Hierarchical two-level reduce: reduce-scatter+all-gather over 'data'
+    # then cross-pod psum on the scattered shard (beyond-paper option).
+    hierarchical: bool = False
+    # Use Pallas fused kernels where available (CPU falls back to ref).
+    use_kernels: bool = False
+
+    @property
+    def csc_enabled(self) -> bool:
+        return self.mode == "csc"
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "momentum_sgd"  # 'momentum_sgd' | 'lars' | 'adamw'
+    learning_rate: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    # LARS trust coefficient (paper §4.2 uses LARS for 64K batch).
+    lars_eta: float = 0.001
+    lars_eps: float = 1e-9
+    # AdamW betas/eps
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    # LR schedule: linear scaling + warmup (paper §4.2), cosine decay.
+    warmup_steps: int = 200
+    total_steps: int = 10000
+    schedule: str = "warmup_cosine"  # 'constant' | 'warmup_linear' | 'warmup_cosine'
+    grad_clip_norm: float = 0.0  # 0 => disabled
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Logical mesh description. axes are (name, size) pairs."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a in ("pod", "data", "replica"))
+
+    @property
+    def model_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a == "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned input-shape cell."""
+
+    name: str = "train_4k"
+    seq_len: int = 4096
+    global_batch: int = 256
+    # 'train' lowers train_step, 'prefill' lowers prefill, 'decode' lowers
+    # one-token serve_step with a seq_len KV cache.
+    kind: str = "train"
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig = dataclasses.field(default_factory=ModelConfig)
+    gradientflow: GradientFlowConfig = dataclasses.field(
+        default_factory=GradientFlowConfig)
+    optimizer: OptimizerConfig = dataclasses.field(
+        default_factory=OptimizerConfig)
+    mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
+    seq_len: int = 4096
+    global_batch: int = 256
+    microbatches: int = 1  # >1 => gradient accumulation with per-µbatch overlap
+    remat: str = "layer"  # 'none' | 'layer' — activation checkpoint policy
+    scan_layers: bool = True  # lax.scan over layers (small HLO, fast compile)
+    # Attention execution: blockwise (flash-style) beyond this many tokens;
+    # 0 disables blockwise entirely.
+    attn_chunk: int = 1024
+    # Beyond-paper perf option: skip upper-triangular causal blocks
+    # (~2x attention-FLOP saving). False = paper-era masked-full-grid.
+    causal_skip: bool = False
+    seed: int = 0
+
+    def replace(self, **kw: Any) -> "TrainConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,27 @@
+"""The four assigned input-shape cells (LM transformer shapes)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ShapeConfig
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig(name="train_4k", seq_len=4096,
+                            global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig(name="prefill_32k", seq_len=32768,
+                               global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig(name="decode_32k", seq_len=32768,
+                              global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig(name="long_500k", seq_len=524288,
+                             global_batch=1, kind="decode"),
+}
+
+
+def shapes_for(cfg) -> List[ShapeConfig]:
+    """The shape cells an architecture runs. long_500k needs sub-quadratic
+    attention: pure full-attention archs skip it (noted in DESIGN.md
+    §Arch-applicability); SSM/hybrid run it."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.supports_long_context:
+        out.append(SHAPES["long_500k"])
+    return out

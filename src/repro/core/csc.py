@@ -1,0 +1,194 @@
+"""Coarse-grained sparse communication (paper §3.2, Figs 17–18, Algorithm 1).
+
+The gradient pool is partitioned into fixed-size chunks (paper: 32K
+gradients). Each iteration only the top-(1−ρ) fraction of chunks by
+*globally agreed* L1 norm is exchanged — packed into a dense buffer so the
+allreduce runs at full ring bandwidth (the paper's argument against
+fine-grained k-v sparse aggregation, which is even stronger on TPU).
+
+Key mechanics, all paper-faithful:
+
+* **Cross-iteration selection** (Fig 18): per-chunk L1 norms of the
+  *post-reduce* pool are allreduced at the end of iteration t; the top-k
+  chunk set derived from them is used in iteration t+1. Selection state
+  therefore lives in ``CSCState.chunk_norms`` and every GPU provably selects
+  the same chunks (inputs to top_k are identical after the psum).
+* **Momentum SGD correction** (Algorithm 1): unselected gradients are
+  accumulated into a historical buffer ``hg`` scaled by the SGD momentum and
+  re-injected before the next reduction — no gradient information is lost.
+  The matching update-side masking lives in ``repro.optim.sgd``.
+* **Warm-up dense training**: handled by ``repro.core.schedule`` — k is
+  static per compiled stage.
+
+Under mean-reduction the paper's "divide important-chunk L1 by N" step is
+the identity: the reduced chunk already holds sum/N, so its L1 equals the
+paper's normalized value. Unimportant chunks contribute their local L1,
+summed by the norm-psum, exactly as in Fig 18.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GradientFlowConfig
+from repro.core.lazy_allreduce import bucketed_reduce
+from repro.parallel.collectives import reduce_pool
+
+
+class CSCState(NamedTuple):
+    """Carried across iterations inside the train state.
+
+    hg          : f32[pool]   — historical (unsent) gradients, Algorithm 1.
+    chunk_norms : f32[chunks] — allreduced L1 norms from the previous
+                  iteration; the top-k of these defines this iteration's
+                  important chunks (identical on every device).
+    """
+
+    hg: jax.Array
+    chunk_norms: jax.Array
+
+
+def init_state(pool_size: int, chunk_elems: int,
+               dtype=jnp.float32) -> CSCState:
+    num_chunks = pool_size // chunk_elems
+    assert num_chunks * chunk_elems == pool_size, (
+        "pool must be padded to a chunk multiple")
+    return CSCState(
+        hg=jnp.zeros((pool_size,), dtype=dtype),
+        # descending init => warm-up (dense) selects every chunk; the first
+        # sparse iteration uses norms produced by real gradients.
+        chunk_norms=jnp.arange(num_chunks, 0, -1, dtype=dtype),
+    )
+
+
+def select_chunks(chunk_norms: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k chunk ids (sorted ascending for deterministic layout) + mask."""
+    num_chunks = chunk_norms.shape[0]
+    _, idx = jax.lax.top_k(chunk_norms, k)
+    idx = jnp.sort(idx)
+    mask = jnp.zeros((num_chunks,), dtype=jnp.bool_).at[idx].set(True)
+    return idx, mask
+
+
+def compact_chunks(pool: jax.Array, idx: jax.Array,
+                   chunk_elems: int) -> jax.Array:
+    """Gather selected chunks into the dense wire buffer (k*chunk,)."""
+    chunks = pool.reshape((-1, chunk_elems))
+    return jnp.take(chunks, idx, axis=0).reshape((-1,))
+
+
+def scatter_chunks(pool: jax.Array, idx: jax.Array, values: jax.Array,
+                   chunk_elems: int) -> jax.Array:
+    """Write reduced chunks back into the pool at their chunk positions."""
+    chunks = pool.reshape((-1, chunk_elems))
+    chunks = chunks.at[idx].set(values.reshape((-1, chunk_elems)))
+    return chunks.reshape((-1,))
+
+
+def chunk_l1_norms(pool: jax.Array, chunk_elems: int) -> jax.Array:
+    """Per-chunk L1 norm; f32 accumulate regardless of pool dtype."""
+    chunks = pool.reshape((-1, chunk_elems)).astype(jnp.float32)
+    return jnp.sum(jnp.abs(chunks), axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CSCReduceResult:
+    grads: jax.Array        # update-ready pool: mean for important, ZERO else
+                            # (device-invariant: safe input for the optimizer)
+    elem_mask: jax.Array    # bool[pool]; True where the update may apply
+    state: CSCState         # hg is per-data-shard (device-varying) by design
+
+
+def csc_reduce(
+    pool_grads: jax.Array,
+    state: CSCState,
+    cfg: GradientFlowConfig,
+    *,
+    num_selected: int,
+    bucket_boundaries: Sequence[Tuple[int, int]],
+    num_data_shards: int,
+) -> CSCReduceResult:
+    """One CSC reduction (Fig 17 + Algorithm 1 preprocess step).
+
+    Args:
+      pool_grads: local per-data-shard raveled gradients (any float dtype).
+      state: CSC state from the previous iteration.
+      cfg: GradientFlow config (chunk size, momentum, wire dtype, axes).
+      num_selected: static k for this compiled stage.
+      bucket_boundaries: θ buckets *over the packed wire buffer* — CSC
+        "relies on lazy allreduce" (paper §3.2): the compacted selection is
+        itself transmitted in fused θ buckets.
+      num_data_shards: product of data-axis sizes (for the mean).
+    """
+    chunk = cfg.chunk_elems
+    momentum = cfg.momentum
+    g = pool_grads.astype(jnp.float32)
+
+    # Algorithm 1 line 7: re-inject historical gradients.
+    g = g + state.hg
+
+    # Selection from the PREVIOUS iteration's allreduced norms (Fig 18).
+    idx, chunk_mask = select_chunks(state.chunk_norms, num_selected)
+    elem_mask = jnp.repeat(chunk_mask, chunk)
+
+    # Pack important chunks; fused bucketed allreduce over the wire buffer.
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        wire = kops.csc_compact(g, idx, chunk)
+    else:
+        wire = compact_chunks(g, idx, chunk)
+    reduced = bucketed_reduce(
+        wire, bucket_boundaries, cfg.reduce_axes, cfg.wire_dtype,
+        hierarchical=cfg.hierarchical)
+    reduced = reduced / num_data_shards  # mean over data shards
+
+    # Post-reduce view: important chunks hold the mean, others local g
+    # (device-varying — it feeds the per-shard hg and the norm census).
+    g_out = scatter_chunks(g, idx, reduced, chunk)
+
+    # Update-ready view: important chunks hold the mean, others ZERO —
+    # device-invariant by construction, so the optimizer's outputs (params,
+    # momentum) are provably replicated across data shards. (A fresh zeros
+    # constant, NOT zeros_like(g): that would inherit g's varying tag.)
+    g_update = scatter_chunks(jnp.zeros(g.shape, g.dtype), idx, reduced,
+                              chunk)
+
+    # Algorithm 1 lines 8–11: historical-gradient bookkeeping (per-shard).
+    hg_new = jnp.where(elem_mask, 0.0, momentum * g_out).astype(state.hg.dtype)
+
+    # Fig 18: next-iteration importance. Post-reduce pool: important chunks
+    # hold the mean (≡ paper's sum/N), others hold local g — L1 per chunk,
+    # then a (cheap) psum so every device agrees.
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        l1 = kops.chunk_l1norm(g_out, chunk)
+    else:
+        l1 = chunk_l1_norms(g_out, chunk)
+    norms_new = reduce_pool(l1, cfg.reduce_axes)
+
+    return CSCReduceResult(
+        grads=g_update,
+        elem_mask=elem_mask,
+        state=CSCState(hg=hg_new, chunk_norms=norms_new),
+    )
+
+
+def wire_bucket_boundaries(num_selected: int, chunk_elems: int,
+                           bucket_elems: int) -> Tuple[Tuple[int, int], ...]:
+    """θ buckets over the packed (k * chunk_elems) wire buffer,
+    aligned to chunk boundaries."""
+    total = num_selected * chunk_elems
+    if bucket_elems <= 0 or bucket_elems >= total:
+        return ((0, total),)
+    chunks_per_bucket = max(bucket_elems // chunk_elems, 1)
+    step = chunks_per_bucket * chunk_elems
+    bounds = []
+    start = 0
+    while start < total:
+        end = min(start + step, total)
+        bounds.append((start, end))
+        start = end
+    return tuple(bounds)

@@ -1,0 +1,170 @@
+"""GradientFlow — the paper's communication backend, as a composable JAX module.
+
+Top-level API used by the train step (inside the manual-DP shard_map):
+
+    pool = GradientPool(params, pad_to=cfg.chunk_elems)
+    gf = GradientFlow(cfg, pool, num_data_shards)
+    state = gf.init_state()
+    ...
+    reduced, mask, state = gf.reduce(pool_grads, state, stage=stage)
+
+Modes (GradientFlowConfig.mode):
+  'dense' — per-tensor psum (§2.3 baseline; what MPI/NCCL-per-tensor did)
+  'lazy'  — θ-bucketed fused psum over the contiguous pool (§3.1)
+  'csc'   — lazy + coarse-grained sparse communication (§3.2)
+All modes cast gradients to the wire dtype for transport (§2.5
+mixed-precision communication) and return an f32 mean-reduced pool.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GradientFlowConfig
+from repro.core import csc as csc_mod
+from repro.core import schedule as schedule_mod
+from repro.core.lazy_allreduce import bucketed_reduce
+from repro.core.pool import GradientPool
+
+
+class GFState(NamedTuple):
+    """GradientFlow's cross-iteration state (empty tensors when not CSC)."""
+
+    hg: jax.Array           # f32[pool] historical gradients (CSC)
+    chunk_norms: jax.Array  # f32[chunks] previous-iteration norms (CSC)
+
+
+class GradientFlow:
+    def __init__(self, cfg: GradientFlowConfig, pool: GradientPool,
+                 num_data_shards: int):
+        self.cfg = cfg
+        self.pool = pool
+        self.num_data_shards = int(num_data_shards)
+        if cfg.csc_enabled:
+            assert pool.size % cfg.chunk_elems == 0, (
+                "GradientPool must be constructed with pad_to=chunk_elems")
+            self.num_chunks = pool.size // cfg.chunk_elems
+        else:
+            self.num_chunks = 0
+        self.stages = schedule_mod.build_stages(cfg, max(self.num_chunks, 1))
+        # Static bucket layouts.
+        self._dense_bounds = tuple(
+            (s.offset, s.offset + s.size) for s in pool.specs)
+        self._lazy_bounds = tuple(pool.bucket_boundaries(cfg.bucket_elems))
+
+    # -- state -------------------------------------------------------------
+
+    def init_state(self) -> GFState:
+        if self.cfg.csc_enabled:
+            st = csc_mod.init_state(self.pool.size, self.cfg.chunk_elems)
+            return GFState(hg=st.hg, chunk_norms=st.chunk_norms)
+        # Zero-size placeholders keep the train-state pytree uniform.
+        return GFState(hg=jnp.zeros((0,), jnp.float32),
+                       chunk_norms=jnp.zeros((0,), jnp.float32))
+
+    def abstract_state(self) -> GFState:
+        if self.cfg.csc_enabled:
+            return GFState(
+                hg=jax.ShapeDtypeStruct((self.pool.size,), jnp.float32),
+                chunk_norms=jax.ShapeDtypeStruct((self.num_chunks,),
+                                                 jnp.float32))
+        return GFState(hg=jax.ShapeDtypeStruct((0,), jnp.float32),
+                       chunk_norms=jax.ShapeDtypeStruct((0,), jnp.float32))
+
+    def stage_for_step(self, step: int) -> schedule_mod.SparsityStage:
+        return schedule_mod.stage_at(self.stages, step)
+
+    # -- the reduction -----------------------------------------------------
+
+    def reduce(
+        self,
+        pool_grads: jax.Array,
+        state: GFState,
+        *,
+        stage: Optional[schedule_mod.SparsityStage] = None,
+    ) -> Tuple[jax.Array, jax.Array, GFState]:
+        """Reduce the local gradient pool across the data axes.
+
+        Returns (mean_grads f32[pool], elem_mask bool[pool], new_state).
+        ``elem_mask`` is all-True except for CSC's unselected chunks, whose
+        update the optimizer must skip (Algorithm 1 lines 13–17).
+        """
+        cfg = self.cfg
+        if cfg.mode == "csc":
+            stage = stage or self.stages[-1]
+            k = stage.num_selected
+            if k >= self.num_chunks:
+                # Warm-up dense stage: full pool via the lazy path, but the
+                # CSC state must keep tracking norms for the handoff.
+                return self._dense_or_lazy_with_norms(pool_grads, state)
+            wire_bounds = csc_mod.wire_bucket_boundaries(
+                k, cfg.chunk_elems, cfg.bucket_elems)
+            res = csc_mod.csc_reduce(
+                pool_grads,
+                csc_mod.CSCState(hg=state.hg, chunk_norms=state.chunk_norms),
+                cfg,
+                num_selected=k,
+                bucket_boundaries=wire_bounds,
+                num_data_shards=self.num_data_shards,
+            )
+            return res.grads, res.elem_mask, GFState(
+                hg=res.state.hg, chunk_norms=res.state.chunk_norms)
+
+        bounds = (self._dense_bounds if cfg.mode == "dense"
+                  else self._lazy_bounds)
+        summed = bucketed_reduce(pool_grads, bounds, cfg.reduce_axes,
+                                 cfg.wire_dtype,
+                                 hierarchical=cfg.hierarchical)
+        mean = summed / self.num_data_shards
+        mask = jnp.ones(mean.shape, dtype=jnp.bool_)
+        return mean, mask, state
+
+    def _dense_or_lazy_with_norms(
+        self, pool_grads: jax.Array, state: GFState,
+    ) -> Tuple[jax.Array, jax.Array, GFState]:
+        """Dense warm-up iteration of CSC: reduce everything, refresh norms,
+        absorb any pending hg (none in steady warm-up)."""
+        cfg = self.cfg
+        g = pool_grads.astype(jnp.float32) + state.hg
+        summed = bucketed_reduce(g, self._lazy_bounds, cfg.reduce_axes,
+                                 cfg.wire_dtype,
+                                 hierarchical=cfg.hierarchical)
+        mean = summed / self.num_data_shards
+        l1 = csc_mod.chunk_l1_norms(mean, cfg.chunk_elems)
+        from repro.parallel.collectives import reduce_pool
+        from repro.parallel.sharding import match_vma
+        norms = reduce_pool(l1, cfg.reduce_axes)
+        mask = jnp.ones(mean.shape, dtype=jnp.bool_)
+        # hg is per-data-shard state: keep its device-varying tag even for
+        # the (invariant) zeros written during dense warm-up.
+        hg_new = match_vma(jnp.zeros_like(state.hg), pool_grads)
+        return mean, mask, GFState(hg=hg_new, chunk_norms=norms)
+
+    # -- analytics ---------------------------------------------------------
+
+    def wire_bytes_per_step(self, stage: Optional[schedule_mod.SparsityStage]
+                            = None) -> int:
+        """Bytes entering the allreduce on each device (model, not measured).
+        Used by the paper-table benchmarks."""
+        elt = jnp.dtype(self.cfg.wire_dtype).itemsize
+        if self.cfg.mode == "csc":
+            stage = stage or self.stages[-1]
+            if stage.num_selected < self.num_chunks:
+                payload = stage.num_selected * self.cfg.chunk_elems
+                payload += self.num_chunks  # the norm allreduce (f32≈wire)
+                return payload * elt
+        return self.pool.size * elt
+
+    def num_collectives(self, stage=None) -> int:
+        cfg = self.cfg
+        if cfg.mode == "dense":
+            return len(self._dense_bounds)
+        if cfg.mode == "lazy":
+            return len(self._lazy_bounds)
+        stage = stage or self.stages[-1]
+        if stage.num_selected >= self.num_chunks:
+            return len(self._lazy_bounds) + 1
+        return len(csc_mod.wire_bucket_boundaries(
+            stage.num_selected, cfg.chunk_elems, cfg.bucket_elems)) + 1

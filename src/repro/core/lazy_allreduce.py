@@ -1,0 +1,67 @@
+"""Lazy allreduce (paper §3.1).
+
+Instead of one allreduce per gradient tensor (the §2.3 baseline), the
+contiguous gradient pool is reduced in θ-element buckets that close at
+tensor boundaries — one fused collective per bucket. Each bucket's psum
+depends only on the gradients inside it, so XLA's latency-hiding scheduler
+can overlap bucket i's collective with the backward compute that produces
+bucket j > i (the pool is in reverse-generation order: bucket 0 holds the
+top layers' gradients, available earliest).
+
+``bucket_elems == 0`` reproduces the paper's *disable-overlap* setting:
+a single fused allreduce over the whole pool after backward.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.collectives import reduce_pool
+
+
+def bucketed_reduce(
+    pool: jax.Array,
+    boundaries: Sequence[Tuple[int, int]],
+    axes: Sequence[str],
+    wire_dtype,
+    *,
+    hierarchical: bool = False,
+    accum_dtype=jnp.float32,
+) -> jax.Array:
+    """Reduce the 1-D pool across data axes in fused buckets.
+
+    The wire dtype (paper: FP16; here default bf16) is applied per bucket —
+    gradients are cast down for transport and back up to ``accum_dtype``
+    after the reduce, mirroring mixed-precision communication (§2.5).
+    Returns the *summed* pool in ``accum_dtype`` (caller normalizes).
+    """
+    wire_dtype = jnp.dtype(wire_dtype)
+    parts: List[jax.Array] = []
+    for start, end in boundaries:
+        seg = jax.lax.slice_in_dim(pool, start, end)
+        seg = seg.astype(wire_dtype)
+        seg = reduce_pool(seg, axes, hierarchical=hierarchical)
+        parts.append(seg.astype(accum_dtype))
+    if len(parts) == 1:
+        return parts[0]
+    return jnp.concatenate(parts)
+
+
+def per_tensor_reduce(
+    pool: jax.Array,
+    tensor_boundaries: Sequence[Tuple[int, int]],
+    axes: Sequence[str],
+    wire_dtype,
+    *,
+    accum_dtype=jnp.float32,
+) -> jax.Array:
+    """§2.3 baseline: one allreduce per gradient tensor (no fusion).
+
+    Kept as the paper-faithful *dense* baseline so benchmarks can count the
+    collective-op blowup (26 ops for AlexNet, 153 for ResNet-50) that lazy
+    allreduce removes.
+    """
+    return bucketed_reduce(pool, tensor_boundaries, axes, wire_dtype,
+                           accum_dtype=accum_dtype)

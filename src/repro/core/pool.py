@@ -1,0 +1,172 @@
+"""Gradient memory pool (paper §3.1, Figure 15).
+
+The paper places all gradient tensors in one contiguous memory pool ordered
+by *generation order* — the backward pass produces layer-n's gradients first,
+so tensor-m (top layer) sits at offset 0 and tensor-1 (bottom layer) at the
+end. Fused (lazy) allreduce then operates on contiguous pool prefixes with no
+gather/copy cost, and chunk-granular CSC indexes the same buffer.
+
+In JAX the analogue is a deterministic ravel of the gradient pytree into a
+1-D vector using **reversed flatten order** (params flatten bottom-up:
+embedding → layers → head; backward generates head-first), plus metadata
+(offsets / sizes / names) so that:
+
+  * lazy allreduce can split the pool into θ-element buckets whose psum
+    depends only on the grads inside the bucket (XLA can then overlap each
+    bucket's collective with the remaining backward compute);
+  * CSC can view the pool as (n_chunks, chunk_elems);
+  * LARS can compute per-tensor norms via segment offsets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Metadata for one gradient tensor inside the pool."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: Any
+    size: int
+    offset: int  # start offset in the pool, in elements
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class GradientPool:
+    """Bidirectional map between a gradient pytree and the 1-D pool.
+
+    Built once from the *parameter* pytree structure (shapes only — accepts
+    ShapeDtypeStructs), reused every step. Padding to a multiple of
+    ``pad_to`` elements (CSC chunk size) is appended at the end so the pool
+    reshapes exactly to (n_chunks, chunk_elems).
+    """
+
+    def __init__(self, params: Any, pad_to: int = 1):
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+        self.treedef = jax.tree_util.tree_structure(params)
+        # Reverse generation order: backward produces the *last* flatten-order
+        # leaves first (head / top layers), so the pool starts with them.
+        ordered = list(reversed(leaves_with_path))
+        specs: List[LeafSpec] = []
+        offset = 0
+        for path, leaf in ordered:
+            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            specs.append(
+                LeafSpec(
+                    name=_leaf_name(path),
+                    shape=tuple(leaf.shape),
+                    dtype=jnp.dtype(leaf.dtype),
+                    size=size,
+                    offset=offset,
+                ))
+            offset += size
+        self.specs: Tuple[LeafSpec, ...] = tuple(specs)
+        self.unpadded_size = offset
+        self.pad_to = max(int(pad_to), 1)
+        rem = offset % self.pad_to
+        self.padding = (self.pad_to - rem) % self.pad_to
+        self.size = offset + self.padding
+
+    # -- ravel / unravel --------------------------------------------------
+
+    def ravel(self, grads: Any, dtype: Any = None) -> jax.Array:
+        """Pytree → 1-D pool (reverse-generation order, padded)."""
+        leaves = jax.tree_util.tree_leaves(grads)
+        ordered = list(reversed(leaves))
+        assert len(ordered) == len(self.specs), (
+            f"pool built for {len(self.specs)} leaves, got {len(ordered)}")
+        flat = []
+        for leaf, spec in zip(ordered, self.specs):
+            assert tuple(leaf.shape) == spec.shape, (
+                f"{spec.name}: expected {spec.shape}, got {leaf.shape}")
+            x = leaf.reshape((-1,))
+            if dtype is not None:
+                x = x.astype(dtype)
+            flat.append(x)
+        if self.padding:
+            pad_dtype = dtype if dtype is not None else flat[-1].dtype
+            flat.append(jnp.zeros((self.padding,), dtype=pad_dtype))
+        return jnp.concatenate(flat)
+
+    def unravel(self, pool: jax.Array, dtype: Any = None) -> Any:
+        """1-D pool → pytree (inverse of ravel; drops padding)."""
+        leaves = []
+        for spec in self.specs:
+            x = jax.lax.dynamic_slice_in_dim(pool, spec.offset, spec.size)
+            if dtype is not None:
+                x = x.astype(dtype)
+            elif x.dtype != spec.dtype:
+                x = x.astype(spec.dtype)
+            leaves.append(x.reshape(spec.shape))
+        # specs are reverse-flatten-order; restore flatten order.
+        leaves = list(reversed(leaves))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- bucketing for lazy allreduce -------------------------------------
+
+    def bucket_boundaries(self, bucket_elems: int) -> List[Tuple[int, int]]:
+        """θ-bucketing (paper's lazy-allreduce threshold).
+
+        Buckets close at the first *tensor boundary* at or after every θ
+        elements, mirroring the paper: allreduce fires once the waited
+        tensors exceed θ. Returns [(start, end), ...] covering [0, size).
+        ``bucket_elems == 0`` means one bucket for the entire pool
+        (the paper's 'disable-overlap' single fused allreduce).
+        """
+        if bucket_elems <= 0 or bucket_elems >= self.size:
+            return [(0, self.size)]
+        bounds: List[Tuple[int, int]] = []
+        start = 0
+        acc = 0
+        for spec in self.specs:
+            acc += spec.size
+            if acc - start >= bucket_elems:
+                bounds.append((start, acc))
+                start = acc
+        if start < self.size:
+            bounds.append((start, self.size))
+        return bounds
+
+    # -- per-tensor segments (LARS etc.) -----------------------------------
+
+    def segment_ids(self) -> np.ndarray:
+        """int32[size] mapping each pool element to its tensor index
+        (padding maps to the last tensor id + 1)."""
+        ids = np.zeros((self.size,), dtype=np.int32)
+        for i, spec in enumerate(self.specs):
+            ids[spec.offset:spec.offset + spec.size] = i
+        if self.padding:
+            ids[self.unpadded_size:] = len(self.specs)
+        return ids
+
+    @property
+    def num_tensors(self) -> int:
+        return len(self.specs)
+
+    def num_chunks(self, chunk_elems: int) -> int:
+        assert self.size % chunk_elems == 0 or self.pad_to % chunk_elems == 0, (
+            "pool must be padded to a multiple of chunk_elems")
+        return -(-self.size // chunk_elems)
+
+    def abstract_pool(self, dtype: Any = jnp.float32) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((self.size,), jnp.dtype(dtype))

@@ -1,0 +1,57 @@
+"""Warm-up dense training schedule for CSC (paper §3.2).
+
+During the first ``warmup_steps`` iterations the sparsity ratio ramps
+linearly from 0 to the final value. Under jit the number of transmitted
+chunks must be static per executable, so the ramp is quantized into
+``warmup_stages`` discrete stages; JAX compiles (and caches) one executable
+per stage. After warm-up a single steady-state executable runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.configs.base import GradientFlowConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityStage:
+    """One compiled stage of the warm-up ramp."""
+
+    index: int
+    first_step: int
+    sparsity: float
+    num_selected: int  # k — static number of transmitted chunks
+
+
+def build_stages(cfg: GradientFlowConfig, num_chunks: int) -> List[SparsityStage]:
+    """Quantized linear ramp 0 → cfg.sparsity over cfg.warmup_steps."""
+    if not cfg.csc_enabled:
+        return [SparsityStage(0, 0, 0.0, num_chunks)]
+    stages: List[SparsityStage] = []
+    n_warm = max(int(cfg.warmup_stages), 1) if cfg.warmup_steps > 0 else 0
+    for i in range(n_warm):
+        frac = i / n_warm
+        sparsity = cfg.sparsity * frac
+        k = num_selected_chunks(sparsity, num_chunks)
+        first = int(round(cfg.warmup_steps * frac))
+        stages.append(SparsityStage(i, first, sparsity, k))
+    k_final = num_selected_chunks(cfg.sparsity, num_chunks)
+    stages.append(
+        SparsityStage(n_warm, cfg.warmup_steps, cfg.sparsity, k_final))
+    return stages
+
+
+def num_selected_chunks(sparsity: float, num_chunks: int) -> int:
+    """k = chunks transmitted at a given sparsity ratio (at least 1)."""
+    k = int(round((1.0 - sparsity) * num_chunks))
+    return min(max(k, 1), num_chunks)
+
+
+def stage_at(stages: List[SparsityStage], step: int) -> SparsityStage:
+    """The stage active at ``step`` (host-side; selects the executable)."""
+    active = stages[0]
+    for s in stages:
+        if step >= s.first_step:
+            active = s
+    return active

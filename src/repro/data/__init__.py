@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataPipeline, Prefetcher
+from repro.data.synthetic import SyntheticLM

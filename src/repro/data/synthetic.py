@@ -1,0 +1,64 @@
+"""Deterministic synthetic token pipeline.
+
+Produces a learnable (non-iid-noise) token stream so end-to-end convergence
+tests are meaningful: tokens follow a order-2 Markov chain derived from a
+fixed key, so cross-entropy has substantial headroom below log(V).
+
+Determinism + skip-ahead: batch t is a pure function of (seed, step), so a
+restarted/resharded trainer resumes bit-identically at any step without
+replaying the stream — the property fault-tolerant restart relies on.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seed: int = 0,
+                 num_codebooks: int = 0, branching: int = 4):
+        self.vocab = vocab_size
+        self.seed = seed
+        self.num_codebooks = num_codebooks
+        # Fixed random transition table: each (prev) state has `branching`
+        # likely successors.
+        rng = np.random.RandomState(seed)
+        self.succ = jnp.asarray(
+            rng.randint(0, vocab_size, size=(vocab_size, branching)),
+            jnp.int32)
+        self.branching = branching
+
+    def _sequence(self, key: jax.Array, seq_len: int) -> jax.Array:
+        k0, k1 = jax.random.split(key)
+        start = jax.random.randint(k0, (), 0, self.vocab, jnp.int32)
+        choices = jax.random.randint(k1, (seq_len,), 0, self.branching,
+                                     jnp.int32)
+
+        def step(tok, choice):
+            nxt = self.succ[tok, choice]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, start, choices)
+        return toks
+
+    def batch(self, step: int, batch_size: int, seq_len: int,
+              shard: int = 0, num_shards: int = 1) -> Dict[str, jax.Array]:
+        """The shard-local batch for global step ``step``.
+
+        Each (step, shard, row) triple folds into an independent key, so
+        shards never overlap and any shard count yields the same global
+        sample set — the elasticity invariant (tested).
+        """
+        base = jax.random.PRNGKey(self.seed)
+        base = jax.random.fold_in(base, step)
+        row_ids = shard * batch_size + jnp.arange(batch_size)
+        keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(row_ids)
+        toks = jax.vmap(lambda k: self._sequence(k, seq_len + 1))(keys)
+        tokens, labels = toks[:, :-1], toks[:, 1:]
+        if self.num_codebooks > 1:
+            tokens = jnp.tile(tokens[..., None], (1, 1, self.num_codebooks))
+            labels = jnp.tile(labels[..., None], (1, 1, self.num_codebooks))
+        return {"tokens": tokens, "labels": labels}

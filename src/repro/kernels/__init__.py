@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the pool-space hot spots the paper's technique
+stresses (CSC census/pack + fused masked update). ops.py = jit wrappers,
+ref.py = pure-jnp oracles."""
+from repro.kernels import ops, ref

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: per-chunk L1 norms over the gradient pool.
+
+CSC's selection census (Fig 18) reads the whole pool once per step. As
+separate XLA ops (abs → reshape → reduce) this costs extra HBM round trips;
+the kernel does one streaming pass: each grid step loads a (rows, chunk)
+tile of the pool into VMEM, reduces |x| along the chunk axis, and writes
+``rows`` norms.
+
+Tiling: the pool is viewed as (C, chunk_elems); block = (ROWS, chunk_elems)
+where ROWS is chosen so the tile is ~512KiB — comfortably inside VMEM
+(~16MiB/core) with double-buffering headroom, and chunk_elems (32768 = 256
+lanes x 128 sublanes) is a multiple of the 8x128 VREG tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _struct(shape, dtype, like):
+    """ShapeDtypeStruct whose vma matches ``like`` (required when the kernel
+    runs inside a manual shard_map region with check_vma)."""
+    try:
+        vma = jax.typeof(like).vma
+    except Exception:
+        vma = None
+    if vma is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _kernel(pool_ref, out_ref):
+    x = pool_ref[...].astype(jnp.float32)      # (rows, chunk)
+    out_ref[...] = jnp.sum(jnp.abs(x), axis=1)
+
+
+def _pick_rows(num_chunks: int, chunk_elems: int, dtype) -> int:
+    bytes_per_row = chunk_elems * jnp.dtype(dtype).itemsize
+    target = 512 * 1024
+    rows = max(1, target // bytes_per_row)
+    while num_chunks % rows:
+        rows -= 1
+    return rows
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_elems", "interpret"))
+def chunk_l1norm(pool: jax.Array, chunk_elems: int,
+                 interpret: bool = True) -> jax.Array:
+    """pool: (C*chunk_elems,) any float dtype -> f32[C]."""
+    n = pool.shape[0]
+    assert n % chunk_elems == 0, (n, chunk_elems)
+    c = n // chunk_elems
+    rows = _pick_rows(c, chunk_elems, pool.dtype)
+    x = pool.reshape(c, chunk_elems)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=_struct((c,), jnp.float32, pool),
+        grid=(c // rows,),
+        in_specs=[pl.BlockSpec((rows, chunk_elems), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows,), lambda i: (i,)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: gather selected chunks into the dense wire buffer.
+
+CSC's pack step (Fig 17) is a row gather: wire[j] = pool_chunks[idx[j]].
+The kernel uses a *scalar-prefetched* index vector (PrefetchScalarGridSpec):
+the chunk ids live in SMEM before the grid starts, and each grid step's
+BlockSpec index_map dereferences idx[j] to point the DMA engine directly at
+the source chunk in HBM — a pure data-movement kernel with zero compute,
+which is exactly what the pack step should be (it sits on the critical path
+between backward and the allreduce).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _struct(shape, dtype, like):
+    """ShapeDtypeStruct whose vma matches ``like`` (required when the kernel
+    runs inside a manual shard_map region with check_vma)."""
+    try:
+        vma = jax.typeof(like).vma
+    except Exception:
+        vma = None
+    if vma is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _kernel(idx_ref, src_ref, out_ref):
+    del idx_ref  # consumed by the index_map
+    out_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_elems", "interpret"))
+def csc_compact(pool: jax.Array, idx: jax.Array, chunk_elems: int,
+                interpret: bool = True) -> jax.Array:
+    """pool: (C*chunk,), idx: (k,) i32 -> wire buffer (k*chunk,)."""
+    n = pool.shape[0]
+    assert n % chunk_elems == 0
+    c = n // chunk_elems
+    k = idx.shape[0]
+    src = pool.reshape(c, chunk_elems)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, chunk_elems),
+                               lambda j, idx_ref: (idx_ref[j], 0))],
+        out_specs=pl.BlockSpec((1, chunk_elems), lambda j, idx_ref: (j, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=_struct((k, chunk_elems), pool.dtype, pool),
+        interpret=interpret,
+    )(idx, src)
+    return out.reshape(k * chunk_elems)

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU these run the compiled kernels (interpret=False). In this CPU
+container they run in interpret mode, which executes the kernel body in
+Python/XLA-CPU — bit-identical semantics, validated against ref.py.
+
+One CPU-only caveat: interpret mode lowers the kernel grid to a
+``while_loop`` whose internal carry cannot carry shard_map's device-varying
+(vma) tags, so *inside a manual shard_map region* the interpret path
+dispatches to the pure-jnp ref instead (same math — the kernels' semantics
+are exactly ref.py, enforced by tests/test_kernels.py). On TPU the real
+kernels run everywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chunk_l1norm as _cl
+from repro.kernels import csc_compact as _cc
+from repro.kernels import fused_update as _fu
+from repro.kernels import ref
+
+# TPU targets run compiled kernels; anything else interprets.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _needs_ref_fallback(*arrays) -> bool:
+    if not _INTERPRET:
+        return False
+    for a in arrays:
+        try:
+            if jax.typeof(a).vma:
+                return True
+        except Exception:
+            continue
+    return False
+
+
+def chunk_l1norm(pool: jax.Array, chunk_elems: int) -> jax.Array:
+    if _needs_ref_fallback(pool):
+        return ref.chunk_l1norm(pool, chunk_elems)
+    return _cl.chunk_l1norm(pool, chunk_elems, interpret=_INTERPRET)
+
+
+def csc_compact(pool: jax.Array, idx: jax.Array,
+                chunk_elems: int) -> jax.Array:
+    if _needs_ref_fallback(pool, idx):
+        return ref.csc_compact(pool, idx, chunk_elems)
+    return _cc.csc_compact(pool, idx, chunk_elems, interpret=_INTERPRET)
+
+
+def fused_update(master, grads, momentum_buf, mask, *, lr, momentum,
+                 weight_decay, scale: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    if _needs_ref_fallback(master, grads, momentum_buf, mask):
+        return ref.fused_update(master, grads, momentum_buf, mask, lr=lr,
+                                momentum=momentum,
+                                weight_decay=weight_decay, scale=scale)
+    return _fu.fused_update(master, grads, momentum_buf, mask, lr=lr,
+                            momentum=momentum, weight_decay=weight_decay,
+                            scale=scale, interpret=_INTERPRET)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every kernel is validated against
+these across shape/dtype sweeps (tests/test_kernels.py), and they are the
+CPU fallback when ``use_kernels`` is off.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_l1norm(pool: jax.Array, chunk_elems: int) -> jax.Array:
+    """Per-chunk L1 norms (f32 accumulate). pool: (C*chunk,) -> (C,)."""
+    chunks = pool.reshape((-1, chunk_elems)).astype(jnp.float32)
+    return jnp.sum(jnp.abs(chunks), axis=1)
+
+
+def csc_compact(pool: jax.Array, idx: jax.Array,
+                chunk_elems: int) -> jax.Array:
+    """Gather selected chunks into the dense wire buffer.
+    pool: (C*chunk,), idx: (k,) int32 -> (k*chunk,)."""
+    chunks = pool.reshape((-1, chunk_elems))
+    return jnp.take(chunks, idx, axis=0).reshape((-1,))
+
+
+def fused_update(
+    master: jax.Array,        # f32[n]
+    grads: jax.Array,         # f32[n] (zero where ~mask)
+    momentum_buf: jax.Array,  # f32[n]
+    mask: jax.Array,          # bool[n]
+    *,
+    lr,
+    momentum: float,
+    weight_decay: float,
+    scale: Optional[jax.Array] = None,  # f32[n] per-element LR scale (LARS)
+) -> Tuple[jax.Array, jax.Array]:
+    """Momentum-SGD step with CSC masking (Algorithm 1 update step),
+    one fused elementwise pass. Returns (new_master, new_momentum)."""
+    g = grads + weight_decay * master
+    if scale is not None:
+        g = g * scale
+    u = momentum * momentum_buf + lr * g
+    new_mom = jnp.where(mask, u, momentum_buf)
+    new_master = jnp.where(mask, master - u, master)
+    return new_master, new_mom

@@ -1,0 +1,2 @@
+from repro.launch.mesh import make_host_mesh, make_mesh, make_production_mesh
+from repro.launch.trainer import Trainer, TrainState

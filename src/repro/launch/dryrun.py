@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell, lower + compile the step on
+the production mesh (single-pod 16x16 = 256 chips, and multi-pod 2x16x16 =
+512 chips), print memory_analysis / cost_analysis, parse per-device
+collective bytes out of the compiled HLO, and dump a JSON record that the
+roofline benchmark (benchmarks/roofline.py) consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch all                 # every cell
+  python -m repro.launch.dryrun ... --multi-pod            # 2x16x16 mesh
+  python -m repro.launch.dryrun ... --opt                  # optimized profile
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
+                                ShapeConfig, TrainConfig)
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.trainer import Trainer
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like 'f32[128,256]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic from compiled (partitioned) HLO.
+
+    Counts each collective op's *result* bytes (for all-reduce this equals
+    the payload; for all-gather the gathered output; for reduce-scatter the
+    scattered shard) — a consistent per-device traffic proxy used for the
+    roofline's collective term.
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        for kind in _COLLECTIVES:
+            # e.g.  %all-reduce.5 = f32[1024]{0} all-reduce(
+            m = re.match(r"%?[\w\.\-]+ = (\(?[\w\[\],\s\{\}]*?\)?)\s+"
+                         + kind + r"(-start|-done)?\(", line)
+            if m:
+                if m.group(2) == "-done":
+                    continue  # counted at -start
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _shape_bytes(m.group(1))
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    stats["total_count"] = sum(v["count"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def build_train_cfg(arch_id: str, shape: ShapeConfig, mesh_cfg_name: str,
+                    optimized: bool = False) -> TrainConfig:
+    model_cfg, _ = get_arch(arch_id)
+    gf = GradientFlowConfig(
+        mode="csc", bucket_elems=16 * 1024 * 1024, chunk_elems=32768,
+        sparsity=0.85, momentum=0.9, warmup_steps=200, warmup_stages=4,
+        hierarchical=optimized,
+    )
+    opt = OptimizerConfig(name="lars", learning_rate=0.1, momentum=0.9)
+    return TrainConfig(
+        model=model_cfg, gradientflow=gf, optimizer=opt,
+        seq_len=shape.seq_len, global_batch=shape.global_batch,
+        remat="layer", scan_layers=True,
+        attn_chunk=1024, causal_skip=optimized,
+    )
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             optimized: bool = False,
+             out_dir: Optional[str] = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    shape = SHAPES[shape_name]
+    model_cfg, rules = get_arch(arch_id)
+    cfg = build_train_cfg(arch_id, shape, mesh_name, optimized)
+    trainer = Trainer(cfg, mesh, rules)
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            step = trainer.build_train_step(donate=False)
+            state = trainer.abstract_state()
+            batch = trainer.abstract_train_batch(shape)
+            lowered = step.lower(state, batch)
+        else:
+            mode = "prefill" if shape.kind == "prefill" else "decode"
+            long = shape.global_batch < trainer.num_data
+            kv_shard = None
+            if optimized and mode == "decode" and long:
+                kv_shard = trainer.data_axes  # split-KV decode (perf pass)
+            step, srules = trainer.build_serve_step(
+                shape, mode=mode, kv_seq_shard=kv_shard,
+                split_combine=optimized and mode == "decode",
+                flash_decode=optimized)
+            params, batch, cache = trainer.abstract_serve_args(shape, srules,
+                                                               mode)
+            lowered = step.lower(params, batch, cache)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    record = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "optimized": optimized,
+        "num_devices": int(mesh.devices.size),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        },
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    print(f"[dryrun] {arch_id} x {shape_name} x {mesh_name}"
+          f"{' [opt]' if optimized else ''}")
+    print(f"  memory_analysis: args={record['memory']['argument_bytes']/2**30:.2f}GiB "
+          f"temp={record['memory']['temp_bytes']/2**30:.2f}GiB "
+          f"out={record['memory']['output_bytes']/2**30:.2f}GiB")
+    print(f"  cost_analysis: flops/dev={record['flops_per_device']:.3e} "
+          f"bytes/dev={record['bytes_per_device']:.3e}")
+    print(f"  collectives: {coll['total_count']} ops, "
+          f"{coll['total_bytes']/2**20:.1f}MiB/dev "
+          f"({ {k: v['count'] for k, v in coll.items() if isinstance(v, dict) and v['count']} })")
+    print(f"  lower={t_lower:.1f}s compile={t_compile:.1f}s")
+
+    out_dir = out_dir or RESULTS_DIR
+    sub = os.path.join(out_dir, mesh_name + ("_opt" if optimized else ""))
+    os.makedirs(sub, exist_ok=True)
+    with open(os.path.join(sub, f"{arch_id}__{shape_name}.json"), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all",
+                   help="arch id or 'all'")
+    p.add_argument("--shape", default="all", help="shape name or 'all'")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--opt", action="store_true",
+                   help="optimized (beyond-paper) profile")
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        model_cfg, _ = get_arch(arch)
+        cell_shapes = shapes_for(model_cfg)
+        names = [s.name for s in cell_shapes]
+        if args.shape != "all":
+            if args.shape not in names:
+                print(f"[dryrun] SKIP {arch} x {args.shape} "
+                      f"(inapplicable; see DESIGN.md)")
+                continue
+            names = [args.shape]
+        for shape_name in names:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape_name, multi_pod=mp,
+                             optimized=args.opt, out_dir=args.out)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mp, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("dry-run: ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

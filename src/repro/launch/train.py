@@ -1,0 +1,133 @@
+"""End-to-end training driver.
+
+Wires Trainer + synthetic data pipeline + checkpointing + fault-tolerant
+supervision + CSC warm-up stage switching into a runnable loop. Scales from
+a single CPU device (reduced configs; examples/) to the production mesh
+(real deployment) with no code changes — mesh shape and config are flags.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \\
+      --reduced --steps 200 --mesh 1x1 --gf-mode csc
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch, get_smoke
+from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
+                                TrainConfig)
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.trainer import Trainer
+from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
+
+
+def build(args):
+    cfg_fn = get_smoke if args.reduced else get_arch
+    model_cfg, rules = cfg_fn(args.arch)
+    shape = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("data", "model")[:len(shape)] if len(shape) <= 2 else \
+        ("pod", "data", "model")
+    mesh = make_mesh(shape, axes)
+
+    gf = GradientFlowConfig(
+        mode=args.gf_mode, bucket_elems=args.bucket_elems,
+        chunk_elems=args.chunk_elems, sparsity=args.sparsity,
+        momentum=args.momentum, warmup_steps=args.csc_warmup,
+        warmup_stages=4, use_kernels=args.use_kernels)
+    opt = OptimizerConfig(
+        name=args.optimizer, learning_rate=args.lr, momentum=args.momentum,
+        warmup_steps=max(args.steps // 20, 1), total_steps=args.steps,
+        schedule="warmup_cosine")
+    cfg = TrainConfig(model=model_cfg, gradientflow=gf, optimizer=opt,
+                      seq_len=args.seq_len, global_batch=args.batch,
+                      attn_chunk=args.attn_chunk, seed=args.seed)
+    return Trainer(cfg, mesh, rules), cfg, mesh
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true",
+                   help="use the smoke-scale config")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--mesh", default="1x1")
+    p.add_argument("--gf-mode", default="csc",
+                   choices=["dense", "lazy", "csc"])
+    p.add_argument("--sparsity", type=float, default=0.85)
+    p.add_argument("--chunk-elems", type=int, default=2048)
+    p.add_argument("--bucket-elems", type=int, default=1 << 22)
+    p.add_argument("--csc-warmup", type=int, default=20)
+    p.add_argument("--optimizer", default="momentum_sgd",
+                   choices=["momentum_sgd", "lars", "adamw"])
+    p.add_argument("--lr", type=float, default=0.2)
+    p.add_argument("--momentum", type=float, default=0.9)
+    p.add_argument("--attn-chunk", type=int, default=0)
+    p.add_argument("--use-kernels", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--ckpt-dir", default=None,
+                   help="default: a fresh temp dir (pass a path to resume)")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    trainer, cfg, mesh = build(args)
+    data = SyntheticLM(cfg.model.vocab_size, seed=args.seed,
+                       num_codebooks=cfg.model.num_codebooks)
+    pipe = DataPipeline(data, cfg.global_batch, cfg.seq_len)
+    ckpt_dir = args.ckpt_dir
+    if ckpt_dir is None:
+        import tempfile
+        ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    ckpt = CheckpointManager(ckpt_dir, keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(
+        checkpoint_every=args.ckpt_every))
+
+    with jax.sharding.set_mesh(mesh):
+        state = trainer.init_state(jax.random.PRNGKey(args.seed))
+        # One compiled executable per CSC warm-up stage.
+        steps_by_stage = {s.index: trainer.build_train_step(stage=s)
+                          for s in trainer.gf.stages}
+
+        t_start = time.time()
+        losses = []
+
+        def step_fn(step, state):
+            stage = trainer.gf.stage_for_step(step)
+            batch = jax.device_put(pipe.next())
+            state, metrics = steps_by_stage[stage.index](state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0:
+                tok_s = (step + 1) * cfg.global_batch * cfg.seq_len / \
+                    (time.time() - t_start)
+                print(f"step {step:5d} stage {stage.index} "
+                      f"sparsity {stage.sparsity:.2f} loss {loss:.4f} "
+                      f"({tok_s:,.0f} tok/s)")
+            return state
+
+        start = ckpt.latest_step() or 0
+        if start:
+            start, state = ckpt.restore(state)
+            print(f"resumed from checkpoint step {start}")
+        pipe.start(start)
+        state = sup.run(state, start, args.steps, step_fn,
+                        on_restore=pipe.skip_to)
+        pipe.stop()
+        print(f"done: final loss {losses[-1]:.4f} "
+              f"(start {losses[0]:.4f}) in {time.time()-t_start:.1f}s")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

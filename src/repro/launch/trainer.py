@@ -1,0 +1,427 @@
+"""Step builders: assemble model + GradientFlow + optimizer into jitted
+train / serve steps over the production mesh.
+
+Distribution architecture (see DESIGN.md §3.1):
+
+  jit
+  └─ shard_map  — MANUAL over data axes ('pod','data'); AUTO over 'model'
+     ├─ params are pcast-to-varying so jax.grad yields *per-data-shard,
+     │  unsummed* gradients — the DP reduction belongs to GradientFlow,
+     │  not to implicit autodiff collectives (the paper's whole point)
+     ├─ fwd/bwd: model code with with_sharding_constraint TP/EP/SP over
+     │  'model' (GSPMD inserts those collectives)
+     └─ nested shard_map — MANUAL over 'model' too (fully manual)
+        └─ reduce+update in *local pool space*: each model shard ravels its
+           own parameter slices into a contiguous pool (zero gather),
+           GradientFlow reduces it across the data axes (lazy allreduce /
+           CSC), and the pool-space optimizer updates the f32 master —
+           optimizer + GradientFlow state is thereby sharded over the
+           model axis (ZeRO-style) for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import GFState, GradientFlow, GradientPool
+from repro.core.schedule import SparsityStage
+from repro.models import build_model
+from repro.models.registry import input_specs as model_input_specs
+from repro.optim import abstract_state as opt_abstract_state
+from repro.optim import init_state as opt_init_state
+from repro.optim import update_pool as opt_update_pool
+from repro.optim.lars import LARSScaler
+from repro.optim.schedules import lr_at
+from repro.parallel import sharding as sh
+
+
+class TrainState(NamedTuple):
+    params: Any   # f32 master tree; sharded over 'model' per rules
+    opt: Any      # pool-space optimizer state; P('model')
+    gf: GFState   # GradientFlow state; P('model')
+    step: jax.Array
+
+
+def _pvary(x, axes):
+    for a in axes:
+        x = jax.lax.pcast(x, a, to="varying")
+    return x
+
+
+class Trainer:
+    def __init__(self, cfg: TrainConfig, mesh: Mesh,
+                 rules: Dict[str, Optional[str]]):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self.model = build_model(cfg.model)
+        self.specs = self.model.param_specs()
+
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.model_size = sizes.get("model", 1)
+        self.data_axes = tuple(a for a in mesh.axis_names
+                               if a in ("pod", "data"))
+        self.num_data = int(np.prod([sizes[a] for a in self.data_axes])) \
+            if self.data_axes else 1
+
+        # Local (per-model-shard) pool.
+        self.local_specs = sh.localize_specs(self.specs, self.rules,
+                                             self.model_size)
+        gf_cfg = dataclasses.replace(cfg.gradientflow,
+                                     reduce_axes=self.data_axes)
+        pad = gf_cfg.chunk_elems if gf_cfg.csc_enabled else 1
+        self.pool = GradientPool(sh.abstract_params(self.local_specs),
+                                 pad_to=pad)
+        self.gf = GradientFlow(gf_cfg, self.pool, self.num_data)
+        self.gf_cfg = gf_cfg
+        self.opt_name = cfg.optimizer.name
+        self.lars = LARSScaler(self.pool) if self.opt_name == "lars" else None
+
+        self.global_pool = self.pool.size * self.model_size
+        self.num_chunks_global = self.gf.num_chunks * self.model_size
+
+        self.param_pspecs = sh.param_pspecs(self.specs, self.rules)
+        self.param_shardings = sh.param_shardings(self.specs, mesh,
+                                                  self.rules)
+
+    # -- state construction ---------------------------------------------------
+
+    def _pool_sharding(self) -> NamedSharding:
+        spec = P("model") if self.model_size > 1 else P(None)
+        return NamedSharding(self.mesh, spec)
+
+    def _hg_sharding(self) -> NamedSharding:
+        # hg is per-data-shard state (the paper's per-GPU historical
+        # gradients): leading dim indexes the data shard.
+        row = self.data_axes if self.data_axes else None
+        col = "model" if self.model_size > 1 else None
+        return NamedSharding(self.mesh, P(row, col))
+
+    def _gf_abstract(self) -> GFState:
+        if self.gf_cfg.csc_enabled:
+            return GFState(
+                hg=jax.ShapeDtypeStruct((self.num_data, self.global_pool),
+                                        jnp.float32,
+                                        sharding=self._hg_sharding()),
+                chunk_norms=jax.ShapeDtypeStruct(
+                    (self.num_chunks_global,), jnp.float32,
+                    sharding=self._pool_sharding()))
+        rep = NamedSharding(self.mesh, P(None, None))
+        return GFState(
+            hg=jax.ShapeDtypeStruct((1, 0), jnp.float32, sharding=rep),
+            chunk_norms=jax.ShapeDtypeStruct((0,), jnp.float32,
+                                             sharding=NamedSharding(
+                                                 self.mesh, P(None))))
+
+    def abstract_state(self) -> TrainState:
+        params = jax.tree_util.tree_map(
+            lambda s, shd: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                sharding=shd),
+            sh.abstract_params(self.specs, jnp.float32),
+            self.param_shardings)
+        opt = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=self._pool_sharding()),
+            opt_abstract_state(self.opt_name, self.global_pool))
+        return TrainState(
+            params=params, opt=opt, gf=self._gf_abstract(),
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(self.mesh,
+                                                             P())))
+
+    def init_state(self, key: jax.Array) -> TrainState:
+        with jax.sharding.set_mesh(self.mesh):
+            params = sh.init_params(self.specs, key, dtype=jnp.float32)
+            params = jax.tree_util.tree_map(jax.device_put, params,
+                                            self.param_shardings)
+            opt = jax.tree_util.tree_map(
+                lambda a: jax.device_put(
+                    jnp.zeros((self.global_pool,), a.dtype),
+                    self._pool_sharding()),
+                opt_init_state(self.opt_name, 1))
+            if self.gf_cfg.csc_enabled:
+                from repro.core import csc as csc_mod
+                # per-shard init tiled across model shards
+                one = csc_mod.init_state(self.pool.size,
+                                         self.gf_cfg.chunk_elems)
+                gf = GFState(
+                    hg=jax.device_put(
+                        jnp.zeros((self.num_data, self.global_pool),
+                                  jnp.float32),
+                        self._hg_sharding()),
+                    chunk_norms=jax.device_put(
+                        jnp.tile(one.chunk_norms, self.model_size),
+                        self._pool_sharding()))
+            else:
+                gf = GFState(hg=jnp.zeros((1, 0), jnp.float32),
+                             chunk_norms=jnp.zeros((0,), jnp.float32))
+            return TrainState(params=params, opt=opt, gf=gf,
+                              step=jnp.zeros((), jnp.int32))
+
+    # -- batch specs ----------------------------------------------------------
+
+    def batch_pspec(self, batch_tree: Any) -> Any:
+        """Shard the leading (batch) dim over the data axes — unless the
+        per-cell batch is smaller than the data degree (long_500k B=1),
+        in which case it replicates."""
+        def one(x):
+            b = x.shape[0] if hasattr(x, "shape") and x.shape else 0
+            if self.data_axes and b >= self.num_data and \
+                    b % self.num_data == 0:
+                return P(self.data_axes)
+            return P()
+        return jax.tree_util.tree_map(one, batch_tree)
+
+    def per_shard_batch(self, global_batch: int) -> int:
+        if global_batch >= self.num_data:
+            assert global_batch % self.num_data == 0
+            return global_batch // self.num_data
+        return global_batch  # replicated
+
+    # -- the train step ---------------------------------------------------
+
+    def _inner_update(self, grads, params, opt, gfstate, lr, stage):
+        """Runs fully manual (data+model). Everything here is local.
+        gfstate.hg arrives as this data shard's (1, local_pool) row."""
+        gpool = self.pool.ravel(grads, dtype=jnp.float32)
+        gf_local = GFState(hg=gfstate.hg[0], chunk_norms=gfstate.chunk_norms)
+        reduced, mask, gf2 = self.gf.reduce(gpool, gf_local, stage=stage)
+        master = self.pool.ravel(params)
+        scale = None
+        if self.lars is not None:
+            scale = self.lars.scale(master, reduced, self.cfg.optimizer,
+                                    mask)
+        new_master, opt2 = opt_update_pool(
+            self.opt_name, master, reduced, opt, mask, self.cfg.optimizer,
+            lr, scale=scale, use_kernels=self.gf_cfg.use_kernels)
+        new_params = self.pool.unravel(new_master)
+        gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms)
+        return new_params, opt2, gf2
+
+    def build_train_step(self, stage: Optional[SparsityStage] = None,
+                         donate: bool = True):
+        cfg = self.cfg
+        rules = self.rules
+        stage = stage or self.gf.stages[-1]
+        compute_dtype = jnp.dtype(cfg.model.compute_dtype)
+        manual_axes = set(self.data_axes)
+
+        pool_spec = P("model") if self.model_size > 1 else P(None)
+        opt_specs = jax.tree_util.tree_map(lambda _: pool_spec,
+                                           opt_abstract_state(self.opt_name,
+                                                              1))
+        # Inner-shard_map specs (model axis only): hg's leading data dim is
+        # already local (size 1) inside the outer manual region.
+        if self.gf_cfg.csc_enabled:
+            gf_specs = GFState(hg=P(None, "model") if self.model_size > 1
+                               else P(None, None), chunk_norms=pool_spec)
+        else:
+            gf_specs = GFState(hg=P(None, None), chunk_norms=P(None))
+
+        def outer(state: TrainState, batch):
+            params_v = jax.tree_util.tree_map(
+                lambda x: _pvary(x, self.data_axes), state.params)
+
+            def loss_fn(p):
+                cp = jax.tree_util.tree_map(
+                    lambda x: x.astype(compute_dtype), p)
+                return self.model.loss_fn(
+                    cp, batch, rules=rules, remat=cfg.remat,
+                    scan_layers=cfg.scan_layers, attn_chunk=cfg.attn_chunk,
+                    causal_skip=cfg.causal_skip,
+                    compute_dtype=compute_dtype)
+
+            if cfg.microbatches > 1:
+                grads, metrics = self._accumulate(loss_fn, params_v, batch)
+            else:
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params_v)
+            if self.data_axes:
+                metrics = jax.tree_util.tree_map(
+                    lambda m: jax.lax.pmean(m, self.data_axes), metrics)
+
+            lr = lr_at(cfg.optimizer, state.step)
+            update = functools.partial(self._inner_update, stage=stage)
+            if self.model_size > 1:
+                # check_vma=False: model-replicated params flow through the
+                # (model-sharded) pool, so the static checker tags their
+                # updates as possibly model-varying. They are not: their
+                # grads arrive model-invariant (GSPMD all-reduces them in
+                # the auto region) and the update is deterministic, so all
+                # model shards compute identical values (tested).
+                new_params, opt2, gf2 = jax.shard_map(
+                    update,
+                    in_specs=(self.param_pspecs, self.param_pspecs,
+                              opt_specs, gf_specs, P()),
+                    out_specs=(self.param_pspecs, opt_specs, gf_specs),
+                    axis_names={"model"}, check_vma=False,
+                )(grads, state.params, state.opt, state.gf, lr)
+            else:
+                new_params, opt2, gf2 = update(grads, state.params,
+                                               state.opt, state.gf, lr)
+            return TrainState(params=new_params, opt=opt2, gf=gf2,
+                              step=state.step + 1), metrics
+
+        abstract = self.abstract_state()
+        state_in = jax.tree_util.tree_map(lambda _: P(), abstract)
+        if self.gf_cfg.csc_enabled and self.data_axes:
+            # hg: one row per data shard, split over the data axes.
+            state_in = state_in._replace(gf=state_in.gf._replace(
+                hg=P(self.data_axes)))
+        # The jit-level batch is GLOBAL; in_specs split dim 0 over the data
+        # axes so each shard sees its per-shard slice.
+        global_batch_tree = model_input_specs(
+            cfg.model, ShapeConfig(seq_len=cfg.seq_len,
+                                   global_batch=cfg.global_batch,
+                                   kind="train"), cfg.global_batch)
+        batch_in = self.batch_pspec(global_batch_tree)
+        metrics_out = {"loss": P(), "aux_loss": P()}
+
+        sm = jax.shard_map(outer, mesh=self.mesh,
+                           in_specs=(state_in, batch_in),
+                           out_specs=(state_in, metrics_out),
+                           axis_names=manual_axes)
+        return jax.jit(sm, donate_argnums=(0,) if donate else ())
+
+    def _accumulate(self, loss_fn, params_v, batch):
+        """Gradient accumulation over microbatches (scan); grads in f32."""
+        n = self.cfg.microbatches
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+        g0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params_v)
+        m0 = {"loss": jnp.zeros((), jnp.float32),
+              "aux_loss": jnp.zeros((), jnp.float32)}
+
+        def body(carry, mb):
+            gacc, macc = carry
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn_mb(p, mb), has_aux=True)(params_v)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            macc = jax.tree_util.tree_map(lambda a, m: a + m / n, macc,
+                                          metrics)
+            return (gacc, macc), None
+
+        def loss_fn_mb(p, mb):
+            cp = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.dtype(self.cfg.model.compute_dtype)),
+                p)
+            return self.model.loss_fn(
+                cp, mb, rules=self.rules, remat=self.cfg.remat,
+                scan_layers=self.cfg.scan_layers,
+                attn_chunk=self.cfg.attn_chunk,
+                causal_skip=self.cfg.causal_skip,
+                compute_dtype=jnp.dtype(self.cfg.model.compute_dtype))
+
+        (grads, metrics), _ = jax.lax.scan(body, (g0, m0), split)
+        grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+        return grads, metrics
+
+    def abstract_train_batch(self, shape: Optional[ShapeConfig] = None):
+        """Global-batch ShapeDtypeStructs (with shardings) for lowering."""
+        cfg = self.cfg
+        shape = shape or ShapeConfig(seq_len=cfg.seq_len,
+                                     global_batch=cfg.global_batch,
+                                     kind="train")
+        tree = model_input_specs(cfg.model, shape, shape.global_batch)
+        specs = self.batch_pspec(tree)
+        return jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(self.mesh, sp)),
+            tree, specs)
+
+    # -- serving ------------------------------------------------------------
+
+    def serve_rules(self, long_context: bool = False):
+        r = dict(self.rules)
+        r["serve_batch"] = self.data_axes if self.data_axes else None
+        if r.get("kv_heads") is None and self.model_size > 1:
+            # KV heads don't cover the model axis (GQA kv < TP degree):
+            # shard the KV-cache *sequence* over 'model' instead — the
+            # decode softmax reduces over it (GSPMD inserts the combine),
+            # the flash-decoding/split-KV layout.
+            r["kv_seq"] = "model"
+        if long_context:
+            # long_500k: B=1 — batch can't shard; shard the cache sequence
+            # over 'model' unless the KV heads already cover that axis
+            # (one mesh axis may shard only one cache dim).
+            r["serve_batch"] = None
+            if self.model_size > 1 and r.get("kv_heads") is None:
+                r["kv_seq"] = "model"
+        return r
+
+    def build_serve_step(self, shape: ShapeConfig, *, mode: str,
+                         kv_seq_shard: Optional[Any] = None,
+                         split_combine: bool = False,
+                         flash_decode: bool = False):
+        """Pure-pjit serving step (no gradient machinery). Params in bf16
+        (the deployment artifact)."""
+        cfg = self.cfg
+        long = shape.global_batch < self.num_data
+        rules = self.serve_rules(long_context=long)
+        if kv_seq_shard is not None:
+            rules["kv_seq"] = kv_seq_shard
+        if flash_decode and mode == "decode" and \
+                rules.get("kv_seq") == "model":
+            # flash-decoding layout: replicate attention heads so the
+            # sequence-sharded KV cache is consumed shard-locally (GSPMD
+            # otherwise re-shards the repeated KV by heads => all-gather
+            # of the whole cache, the dominant decode collective).
+            rules["heads"] = None
+
+        def fn(params, batch, cache):
+            lg, new_cache = self.model.serve_step(
+                params, batch, cache, mode=mode, rules=rules,
+                compute_dtype=jnp.dtype(cfg.model.compute_dtype),
+                split_combine=split_combine)
+            return lg, new_cache
+
+        # Pin the OUTPUT cache to the input layout: otherwise XLA may pick
+        # a different output sharding and insert a whole-cache regather.
+        cache_out = jax.tree_util.tree_map(
+            lambda ax: NamedSharding(self.mesh, sh.logical_spec(ax, rules)),
+            self.model.cache_logical_axes(),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))
+        return jax.jit(fn, donate_argnums=(2,),
+                       out_shardings=(None, cache_out)), rules
+
+    def abstract_serve_args(self, shape: ShapeConfig, rules,
+                            mode: str) -> Tuple[Any, Any, Any]:
+        cfg = self.cfg
+        b = shape.global_batch  # serving runs in pure pjit: global batch
+        params = jax.tree_util.tree_map(
+            lambda s, shd: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16, sharding=shd),
+            sh.abstract_params(self.specs, jnp.bfloat16),
+            self.param_shardings)
+        max_len = shape.seq_len
+        if cfg.model.family == "vlm":
+            # VLM prefill writes text + vision positions into the cache.
+            max_len += cfg.model.num_vision_tokens
+        cache = self.model.abstract_cache(b, max_len)
+        cache_axes = self.model.cache_logical_axes()
+        cache = jax.tree_util.tree_map(
+            lambda s, ax: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=NamedSharding(self.mesh,
+                                       sh.logical_spec(ax, rules))),
+            cache, cache_axes)
+        serve_shape = ShapeConfig(name=shape.name, seq_len=shape.seq_len,
+                                  global_batch=b, kind=mode if mode !=
+                                  "prefill" else "prefill")
+        batch = model_input_specs(cfg.model, serve_shape, b)
+        bspec = self.batch_pspec(batch)
+        batch = jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(self.mesh, sp)),
+            batch, bspec)
+        return params, batch, cache

@@ -1,0 +1,4 @@
+from repro.models.registry import build_model, input_specs, make_batch
+from repro.models.transformer import TransformerLM
+from repro.models.ssm_lm import MambaLM
+from repro.models.hybrid_lm import HybridLM

@@ -1,0 +1,194 @@
+"""Zamba2-style hybrid LM: Mamba-2 backbone + one *shared* attention block.
+
+The backbone is ``num_layers`` Mamba-2 blocks. Every ``hybrid_attn_every``
+blocks, a single shared transformer block (attention + MLP, one set of
+weights reused at each application point) is applied — weight sharing means
+its gradients sum over all applications, which the GradientPool handles
+naturally (one tensor in the pool).
+
+Layer layout: layers are grouped as (groups = L / every); each group =
+``every`` mamba blocks (scanned) followed by one shared-attn application.
+Decode cache = stacked per-layer Mamba2 states + ``groups`` KV caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention, embedding, mamba2, mlp, norms
+from repro.models.transformer import stack_spec, xent
+from repro.parallel.sharding import constrain
+
+
+class HybridCache(NamedTuple):
+    mamba: Any       # Mamba2State stacked (groups, every, ...)
+    attn: Any        # KVCache stacked (groups, ...)
+
+
+def mamba_block_spec(cfg) -> Dict[str, Any]:
+    return {"norm": norms.spec(cfg), "mixer": mamba2.spec(cfg)}
+
+
+def shared_block_spec(cfg) -> Dict[str, Any]:
+    return {
+        "attn_norm": norms.spec(cfg),
+        "attn": attention.spec(cfg),
+        "mlp_norm": norms.spec(cfg),
+        "mlp": mlp.spec(cfg),
+    }
+
+
+class HybridLM:
+    def __init__(self, cfg):
+        assert cfg.family == "hybrid"
+        self.cfg = cfg
+        every = cfg.hybrid_attn_every
+        assert cfg.num_layers % every == 0, (cfg.num_layers, every)
+        self.groups = cfg.num_layers // every
+        self.every = every
+
+    def param_specs(self):
+        cfg = self.cfg
+        # mamba layers stacked (groups, every, ...) for a two-level scan.
+        inner = stack_spec(mamba_block_spec(cfg), self.every)
+        outer = stack_spec(inner, self.groups)
+        p = {
+            "embed": embedding.spec(cfg),
+            "mamba_layers": outer,
+            "shared_attn": shared_block_spec(cfg),
+            "final_norm": norms.spec(cfg),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = embedding.head_spec(cfg)
+        return p
+
+    def _head_params(self, params):
+        if self.cfg.tie_embeddings:
+            return {"w": params["embed"]["tokens"].T}
+        return params["head"]
+
+    def _shared_attn_apply(self, shared, x, rules, attn_chunk, causal_skip):
+        cfg = self.cfg
+        h = norms.apply(shared["attn_norm"], x, cfg.norm)
+        h = attention.apply_train(shared["attn"], h, cfg, rules=rules,
+                                  attn_chunk=attn_chunk,
+                                  causal_skip=causal_skip)
+        x = x + h
+        h = norms.apply(shared["mlp_norm"], x, cfg.norm)
+        h = mlp.apply(shared["mlp"], h, cfg, rules=rules)
+        return x + h
+
+    def loss_fn(self, params, batch, *, rules=None, remat="layer",
+                scan_layers=True, attn_chunk=0, causal_skip=False,
+                compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], batch["tokens"], cfg,
+                            rules=rules, compute_dtype=compute_dtype)
+
+        def mamba_block(layer_params, h):
+            y = norms.apply(layer_params["norm"], h, cfg.norm)
+            y = mamba2.apply_train(layer_params["mixer"], y, cfg,
+                                   rules=rules)
+            return h + y
+
+        mb = jax.checkpoint(mamba_block) if remat == "layer" else mamba_block
+        shared = params["shared_attn"]
+
+        def group_body(h, group_params):
+            def inner(hh, lp):
+                return mb(lp, hh), None
+            h, _ = jax.lax.scan(inner, h, group_params)
+            h = self._shared_attn_apply(shared, h, rules, attn_chunk,
+                                        causal_skip)
+            return h, None
+
+        gb = jax.checkpoint(group_body, static_argnums=()) \
+            if remat == "layer" else group_body
+        x, _ = jax.lax.scan(lambda c, p: gb(c, p), x,
+                            params["mamba_layers"])
+        x = norms.apply(params["final_norm"], x, cfg.norm)
+        lg = embedding.logits(self._head_params(params), x, cfg, rules=rules)
+        loss = xent(lg, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    # -- serving ------------------------------------------------------------
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        m1 = mamba2.abstract_state(cfg, batch, dtype)
+        mstack = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                (self.groups, self.every) + s.shape, s.dtype), m1)
+        a1 = attention.abstract_cache(cfg, batch, max_len, dtype)
+        astack = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((self.groups,) + s.shape, s.dtype),
+            a1)
+        return HybridCache(mamba=mstack, attn=astack)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        m1 = mamba2.init_state(cfg, batch, dtype)
+        mstack = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a, (self.groups, self.every) + a.shape).copy(), m1)
+        a1 = attention.init_cache(cfg, batch, max_len, dtype)
+        astack = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (self.groups,) + a.shape).copy()
+            if a.shape != () else jnp.zeros((self.groups,), a.dtype), a1)
+        return HybridCache(mamba=mstack, attn=astack)
+
+    def cache_logical_axes(self):
+        ma = mamba2.state_logical_axes()
+        mstack = mamba2.Mamba2State(conv=("layers", None) + ma.conv,
+                                    ssm=("layers", None) + ma.ssm)
+        aa = attention.cache_logical_axes()
+        astack = attention.KVCache(k=("layers",) + aa.k,
+                                   v=("layers",) + aa.v, index=("layers",))
+        return HybridCache(mamba=mstack, attn=astack)
+
+    def serve_step(self, params, batch, cache: HybridCache, *,
+                   mode="decode", rules=None, compute_dtype=jnp.bfloat16,
+                   split_combine=False):
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], batch["tokens"], cfg,
+                            rules=rules, compute_dtype=compute_dtype)
+        shared = params["shared_attn"]
+
+        def group_body(h, inp):
+            group_params, mstates, acache = inp
+            if mode == "decode":
+                def inner(hh, lp_st):
+                    lp, st = lp_st
+                    y = norms.apply(lp["norm"], hh, cfg.norm)
+                    y, st2 = mamba2.apply_decode(lp["mixer"], y, cfg, st,
+                                                 rules=rules)
+                    return hh + y, st2
+                h, mnew = jax.lax.scan(inner, h, (group_params, mstates))
+                hn = norms.apply(shared["attn_norm"], h, cfg.norm)
+                hn, anew = attention.apply_decode(
+                    shared["attn"], hn, cfg, acache, rules=rules,
+                    split_combine=split_combine)
+                h = h + hn
+            else:  # prefill
+                def inner(hh, lp):
+                    y = norms.apply(lp["norm"], hh, cfg.norm)
+                    y = mamba2.apply_train(lp["mixer"], y, cfg, rules=rules)
+                    return hh + y, None
+                h, _ = jax.lax.scan(inner, h, group_params)
+                mnew = mstates
+                hn = norms.apply(shared["attn_norm"], h, cfg.norm)
+                hn, anew = attention.apply_prefill(shared["attn"], hn, cfg,
+                                                   acache, rules=rules,
+                                                   attn_chunk=2048)
+                h = h + hn
+            hm = norms.apply(shared["mlp_norm"], h, cfg.norm)
+            hm = mlp.apply(shared["mlp"], hm, cfg, rules=rules)
+            return h + hm, (mnew, anew)
+
+        x, (mnew, anew) = jax.lax.scan(
+            group_body, x, (params["mamba_layers"], cache.mamba, cache.attn))
+        x = norms.apply(params["final_norm"], x, cfg.norm)
+        lg = embedding.logits(self._head_params(params), x, cfg, rules=rules)
+        return lg, HybridCache(mamba=mnew, attn=anew)

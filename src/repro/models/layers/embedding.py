@@ -1,0 +1,54 @@
+"""Token embeddings and the (vocab-sharded) LM head."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, constrain, normal_init
+
+
+def spec(cfg) -> Dict[str, ParamSpec]:
+    v, d = cfg.vocab_size, cfg.d_model
+    p = {"tokens": ParamSpec((v, d), ("vocab", "embed"), normal_init(0.02))}
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        # musicgen: one embedding table per codebook; contributions summed.
+        p["codebooks"] = ParamSpec((cfg.num_codebooks, v, d),
+                                   (None, "vocab", "embed"),
+                                   normal_init(0.02))
+    return p
+
+
+def head_spec(cfg) -> Dict[str, ParamSpec]:
+    v, d = cfg.vocab_size, cfg.d_model
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        return {"w": ParamSpec((cfg.num_codebooks, d, v),
+                               (None, "embed", "vocab"), normal_init(0.02))}
+    return {"w": ParamSpec((d, v), ("embed", "vocab"), normal_init(0.02))}
+
+
+def embed(params: Dict[str, Any], tokens: jax.Array, cfg, *,
+          rules=None, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """tokens: (B, S) int32 — or (B, S, K) for multi-codebook audio."""
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        # Sum the K codebook embeddings per frame (musicgen delay-pattern
+        # frontend is stubbed; the backbone sees merged frame embeddings).
+        k = cfg.num_codebooks
+        parts = [jnp.take(params["codebooks"][i], tokens[..., i], axis=0)
+                 for i in range(k)]
+        x = sum(parts)
+    else:
+        x = jnp.take(params["tokens"], tokens, axis=0)
+    x = x.astype(compute_dtype)
+    return constrain(x, None, "seq", "embed", rules=rules)
+
+
+def logits(head_params: Dict[str, Any], x: jax.Array, cfg, *,
+           rules=None) -> jax.Array:
+    """x: (B, S, D) → (B, S, V) (or (B, S, K, V) for audio)."""
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        y = jnp.einsum("bsd,kdv->bskv", x, head_params["w"])
+        return constrain(y, None, "seq", None, "vocab", rules=rules)
+    y = x @ head_params["w"]
+    return constrain(y, None, "seq", "vocab", rules=rules)

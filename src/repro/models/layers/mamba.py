@@ -1,0 +1,194 @@
+"""Mamba-1 selective-state-space block (falcon-mamba).
+
+Training path: chunked selective scan — an outer ``lax.scan`` over sequence
+chunks carries the (B, d_inner, d_state) recurrent state; within a chunk an
+associative scan computes the recurrence in O(log chunk) depth. Chunking
+bounds the materialized (B, chunk, d_inner, d_state) tensor (the memory
+hot-spot of selective scan) instead of the full (B, L, ...) blow-up.
+
+Decode path: O(1) per step — the conv window and SSM state are the cache,
+which is what makes the long_500k cell runnable for this family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import (ParamSpec, constrain, fan_in_init,
+                                     match_vma, normal_init, zeros_init)
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, d_inner) — trailing conv window
+    ssm: jax.Array   # (B, d_inner, d_state)
+
+
+def dims(cfg) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return d_inner, dt_rank, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def _a_log_init(key, shape, dtype):
+    # S4D-real init: A = -[1..d_state] per channel.
+    d_inner, d_state = shape
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return jnp.log(a).astype(dtype)
+
+
+def spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, dt_rank, d_state, d_conv = dims(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner), ("embed", "dinner"),
+                             fan_in_init(0)),
+        "conv_w": ParamSpec((d_conv, d_inner), ("conv", "dinner"),
+                            normal_init(0.02)),
+        "conv_b": ParamSpec((d_inner,), ("dinner",), zeros_init),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * d_state),
+                            ("dinner", None), fan_in_init(0)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "dinner"),
+                             normal_init(1.0 / math.sqrt(16))),
+        "dt_bias": ParamSpec((d_inner,), ("dinner",),
+                             lambda k, s, dt: jnp.full(s, -4.6, dt)),
+        "A_log": ParamSpec((d_inner, d_state), ("dinner", "state"),
+                           _a_log_init),
+        "D": ParamSpec((d_inner,), ("dinner",),
+                       lambda k, s, dt: jnp.ones(s, dt)),
+        "out_proj": ParamSpec((d_inner, d), ("dinner", "embed"),
+                              fan_in_init(0)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prefix: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, L, C); w: (K, C).
+    prefix: (B, K-1, C) trailing context from the previous chunk/step."""
+    k = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k is tiny (4); unrolled elementwise adds
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_params(params, xz, cfg):
+    """Shared front half: conv + silu + Δ/B/C projections."""
+    d_inner, dt_rank, d_state, _ = dims(cfg)
+    dbc = xz @ params["x_proj"]  # (..., dt_rank + 2*d_state)
+    dt = dbc[..., :dt_rank] @ params["dt_proj"] + params["dt_bias"]
+    delta = jax.nn.softplus(dt.astype(jnp.float32))  # (B,L,d_inner)
+    b_mat = dbc[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    c_mat = dbc[..., dt_rank + d_state:].astype(jnp.float32)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (d_inner, d_state)
+    return delta, b_mat, c_mat, a
+
+
+def _scan_chunk(x_f32, delta, b_mat, c_mat, a, h0):
+    """Associative scan within one chunk.
+    x_f32/delta: (B,Q,di); b/c: (B,Q,ds); a: (di,ds); h0: (B,di,ds)."""
+    a_bar = jnp.exp(delta[..., None] * a[None, None])           # (B,Q,di,ds)
+    bx = (delta * x_f32)[..., None] * b_mat[:, :, None, :]      # (B,Q,di,ds)
+    # Fold the incoming state into the first step: h_1 = A1 h0 + Bx1.
+    bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+
+    def op(e1, e2):
+        a1, u1 = e1
+        a2, u2 = e2
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(op, (a_bar, bx), axis=1)
+    y = jnp.sum(h * c_mat[:, :, None, :], axis=-1)              # (B,Q,di)
+    return y, h[:, -1]
+
+
+def apply_train(params, x, cfg, *, rules=None, scan_chunk: int = 128
+                ) -> jax.Array:
+    """x: (B, L, D) → (B, L, D)."""
+    b, l, d = x.shape
+    d_inner, dt_rank, d_state, d_conv = dims(cfg)
+    xz = x @ params["in_proj"]
+    xz = constrain(xz, None, "seq", "dinner", rules=rules)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    q = min(scan_chunk, l)
+    assert l % q == 0, (l, q)
+    n = l // q
+
+    xs_c = xs.reshape(b, n, q, d_inner)
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    conv0 = jnp.zeros((b, d_conv - 1, d_inner), xs.dtype)
+    h0, conv0 = match_vma((h0, conv0), xs)
+
+    def chunk_body(carry, xq):
+        h, conv_prefix = carry
+        xq_conv = _causal_conv(xq, params["conv_w"], params["conv_b"],
+                               conv_prefix)
+        xq_act = jax.nn.silu(xq_conv)
+        delta, b_mat, c_mat, a = _ssm_params(params, xq_act, cfg)
+        y, h_new = _scan_chunk(xq_act.astype(jnp.float32), delta, b_mat,
+                               c_mat, a, h)
+        y = y + params["D"].astype(jnp.float32) * xq_act.astype(jnp.float32)
+        new_prefix = xq[:, -(d_conv - 1):, :]
+        return (h_new, new_prefix), y.astype(x.dtype)
+
+    (_, _), ys = jax.lax.scan(chunk_body, (h0, conv0),
+                              xs_c.transpose(1, 0, 2, 3))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, d_inner)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return constrain(out, None, "seq", "embed", rules=rules)
+
+
+def init_state(cfg, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    d_inner, _, d_state, d_conv = dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    )
+
+
+def abstract_state(cfg, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    d_inner, _, d_state, d_conv = dims(cfg)
+    return MambaState(
+        conv=jax.ShapeDtypeStruct((batch, d_conv - 1, d_inner), dtype),
+        ssm=jax.ShapeDtypeStruct((batch, d_inner, d_state), jnp.float32),
+    )
+
+
+def state_logical_axes() -> MambaState:
+    return MambaState(conv=("serve_batch", None, "dinner"),
+                      ssm=("serve_batch", "dinner", "state"))
+
+
+def apply_decode(params, x, cfg, state: MambaState, *, rules=None
+                 ) -> Tuple[jax.Array, MambaState]:
+    """One-token step. x: (B, 1, D)."""
+    b = x.shape[0]
+    d_inner, dt_rank, d_state, d_conv = dims(cfg)
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+
+    window = jnp.concatenate([state.conv, xs.astype(state.conv.dtype)],
+                             axis=1)  # (B, d_conv, di)
+    xc = jnp.sum(window * params["conv_w"][None].astype(window.dtype),
+                 axis=1, keepdims=True) + params["conv_b"][None, None]
+    xa = jax.nn.silu(xc)  # (B,1,di)
+
+    delta, b_mat, c_mat, a = _ssm_params(params, xa, cfg)
+    a_bar = jnp.exp(delta[:, 0, :, None] * a[None])            # (B,di,ds)
+    bx = (delta[:, 0] * xa[:, 0].astype(jnp.float32))[..., None] \
+        * b_mat[:, 0, None, :]
+    h = a_bar * state.ssm + bx
+    y = jnp.sum(h * c_mat[:, 0, None, :], axis=-1, keepdims=False)
+    y = y + params["D"].astype(jnp.float32) * xa[:, 0].astype(jnp.float32)
+    y = (y[:, None, :] * jax.nn.silu(z).astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["out_proj"]
+    out = constrain(out, None, None, "embed", rules=rules)
+    return out, MambaState(conv=window[:, 1:], ssm=h)

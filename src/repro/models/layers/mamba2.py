@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD) block — zamba2's backbone mixer.
+
+Training path uses the chunked SSD matmul formulation (Mamba-2 paper §6):
+within a chunk of Q steps the recurrence collapses to an attention-like
+(Q, Q) masked matmul per head — MXU-friendly — while an outer scan carries
+the (B, H, head_dim, d_state) inter-chunk state. This avoids materializing
+per-step outer products (B, L, H, hd, ds), the naive scan's memory wall.
+
+Decode: O(1) scalar-decay state update per step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import (ParamSpec, constrain, fan_in_init,
+                                     match_vma, normal_init, ones_init,
+                                     zeros_init)
+
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, d_inner + 2*d_state)
+    ssm: jax.Array   # (B, H, head_dim, d_state) f32
+
+
+def dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    hd = cfg.ssm.head_dim
+    n_heads = cfg.ssm.n_heads or d_inner // hd
+    return d_inner, n_heads, hd, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, h, hd, ds, dc = dims(cfg)
+    conv_ch = d_inner + 2 * ds  # x, B, C all pass the causal conv
+    return {
+        # order: [z (d_inner), x (d_inner), B (ds), C (ds), dt (h)]
+        "in_proj": ParamSpec((d, 2 * d_inner + 2 * ds + h),
+                             ("embed", "dinner"), fan_in_init(0)),
+        "conv_w": ParamSpec((dc, conv_ch), ("conv", "dinner"),
+                            normal_init(0.02)),
+        "conv_b": ParamSpec((conv_ch,), ("dinner",), zeros_init),
+        "A_log": ParamSpec((h,), (None,),
+                           lambda k, s, dt: jnp.log(
+                               jnp.linspace(1.0, 16.0, s[0])).astype(dt)),
+        "D": ParamSpec((h,), (None,), ones_init),
+        "dt_bias": ParamSpec((h,), (None,),
+                             lambda k, s, dt: jnp.full(s, -4.6, dt)),
+        "norm_scale": ParamSpec((d_inner,), ("dinner",), ones_init),
+        "out_proj": ParamSpec((d_inner, d), ("dinner", "embed"),
+                              fan_in_init(0)),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, h, hd, ds, _ = dims(cfg)
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    b_mat = proj[..., 2 * d_inner:2 * d_inner + ds]
+    c_mat = proj[..., 2 * d_inner + ds:2 * d_inner + 2 * ds]
+    dt = proj[..., 2 * d_inner + 2 * ds:]
+    return z, x, b_mat, c_mat, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    """Mamba-2's gated RMSNorm before out_proj."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def _ssd_chunk(xh, bq, cq, loga, h0):
+    """One SSD chunk (matmul formulation).
+
+    xh:   (B, Q, H, hd)  Δ-scaled inputs
+    bq:   (B, Q, ds)     input projections (shared across heads, n_groups=1)
+    cq:   (B, Q, ds)     output projections
+    loga: (B, Q, H)      per-step log decay (Δ·(−exp(A_log)); ≤ 0)
+    h0:   (B, H, hd, ds) incoming state
+    Returns y (B, Q, H, hd) and h_out.
+    """
+    bdim, q, h, hd = xh.shape
+    cum = jnp.cumsum(loga, axis=1)                     # (B,Q,H) ℓ_t
+    # -- intra-chunk: y_t += Σ_{s<=t} exp(ℓ_t−ℓ_s)·(C_t·B_s)·xh_s
+    rel = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H) ℓ_t−ℓ_s
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+    # (C_t · B_s): (B, Q_t, Q_s)
+    cb = jnp.einsum("btd,bsd->bts", cq, bq)
+    att = cb[..., None] * decay                        # (B,Qt,Qs,H)
+    y = jnp.einsum("btsh,bshd->bthd", att, xh.astype(jnp.float32))
+    # -- inter-chunk: contribution of the incoming state
+    y = y + jnp.einsum("btd,bhpd,bth->bthp", cq, h0,
+                       jnp.exp(cum))
+    # -- state update: h_out = exp(ℓ_Q) h0 + Σ_s exp(ℓ_Q−ℓ_s) xh_s ⊗ B_s
+    tail = cum[:, -1:, :]                              # (B,1,H)
+    w = jnp.exp(tail - cum)                            # (B,Q,H)
+    h_out = h0 * jnp.exp(tail[:, 0])[:, :, None, None] + jnp.einsum(
+        "bqh,bqhp,bqd->bhpd", w, xh.astype(jnp.float32), bq)
+    return y, h_out
+
+
+def apply_train(params, x, cfg, *, rules=None, scan_chunk: int = 128
+                ) -> jax.Array:
+    b, l, d = x.shape
+    d_inner, h, hd, ds, dc = dims(cfg)
+    proj = x @ params["in_proj"]
+    proj = constrain(proj, None, "seq", "dinner", rules=rules)
+    z, xs, b_raw, c_raw, dt = _split_proj(proj, cfg)
+
+    q = min(scan_chunk, l)
+    assert l % q == 0
+    n = l // q
+
+    conv_in = jnp.concatenate([xs, b_raw, c_raw], axis=-1)
+    conv_c = conv_in.reshape(b, n, q, -1)
+    z_c = z.reshape(b, n, q, d_inner)
+    dt_c = dt.reshape(b, n, q, h)
+
+    h0 = jnp.zeros((b, h, hd, ds), jnp.float32)
+    conv0 = jnp.zeros((b, dc - 1, conv_in.shape[-1]), conv_in.dtype)
+    h0, conv0 = match_vma((h0, conv0), x)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+
+    from repro.models.layers.mamba import _causal_conv
+
+    def chunk_body(carry, inp):
+        hstate, prefix = carry
+        cq_in, dtq = inp
+        conv_out = jax.nn.silu(
+            _causal_conv(cq_in, params["conv_w"], params["conv_b"], prefix))
+        xq = conv_out[..., :d_inner]
+        bq = conv_out[..., d_inner:d_inner + ds].astype(jnp.float32)
+        cq = conv_out[..., d_inner + ds:].astype(jnp.float32)
+        delta = jax.nn.softplus(
+            dtq.astype(jnp.float32) + params["dt_bias"])   # (B,Q,H)
+        xh = xq.reshape(b, q, h, hd).astype(jnp.float32) * delta[..., None]
+        loga = delta * a[None, None, :]
+        y, h_new = _ssd_chunk(xh, bq, cq, loga, hstate)
+        y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+            * xq.reshape(b, q, h, hd).astype(jnp.float32)
+        new_prefix = cq_in[:, -(dc - 1):, :]
+        return (h_new, new_prefix), y.reshape(b, q, d_inner)
+
+    (_, _), ys = jax.lax.scan(
+        chunk_body, (h0, conv0),
+        (conv_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"]).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return constrain(out, None, "seq", "embed", rules=rules)
+
+
+def init_state(cfg, batch: int, dtype=jnp.bfloat16) -> Mamba2State:
+    d_inner, h, hd, ds, dc = dims(cfg)
+    return Mamba2State(
+        conv=jnp.zeros((batch, dc - 1, d_inner + 2 * ds), dtype),
+        ssm=jnp.zeros((batch, h, hd, ds), jnp.float32),
+    )
+
+
+def abstract_state(cfg, batch: int, dtype=jnp.bfloat16) -> Mamba2State:
+    d_inner, h, hd, ds, dc = dims(cfg)
+    return Mamba2State(
+        conv=jax.ShapeDtypeStruct((batch, dc - 1, d_inner + 2 * ds), dtype),
+        ssm=jax.ShapeDtypeStruct((batch, h, hd, ds), jnp.float32),
+    )
+
+
+def state_logical_axes() -> Mamba2State:
+    return Mamba2State(conv=("serve_batch", None, "dinner"),
+                       ssm=("serve_batch", "heads", None, "state"))
+
+
+def apply_decode(params, x, cfg, state: Mamba2State, *, rules=None
+                 ) -> Tuple[jax.Array, Mamba2State]:
+    b = x.shape[0]
+    d_inner, h, hd, ds, dc = dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xs, b_raw, c_raw, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([xs, b_raw, c_raw], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([state.conv,
+                              conv_in.astype(state.conv.dtype)], axis=1)
+    conv_out = jnp.sum(window * params["conv_w"][None].astype(window.dtype),
+                       axis=1, keepdims=True) + params["conv_b"][None, None]
+    conv_out = jax.nn.silu(conv_out)
+    xq = conv_out[..., :d_inner]
+    bq = conv_out[0:, 0, d_inner:d_inner + ds].astype(jnp.float32)
+    cq = conv_out[0:, 0, d_inner + ds:].astype(jnp.float32)
+
+    delta = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                            + params["dt_bias"])            # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(delta * a[None])                        # (B,H)
+    xh = xq[:, 0].reshape(b, h, hd).astype(jnp.float32) * delta[..., None]
+    h_new = state.ssm * decay[..., None, None] \
+        + xh[..., None] * bq[:, None, None, :]
+    y = jnp.einsum("bhpd,bd->bhp", h_new, cq)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] \
+        * xq[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner)
+    y = _gated_norm(y, z, params["norm_scale"]).astype(x.dtype)
+    out = y @ params["out_proj"]
+    out = constrain(out, None, None, "embed", rules=rules)
+    return out, Mamba2State(conv=window[:, 1:], ssm=h_new)

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU, Megatron column→row parallel."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, constrain, fan_in_init
+
+
+def spec(cfg, d_ff: int = 0) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d, f), ("embed", "mlp"), fan_in_init(0)),
+            "wi_up": ParamSpec((d, f), ("embed", "mlp"), fan_in_init(0)),
+            "wo": ParamSpec((f, d), ("mlp", "embed"), fan_in_init(0)),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp"), fan_in_init(0)),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), fan_in_init(0)),
+    }
+
+
+def apply(params: Dict[str, Any], x: jax.Array, cfg, *, rules=None) -> jax.Array:
+    if cfg.activation in ("swiglu", "geglu"):
+        gate = x @ params["wi_gate"]
+        up = x @ params["wi_up"]
+        gate = constrain(gate, None, "seq", "mlp", rules=rules)
+        up = constrain(up, None, "seq", "mlp", rules=rules)
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = x @ params["wi"]
+        h = constrain(h, None, "seq", "mlp", rules=rules)
+        h = jax.nn.gelu(h)
+    y = h @ params["wo"]
+    return constrain(y, None, "seq", "embed", rules=rules)

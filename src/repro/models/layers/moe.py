@@ -1,0 +1,104 @@
+"""Top-k mixture-of-experts FFN with capacity-bounded gather dispatch.
+
+Dispatch is gather/scatter-based (not one-hot einsum): token→expert routing
+costs O(T·k·d) memory movement rather than O(T·E·C·d) matmul FLOPs, which
+matters at 128 experts (arctic). Expert weights carry an 'expert' logical
+axis for expert parallelism; per-expert FFN dims carry 'expert_mlp' so archs
+whose expert count doesn't cover the model axis (grok: 8 experts over a
+16-way axis) shard *within* experts instead (hybrid EP x TP) — pure rule-table
+choice, no code change.
+
+Aux load-balance loss (Switch-style) is returned so trainers can add it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp as mlp_mod
+from repro.parallel.sharding import ParamSpec, constrain, fan_in_init
+
+
+def spec(cfg) -> Dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    p: Dict[str, Any] = {
+        "router": ParamSpec((d, e), ("embed", None), fan_in_init(0)),
+        "wi_gate": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp"),
+                             fan_in_init(1)),
+        "wi_up": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp"),
+                           fan_in_init(1)),
+        "wo": ParamSpec((e, f, d), ("expert", "expert_mlp", "embed"),
+                        fan_in_init(1)),
+    }
+    if cfg.moe.dense_residual:
+        # Arctic: a small dense MLP runs in parallel with the MoE FFN.
+        rf = cfg.moe.residual_d_ff or cfg.d_ff
+        p["residual"] = mlp_mod.spec(cfg, d_ff=rf)
+    return p
+
+
+def capacity(cfg, tokens: int) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+
+def apply(params: Dict[str, Any], x: jax.Array, cfg, *,
+          rules=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    cap = capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)       # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Aux loss: mean prob per expert x fraction of tokens routed (Switch).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce) * m.aux_loss_weight
+
+    # Position-in-expert via cumulative one-hot count (T*k slots).
+    flat_expert = expert_idx.reshape(-1)                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # count before slot
+    pos_in_expert = jnp.take_along_axis(pos, flat_expert[:, None], 1)[:, 0]
+    valid = pos_in_expert < cap
+
+    # Scatter tokens into per-expert capacity buffers.
+    dst = jnp.where(valid, flat_expert * cap + pos_in_expert, e * cap)
+    token_src = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[dst].set(xt[token_src])
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = constrain(buf, "expert", "capacity", "embed", rules=rules)
+
+    # Expert FFN (SwiGLU) — batched over the expert axis.
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    gate = constrain(gate, "expert", "capacity", "expert_mlp", rules=rules)
+    up = constrain(up, "expert", "capacity", "expert_mlp", rules=rules)
+    h = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    out_buf = constrain(out_buf, "expert", "capacity", "embed", rules=rules)
+
+    # Gather back and combine with gate values (dropped tokens get 0).
+    flat_out = out_buf.reshape(e * cap, d)
+    slot_out = jnp.where(valid[:, None],
+                         flat_out[jnp.minimum(dst, e * cap - 1)], 0.0)
+    weighted = slot_out * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[token_src].add(weighted)
+
+    if m.dense_residual:
+        y = y + mlp_mod.apply(params["residual"], xt[None], cfg,
+                              rules=rules)[0]
+    y = y.reshape(b, s, d)
+    return constrain(y, None, "seq", "embed", rules=rules), aux

@@ -1,0 +1,52 @@
+"""Normalization layers: RMSNorm, LayerNorm, non-parametric LN (OLMo)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, ones_init, zeros_init
+
+
+def spec(cfg, kind: Optional[str] = None) -> Dict[str, ParamSpec]:
+    kind = kind or cfg.norm
+    d = cfg.d_model
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), ones_init)}
+    if kind == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), ones_init),
+                "bias": ParamSpec((d,), ("embed",), zeros_init)}
+    if kind == "nonparametric_ln":  # OLMo: LN without affine params
+        return {}
+    raise ValueError(f"unknown norm {kind}")
+
+
+def apply(params: Dict[str, Any], x: jax.Array, kind: str,
+          eps: float = 1e-6) -> jax.Array:
+    """Normalize in f32, return in the input dtype (standard mixed-precision
+    practice; long reductions are precision-sensitive)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    elif kind in ("layernorm", "nonparametric_ln"):
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) \
+                + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown norm {kind}")
+    return y.astype(dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    """QK-norm (qwen3): RMS-normalize the per-head feature dim."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)

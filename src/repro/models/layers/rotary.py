@@ -1,0 +1,36 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float) -> jax.Array:
+    """cos/sin tables for given positions. positions: int32[...]
+    Returns (cos, sin) each float32[..., head_dim/2]."""
+    freqs = _freqs(head_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2).
+
+    Uses the half-split convention (rotate pairs (x[..:d/2], x[d/2:..]))
+    matching LLaMA-family checkpoints.
+    """
+    dtype = x.dtype
+    d2 = x.shape[-1] // 2
+    x1 = x[..., :d2].astype(jnp.float32)
+    x2 = x[..., d2:].astype(jnp.float32)
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(dtype)

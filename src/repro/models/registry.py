@@ -1,0 +1,83 @@
+"""Model registry: family → model class, plus input_specs for every
+(architecture × shape) cell.
+
+``input_specs`` returns ShapeDtypeStructs (no allocation) for the dry-run;
+``make_batch`` materializes a matching synthetic batch for real execution.
+Per the assignment, modality frontends are stubs: VLM cells get precomputed
+patch embeddings, audio cells get EnCodec token ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.hybrid_lm import HybridLM
+from repro.models.ssm_lm import MambaLM
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                per_shard_batch: int) -> Dict[str, Any]:
+    """Abstract inputs for one data shard (inside the manual-DP shard_map).
+
+    train  : {'tokens', 'labels'} (+ 'vision_embeds' for vlm)
+    prefill: {'tokens'} (+ 'vision_embeds' for vlm)
+    decode : {'tokens' (B, 1)} — one new token against a seq_len KV cache
+    """
+    b = per_shard_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), i32),
+            "labels": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), i32),
+        }
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), i32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, 1), i32)}
+    raise ValueError(f"unknown shape kind {shape.kind}")
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, per_shard_batch: int,
+               key: jax.Array) -> Dict[str, Any]:
+    """Materialize a synthetic batch matching input_specs."""
+    specs = input_specs(cfg, shape, per_shard_batch)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0,
+                                           cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32) \
+                .astype(s.dtype)
+    return out

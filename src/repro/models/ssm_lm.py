@@ -1,0 +1,119 @@
+"""Attention-free Mamba-1 LM (falcon-mamba family).
+
+Decode state is O(1) per layer (conv window + SSM state), which is what
+makes the long_500k long-context-decode cell runnable for this family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import embedding, mamba, norms
+from repro.models.transformer import stack_spec, xent
+from repro.parallel.sharding import constrain
+
+
+def block_spec(cfg) -> Dict[str, Any]:
+    return {"norm": norms.spec(cfg), "mixer": mamba.spec(cfg)}
+
+
+class MambaLM:
+    def __init__(self, cfg):
+        assert cfg.family == "ssm"
+        self.cfg = cfg
+
+    def param_specs(self):
+        cfg = self.cfg
+        p = {
+            "embed": embedding.spec(cfg),
+            "layers": stack_spec(block_spec(cfg), cfg.num_layers),
+            "final_norm": norms.spec(cfg),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = embedding.head_spec(cfg)
+        return p
+
+    def _head_params(self, params):
+        if self.cfg.tie_embeddings:
+            return {"w": params["embed"]["tokens"].T}
+        return params["head"]
+
+    def loss_fn(self, params, batch, *, rules=None, remat="layer",
+                scan_layers=True, attn_chunk=0, causal_skip=False,
+                compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], batch["tokens"], cfg,
+                            rules=rules, compute_dtype=compute_dtype)
+
+        def block(layer_params, h):
+            y = norms.apply(layer_params["norm"], h, cfg.norm)
+            y = mamba.apply_train(layer_params["mixer"], y, cfg, rules=rules)
+            return h + y
+
+        fn = jax.checkpoint(block) if remat == "layer" else block
+        if scan_layers:
+            def body(h, layer_params):
+                return fn(layer_params, h), None
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        else:
+            for i in range(cfg.num_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["layers"])
+                x = fn(layer, x)
+        x = norms.apply(params["final_norm"], x, cfg.norm)
+        lg = embedding.logits(self._head_params(params), x, cfg, rules=rules)
+        loss = xent(lg, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    # -- serving ------------------------------------------------------------
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        one = mamba.abstract_state(cfg, batch, dtype)
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape,
+                                           s.dtype), one)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        one = mamba.init_state(cfg, batch, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(),
+            one)
+
+    def cache_logical_axes(self):
+        ax = mamba.state_logical_axes()
+        return mamba.MambaState(conv=("layers",) + ax.conv,
+                                ssm=("layers",) + ax.ssm)
+
+    def serve_step(self, params, batch, cache, *, mode="decode", rules=None,
+                   compute_dtype=jnp.bfloat16, split_combine=False):
+        del split_combine  # attention-free
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], batch["tokens"], cfg,
+                            rules=rules, compute_dtype=compute_dtype)
+        if mode == "prefill":
+            # Recurrent prefill: run the train path (final states are
+            # recomputed on the decode path's first steps in serving tests;
+            # for the dry-run the train-path FLOPs are the prefill cost).
+            def body(h, layer_params):
+                y = norms.apply(layer_params["norm"], h, cfg.norm)
+                y = mamba.apply_train(layer_params["mixer"], y, cfg,
+                                      rules=rules)
+                return h + y, None
+            x, _ = jax.lax.scan(body, x, params["layers"])
+            new_cache = cache
+        else:
+            def body(h, inp):
+                layer_params, st = inp
+                y = norms.apply(layer_params["norm"], h, cfg.norm)
+                y, st_new = mamba.apply_decode(layer_params["mixer"], y, cfg,
+                                               st, rules=rules)
+                return h + y, st_new
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = norms.apply(params["final_norm"], x, cfg.norm)
+        lg = embedding.logits(self._head_params(params), x, cfg, rules=rules)
+        return lg, new_cache

@@ -1,0 +1,25 @@
+from repro.optim import adamw, lars, schedules, sgd
+
+
+def init_state(name: str, pool_size: int):
+    if name in ("momentum_sgd", "lars"):
+        return sgd.init(pool_size)
+    if name == "adamw":
+        return adamw.init(pool_size)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def abstract_state(name: str, pool_size: int):
+    if name in ("momentum_sgd", "lars"):
+        return sgd.abstract_state(pool_size)
+    if name == "adamw":
+        return adamw.abstract_state(pool_size)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def update_pool(name: str, *args, **kwargs):
+    if name in ("momentum_sgd", "lars"):
+        return sgd.update_pool(*args, **kwargs)
+    if name == "adamw":
+        return adamw.update_pool(*args, **kwargs)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,59 @@
+"""Pool-space AdamW (for the transformer archs, where momentum-SGD is not
+the realistic optimizer). Supports the CSC mask with the same semantics as
+SGD: unselected elements keep their moments and weights untouched; their
+gradient lives in GradientFlow's hg buffer. Bias correction uses a
+per-element step count so masked elements correct at their own rate."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class AdamWState(NamedTuple):
+    mu: jax.Array     # f32[pool]
+    nu: jax.Array     # f32[pool]
+    counts: jax.Array  # i32[pool] per-element update counts (CSC-aware)
+
+
+def init(pool_size: int) -> AdamWState:
+    return AdamWState(mu=jnp.zeros((pool_size,), jnp.float32),
+                      nu=jnp.zeros((pool_size,), jnp.float32),
+                      counts=jnp.zeros((pool_size,), jnp.int32))
+
+
+def abstract_state(pool_size: int) -> AdamWState:
+    return AdamWState(mu=jax.ShapeDtypeStruct((pool_size,), jnp.float32),
+                      nu=jax.ShapeDtypeStruct((pool_size,), jnp.float32),
+                      counts=jax.ShapeDtypeStruct((pool_size,), jnp.int32))
+
+
+def update_pool(
+    master: jax.Array,
+    grads: jax.Array,
+    state: AdamWState,
+    mask: jax.Array,
+    cfg: OptimizerConfig,
+    lr: jax.Array,
+    *,
+    scale: Optional[jax.Array] = None,
+    use_kernels: bool = False,
+) -> Tuple[jax.Array, AdamWState]:
+    del use_kernels  # kernel path currently implemented for SGD only
+    b1, b2 = cfg.beta1, cfg.beta2
+    counts = state.counts + mask.astype(jnp.int32)
+    t = jnp.maximum(counts, 1).astype(jnp.float32)
+    mu = jnp.where(mask, b1 * state.mu + (1 - b1) * grads, state.mu)
+    nu = jnp.where(mask, b2 * state.nu + (1 - b2) * jnp.square(grads),
+                   state.nu)
+    mu_hat = mu / (1 - b1 ** t)
+    nu_hat = nu / (1 - b2 ** t)
+    step = lr * (mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+                 + cfg.weight_decay * master)
+    if scale is not None:
+        step = step * scale
+    new_master = jnp.where(mask, master - step, master)
+    return new_master, AdamWState(mu=mu, nu=nu, counts=counts)

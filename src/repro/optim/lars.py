@@ -1,0 +1,54 @@
+"""LARS — layer-wise adaptive rate scaling (paper §4.2, You et al. [40]).
+
+The paper trains AlexNet/ResNet at 64K batch with LARS working "in
+conjunction with mixed-precision training". In pool space, LARS is a
+per-*tensor* learning-rate scale:
+
+    local_lr(tensor) = eta * ||w|| / (||g|| + wd * ||w|| + eps)
+
+computed per tensor span of the pool with a STATIC python loop over the
+pool's LeafSpecs (slice + reduce per tensor). An earlier implementation
+used ``segment_sum`` over a pool-sized int32 id vector; that id vector was
+captured as a multi-GB compile-time constant for the big archs (78 GB for
+grok-1's local pool) and OOM'd XLA — the static loop emits only
+O(num_tensors) small reduces and no large constants (EXPERIMENTS.md §Perf).
+
+Under CSC, ||g|| is computed on the masked gradient (unselected chunks
+contribute zero — they also receive no update this iteration).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.core.pool import GradientPool
+
+
+class LARSScaler:
+    """Per-tensor trust ratios via static spans over the pool layout."""
+
+    def __init__(self, pool: GradientPool):
+        self.pool = pool
+
+    def scale(self, master: jax.Array, grads: jax.Array,
+              cfg: OptimizerConfig,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+        g = grads if mask is None else jnp.where(mask, grads, 0.0)
+        parts = []
+        for spec in self.pool.specs:
+            w_seg = jax.lax.slice_in_dim(master, spec.offset,
+                                         spec.offset + spec.size)
+            g_seg = jax.lax.slice_in_dim(g, spec.offset,
+                                         spec.offset + spec.size)
+            w_norm = jnp.sqrt(jnp.sum(jnp.square(w_seg)))
+            g_norm = jnp.sqrt(jnp.sum(jnp.square(g_seg)))
+            ratio = cfg.lars_eta * w_norm / (
+                g_norm + cfg.weight_decay * w_norm + cfg.lars_eps)
+            ratio = jnp.where((w_norm > 0.0) & (g_norm > 0.0), ratio, 1.0)
+            parts.append(jnp.broadcast_to(ratio, (spec.size,)))
+        if self.pool.padding:
+            parts.append(jnp.ones((self.pool.padding,), master.dtype))
+        return jnp.concatenate(parts).astype(master.dtype)

@@ -1,0 +1,32 @@
+"""Learning-rate schedules: the paper's linear-scaling rule with warm-up
+(Goyal et al.), plus cosine decay for the transformer archs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def lr_at(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    """step: int or traced scalar — returns the LR (f32 scalar)."""
+    step = jnp.asarray(step, jnp.float32)
+    base = jnp.asarray(cfg.learning_rate, jnp.float32)
+    warm = jnp.asarray(max(cfg.warmup_steps, 1), jnp.float32)
+    # 1-indexed ramp: step 0 trains at lr/warmup, not at zero.
+    warmup_frac = jnp.minimum((step + 1.0) / warm, 1.0)
+    if cfg.schedule == "constant":
+        return base * warmup_frac
+    total = jnp.asarray(max(cfg.total_steps, 1), jnp.float32)
+    progress = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0),
+                        0.0, 1.0)
+    if cfg.schedule == "warmup_linear":
+        return base * warmup_frac * (1.0 - progress)
+    if cfg.schedule == "warmup_cosine":
+        return base * warmup_frac * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    raise ValueError(f"unknown schedule {cfg.schedule}")
+
+
+def linear_scaled_lr(base_lr: float, global_batch: int,
+                     base_batch: int = 256) -> float:
+    """Linear scaling rule (paper §4.2): lr ∝ global batch size."""
+    return base_lr * global_batch / base_batch

@@ -1,0 +1,61 @@
+"""Pool-space momentum SGD with CSC masking (paper Algorithm 1, update step).
+
+The optimizer operates directly on the raveled gradient pool (f32 master
+weights + f32 momentum), fused with the CSC update mask:
+
+  important  : u_t = m·u_{t-1} + lr·(g_t + wd·w);  w -= u_t
+  unimportant: u_t = u_{t-1};                      w unchanged
+(the unimportant gradient was already captured in GradientFlow's hg buffer).
+
+``use_kernels=True`` routes the elementwise pass through the Pallas
+``fused_update`` kernel (one HBM pass over 4 pool-sized buffers instead of
+several XLA loops) — validated against this exact function in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class SGDState(NamedTuple):
+    momentum: jax.Array  # f32[pool]
+
+
+def init(pool_size: int) -> SGDState:
+    return SGDState(momentum=jnp.zeros((pool_size,), jnp.float32))
+
+
+def abstract_state(pool_size: int) -> SGDState:
+    return SGDState(momentum=jax.ShapeDtypeStruct((pool_size,), jnp.float32))
+
+
+def update_pool(
+    master: jax.Array,       # f32[pool] master params
+    grads: jax.Array,        # f32[pool] mean-reduced grads
+    state: SGDState,
+    mask: jax.Array,         # bool[pool] — CSC importance (all True if dense)
+    cfg: OptimizerConfig,
+    lr: jax.Array,
+    *,
+    scale: Optional[jax.Array] = None,  # per-element LR scale (LARS)
+    use_kernels: bool = False,
+) -> Tuple[jax.Array, SGDState]:
+    if use_kernels:
+        from repro.kernels import ops as kops
+        new_master, new_mom = kops.fused_update(
+            master, grads, state.momentum, mask, lr=lr,
+            momentum=cfg.momentum, weight_decay=cfg.weight_decay,
+            scale=scale)
+        return new_master, SGDState(momentum=new_mom)
+
+    g = grads + cfg.weight_decay * master
+    if scale is not None:
+        g = g * scale
+    u = cfg.momentum * state.momentum + lr * g
+    new_mom = jnp.where(mask, u, state.momentum)
+    new_master = jnp.where(mask, master - u, master)
+    return new_master, SGDState(momentum=new_mom)

@@ -1,0 +1,189 @@
+"""T5X-style logical-axis sharding.
+
+Every parameter is declared as a ``ParamSpec`` carrying *logical* axis names
+('vocab', 'heads', 'mlp', 'expert', …). A per-architecture rule table maps
+logical names to the physical 'model' mesh axis (or None = replicated).
+The data-parallel axes ('pod', 'data') never appear here: the train/serve
+step runs inside a shard_map that is *manual* over them, so activations are
+already per-data-shard and parameters are replicated across data axes by
+construction.
+
+Helpers produce: materialized params, abstract (ShapeDtypeStruct) trees for
+dry-run lowering, NamedShardings for jit in/out specs, and raw
+PartitionSpecs for with_sharding_constraint inside the auto region.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# -- initializers -----------------------------------------------------------
+
+def normal_init(stddev: float) -> Callable:
+    def f(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return f
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def fan_in_init(fan_axis: int = 0) -> Callable:
+    def f(key, shape, dtype):
+        fan_in = shape[fan_axis] if shape else 1
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter: shape + logical axes + initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: Callable = fan_in_init(0)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn: Callable, specs: Any) -> Any:
+    return jax.tree_util.tree_map(fn, specs,
+                                  is_leaf=is_spec)
+
+
+def init_params(specs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialize parameters (folding a per-leaf key from the path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [spec.init(k, spec.shape, dtype if spec.dtype is None else dtype)
+            for spec, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs: Any, dtype=jnp.float32) -> Any:
+    return _tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+
+
+def logical_spec(axes: Sequence[Optional[str]],
+                 rules: Mapping[str, Optional[str]]) -> P:
+    """logical axes → PartitionSpec via the rule table."""
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def param_pspecs(specs: Any, rules: Mapping[str, Optional[str]]) -> Any:
+    return _tree_map_specs(lambda s: logical_spec(s.axes, rules), specs)
+
+
+def param_shardings(specs: Any, mesh, rules: Mapping[str, Optional[str]]) -> Any:
+    return _tree_map_specs(
+        lambda s: NamedSharding(mesh, logical_spec(s.axes, rules)), specs)
+
+
+def count_params(specs: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def constrain(x: jax.Array, *axes: Optional[str],
+              rules: Optional[Mapping[str, Optional[str]]] = None) -> jax.Array:
+    """with_sharding_constraint by logical axes, inside the auto region.
+
+    No-op when rules is None (single-device / test paths) or when the
+    resolved spec is fully replicated.
+    """
+    if rules is None:
+        return x
+    spec = logical_spec(axes, rules)
+    if all(a is None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def match_vma(x: Any, ref: jax.Array) -> Any:
+    """Tag every array in ``x`` as varying over the manual mesh axes that
+    ``ref`` varies over. Needed for lax.scan carries initialized from
+    constants inside a manual shard_map region (the body output inherits
+    the data-varying tag from the scanned inputs; the init must match)."""
+    try:
+        want = jax.typeof(ref).vma
+    except Exception:
+        return x
+
+    def tag(v):
+        have = getattr(jax.typeof(v), "vma", frozenset())
+        for a in want - have:
+            v = jax.lax.pcast(v, a, to="varying")
+        return v
+    return jax.tree_util.tree_map(tag, x)
+
+
+def localize_specs(specs: Any, rules: Mapping[str, Optional[str]],
+                   model_size: int) -> Any:
+    """Shapes of the per-model-shard local views of every parameter.
+
+    Used to build the *local* GradientPool: the pool-space optimizer and
+    GradientFlow state live on each model shard's slice of the parameters
+    (a ZeRO-style distribution of optimizer state across the TP axis),
+    so raveling never gathers TP-sharded tensors.
+    """
+    def loc(s: ParamSpec) -> ParamSpec:
+        shape = []
+        for dim, ax in zip(s.shape, s.axes):
+            phys = rules.get(ax) if ax is not None else None
+            if phys == "model":
+                assert dim % model_size == 0, (
+                    f"dim {dim} (axis {ax}) not divisible by model axis "
+                    f"{model_size}; fix the arch's rule table")
+                shape.append(dim // model_size)
+            else:
+                shape.append(dim)
+        return ParamSpec(tuple(shape), s.axes, s.init, s.dtype)
+    return _tree_map_specs(loc, specs)
+
+
+# -- rule tables -------------------------------------------------------------
+
+# Defaults for dense transformers: Megatron TP over 'model'.
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",      # embedding + LM head vocab-sharded
+    "embed": None,         # d_model replicated
+    "heads": "model",      # attention heads column-parallel
+    "kv_heads": "model",   # sharded when divisible (override per arch)
+    "qkv": "model",
+    "mlp": "model",        # FFN hidden column/row parallel
+    "expert": "model",     # MoE expert-parallel
+    "expert_mlp": None,    # per-expert FFN hidden (TP within expert)
+    "capacity": None,
+    "seq": None,           # sequence parallel (override per shape)
+    "kv_seq": None,        # KV-cache sequence sharding for long decode
+    "state": None,         # SSM state
+    "dinner": "model",     # mamba inner dim
+    "conv": None,
+    "layers": None,
+}
+
+
+def make_rules(**overrides: Optional[str]) -> Dict[str, Optional[str]]:
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    return rules

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import ElasticController, candidates_for
+from repro.runtime.fault_tolerance import (Preempted, SupervisorConfig,
+                                           TrainSupervisor)
+from repro.runtime.stragglers import StragglerDetector, StragglerReport

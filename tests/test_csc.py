@@ -1,0 +1,149 @@
+"""Coarse-grained sparse communication unit tests (single device; the
+cross-shard behaviour is covered by test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GradientFlowConfig
+from repro.core import csc
+from repro.core.schedule import build_stages, num_selected_chunks, stage_at
+from repro.launch.mesh import make_mesh
+
+CHUNK = 64
+NCHUNK = 16
+POOL = CHUNK * NCHUNK
+
+
+def run_reduce(pool_grads, state, cfg, k):
+    """Drive csc_reduce inside a size-1 data mesh (psum = identity)."""
+    mesh = make_mesh((1,), ("data",))
+    from jax.sharding import PartitionSpec as P
+
+    def f(g, hg, norms):
+        res = csc.csc_reduce(
+            g, csc.CSCState(hg=hg, chunk_norms=norms), cfg,
+            num_selected=k,
+            bucket_boundaries=csc.wire_bucket_boundaries(
+                k, cfg.chunk_elems, cfg.bucket_elems),
+            num_data_shards=1)
+        return res.grads, res.elem_mask, res.state.hg, res.state.chunk_norms
+
+    sm = jax.shard_map(f, mesh=mesh, in_specs=(P(None),) * 3,
+                       out_specs=(P(None),) * 4, axis_names={"data"})
+    with jax.sharding.set_mesh(mesh):
+        return jax.jit(sm)(pool_grads, state.hg, state.chunk_norms)
+
+
+@pytest.fixture
+def cfg():
+    # f32 wire keeps the invariants exact; bf16 rounding is asserted
+    # separately in test_wire_dtype_rounding.
+    return GradientFlowConfig(mode="csc", chunk_elems=CHUNK,
+                              bucket_elems=256, sparsity=0.75, momentum=0.9,
+                              reduce_axes=("data",), wire_dtype="float32")
+
+
+def test_selection_uses_previous_norms(cfg):
+    g = jax.random.normal(jax.random.PRNGKey(0), (POOL,), jnp.float32)
+    # previous-iteration norms favour chunks 3 and 7
+    norms = jnp.zeros((NCHUNK,)).at[jnp.array([3, 7])].set(100.0)
+    state = csc.CSCState(hg=jnp.zeros((POOL,)), chunk_norms=norms)
+    grads, mask, hg, _ = run_reduce(g, state, cfg, k=2)
+    mask = np.asarray(mask).reshape(NCHUNK, CHUNK)
+    assert mask[3].all() and mask[7].all()
+    assert mask.sum() == 2 * CHUNK
+
+
+def test_information_preservation(cfg):
+    """THE invariant of Algorithm 1: transmitted + momentum-discounted
+    historical state accounts for every gradient — nothing is dropped."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (POOL,), jnp.float32)
+    norms = jnp.arange(NCHUNK, 0, -1).astype(jnp.float32)
+    state = csc.CSCState(hg=jnp.zeros((POOL,)), chunk_norms=norms)
+    grads, mask, hg, _ = run_reduce(g, state, cfg, k=4)
+    mask = np.asarray(mask)
+    # transmitted part: mean (here: identity) of g on selected chunks
+    np.testing.assert_allclose(np.asarray(grads)[mask],
+                               np.asarray(g)[mask], rtol=1e-5)
+    # grads zero off-mask (invariant update input)
+    np.testing.assert_array_equal(np.asarray(grads)[~mask], 0.0)
+    # unselected: hg = momentum * g (Algorithm 1 line 11)
+    np.testing.assert_allclose(np.asarray(hg)[~mask],
+                               0.9 * np.asarray(g)[~mask], rtol=1e-5)
+    # selected: hg cleared (line 9)
+    np.testing.assert_array_equal(np.asarray(hg)[mask], 0.0)
+
+
+def test_hg_reinjection(cfg):
+    """Iteration t+1 must transmit g_{t+1} + hg_t for selected chunks."""
+    g1 = jnp.ones((POOL,), jnp.float32)
+    norms = jnp.arange(NCHUNK, 0, -1).astype(jnp.float32)
+    state = csc.CSCState(hg=jnp.zeros((POOL,)), chunk_norms=norms)
+    _, mask1, hg1, norms1 = run_reduce(g1, state, cfg, k=4)
+    g2 = jnp.full((POOL,), 2.0)
+    state2 = csc.CSCState(hg=hg1, chunk_norms=norms1)
+    grads2, mask2, hg2, _ = run_reduce(g2, state2, cfg, k=4)
+    m2 = np.asarray(mask2)
+    expected = np.asarray(g2) + np.asarray(hg1)
+    np.testing.assert_allclose(np.asarray(grads2)[m2], expected[m2],
+                               rtol=1e-5)
+
+
+def test_norm_census_identifies_big_chunks(cfg):
+    g = jnp.zeros((POOL,)).at[5 * CHUNK: 6 * CHUNK].set(50.0)
+    g = g.at[11 * CHUNK: 12 * CHUNK].set(30.0)
+    state = csc.CSCState(hg=jnp.zeros((POOL,)),
+                         chunk_norms=jnp.ones((NCHUNK,)))
+    _, _, _, norms = run_reduce(g, state, cfg, k=4)
+    top2 = set(np.argsort(np.asarray(norms))[-2:].tolist())
+    assert top2 == {5, 11}
+
+
+def test_wire_bucket_boundaries():
+    bounds = csc.wire_bucket_boundaries(num_selected=7, chunk_elems=10,
+                                        bucket_elems=25)
+    assert bounds[0] == (0, 20)   # 2 chunks per bucket
+    assert bounds[-1][1] == 70
+    total = sum(e - s for s, e in bounds)
+    assert total == 70
+    # single bucket when theta >= payload
+    assert csc.wire_bucket_boundaries(4, 10, 1000) == ((0, 40),)
+
+
+def test_warmup_schedule():
+    cfg = GradientFlowConfig(mode="csc", chunk_elems=CHUNK, sparsity=0.8,
+                             warmup_steps=100, warmup_stages=4)
+    stages = build_stages(cfg, NCHUNK)
+    assert len(stages) == 5
+    assert stages[0].sparsity == 0.0
+    assert stages[0].num_selected == NCHUNK          # dense start
+    assert stages[-1].sparsity == pytest.approx(0.8)
+    assert stages[-1].first_step == 100
+    # monotone ramp
+    sparsities = [s.sparsity for s in stages]
+    assert sparsities == sorted(sparsities)
+    assert stage_at(stages, 0) is stages[0]
+    assert stage_at(stages, 99) is stages[-2]
+    assert stage_at(stages, 10 ** 6) is stages[-1]
+
+
+def test_wire_dtype_rounding():
+    """bf16 wire (paper's mixed-precision comm, §2.5) rounds transmitted
+    values to bf16 resolution but no worse."""
+    cfg = GradientFlowConfig(mode="csc", chunk_elems=CHUNK,
+                             bucket_elems=256, sparsity=0.75, momentum=0.9,
+                             reduce_axes=("data",), wire_dtype="bfloat16")
+    g = jax.random.normal(jax.random.PRNGKey(5), (POOL,), jnp.float32)
+    state = csc.CSCState(hg=jnp.zeros((POOL,)),
+                         chunk_norms=jnp.arange(NCHUNK, 0, -1.0))
+    grads, mask, _, _ = run_reduce(g, state, cfg, k=4)
+    m = np.asarray(mask)
+    want = np.asarray(g.astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(grads)[m], want[m], rtol=1e-6)
+
+
+def test_num_selected_bounds():
+    assert num_selected_chunks(0.0, 10) == 10
+    assert num_selected_chunks(1.0, 10) == 1   # never zero chunks
+    assert num_selected_chunks(0.85, 100) == 15

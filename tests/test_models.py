@@ -1,0 +1,229 @@
+"""Model-layer correctness: attention variants, Mamba oracles, families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.models import build_model
+from repro.models.layers import attention, mamba, mamba2
+from repro.parallel import sharding as sh
+
+
+# -- attention ---------------------------------------------------------------
+
+def _qkv(key, b=2, s=128, h=4, hd=32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("causal_skip", [False, True])
+def test_blockwise_matches_full(chunk, causal_skip):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    full = attention._full_attention(q, k, v, causal=True)
+    block = attention.blockwise_attention(q, k, v, causal=True,
+                                          chunk_q=chunk, chunk_k=chunk,
+                                          causal_skip=causal_skip)
+    np.testing.assert_allclose(np.asarray(block), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+    full = attention._full_attention(q, k, v, causal=False)
+    block = attention.blockwise_attention(q, k, v, causal=False,
+                                          chunk_q=32, chunk_k=64,
+                                          causal_skip=False)
+    np.testing.assert_allclose(np.asarray(block), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attend_chunk_fallback():
+    # 72 isn't divisible by 64 but is by 36/24/18... picker should find one
+    q, k, v = _qkv(jax.random.PRNGKey(2), s=72)
+    out = attention.attend(q, k, v, causal=True, attn_chunk=64)
+    full = attention._full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _dense_cfg(**kw):
+    base = dict(family="dense", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=128, norm="rmsnorm",
+                activation="swiglu")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("split_combine", [False, True])
+def test_decode_matches_train_logits(split_combine):
+    """Teacher-forced decode must reproduce the train-path logits — the KV
+    cache, rotary offsets and GQA grouping all have to agree. The
+    split_combine (online-softmax merge) perf variant must be exact too."""
+    cfg = _dense_cfg(qk_norm=True)
+    model = build_model(cfg)
+    params = sh.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size, jnp.int32)
+    # train-path logits via loss_fn's internals: use serve prefill instead
+    cache = model.init_cache(2, 12, dtype=jnp.float32)
+    train_lg, _ = model.serve_step(params, {"tokens": toks}, cache,
+                                   mode="prefill",
+                                   compute_dtype=jnp.float32)
+    cache = model.init_cache(2, 12, dtype=jnp.float32)
+    outs = []
+    for t in range(12):
+        lg, cache = model.serve_step(params, {"tokens": toks[:, t:t + 1]},
+                                     cache, mode="decode",
+                                     compute_dtype=jnp.float32,
+                                     split_combine=split_combine)
+        outs.append(lg[:, 0])
+    dec_lg = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(train_lg), np.asarray(dec_lg),
+                               rtol=5e-4, atol=5e-4)
+
+
+# -- mamba oracles ------------------------------------------------------------
+
+def _naive_mamba1(params, x, cfg):
+    """Step-by-step recurrence — the slow ground truth."""
+    d_inner, dt_rank, d_state, d_conv = mamba.dims(cfg)
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc = mamba._causal_conv(xs, params["conv_w"], params["conv_b"])
+    xa = jax.nn.silu(xc)
+    delta, b_mat, c_mat, a = mamba._ssm_params(params, xa, cfg)
+    b, l, _ = x.shape
+    h = jnp.zeros((b, d_inner, d_state))
+    ys = []
+    for t in range(l):
+        a_bar = jnp.exp(delta[:, t, :, None] * a[None])
+        bx = (delta[:, t] * xa[:, t].astype(jnp.float32))[..., None] \
+            * b_mat[:, t, None, :]
+        h = a_bar * h + bx
+        ys.append(jnp.sum(h * c_mat[:, t, None, :], axis=-1))
+    y = jnp.stack(ys, axis=1) + params["D"] * xa.astype(jnp.float32)
+    y = y * jax.nn.silu(z).astype(jnp.float32)
+    return (y @ params["out_proj"].astype(jnp.float32))
+
+
+def test_mamba1_chunked_scan_matches_naive():
+    cfg = ModelConfig(family="ssm", d_model=32, vocab_size=64, num_heads=1,
+                      num_kv_heads=1, d_ff=0,
+                      ssm=SSMConfig(d_state=8, d_conv=4, expand=2))
+    spec = mamba.spec(cfg)
+    params = sh.init_params(spec, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32), jnp.float32)
+    fast = mamba.apply_train(params, x, cfg, scan_chunk=8)
+    slow = _naive_mamba1(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _naive_ssd(params, x, cfg):
+    """Per-step Mamba-2 recurrence oracle (matches apply_decode math)."""
+    d_inner, h, hd, ds, dc = mamba2.dims(cfg)
+    b, l, _ = x.shape
+    state = mamba2.init_state(cfg, b, dtype=jnp.float32)
+    outs = []
+    for t in range(l):
+        y, state = mamba2.apply_decode(params, x[:, t:t + 1], cfg, state)
+        outs.append(y[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+def test_mamba2_ssd_matches_stepwise():
+    """The chunked SSD matmul formulation must equal the per-step scalar
+    recurrence — validates the decay algebra + inter-chunk state hand-off."""
+    cfg = ModelConfig(family="hybrid", d_model=32, vocab_size=64,
+                      num_heads=4, num_kv_heads=4, d_ff=64,
+                      ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
+                                    version=2, head_dim=16))
+    spec = mamba2.spec(cfg)
+    params = sh.init_params(spec, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 32), jnp.float32)
+    fast = mamba2.apply_train(params, x, cfg, scan_chunk=4)
+    slow = _naive_ssd(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow),
+                               rtol=5e-4, atol=5e-4)
+
+
+# -- family forwards -----------------------------------------------------------
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = ModelConfig(family="moe", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64,
+                      moe=MoEConfig(num_experts=4, top_k=2,
+                                    capacity_factor=1.25))
+    from repro.models.layers import moe as moe_mod
+    spec = moe_mod.spec(cfg)
+    params = sh.init_params(spec, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    y, aux = moe_mod.apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0.0
+
+
+def test_vlm_sequence_layout():
+    cfg = ModelConfig(family="vlm", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_vision_tokens=8)
+    model = build_model(cfg)
+    params = sh.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "labels": jnp.zeros((2, 16), jnp.int32),
+        "vision_embeds": jnp.zeros((2, 8, 32), jnp.bfloat16),
+    }
+    loss, _ = model.loss_fn(params, batch, remat="none",
+                            compute_dtype=jnp.float32)
+    assert np.isfinite(float(loss))
+
+
+def test_audio_multicodebook_shapes():
+    cfg = ModelConfig(family="audio", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=32,
+                      num_codebooks=4, norm="layernorm", activation="gelu")
+    model = build_model(cfg)
+    params = sh.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 8, dtype=jnp.float32)
+    toks = jnp.zeros((2, 8, 4), jnp.int32)
+    lg, _ = model.serve_step(params, {"tokens": toks}, cache,
+                             mode="prefill", compute_dtype=jnp.float32)
+    assert lg.shape == (2, 8, 4, 32)
+
+
+def test_scan_vs_unrolled_layers_equal():
+    cfg = _dense_cfg(num_layers=3)
+    model = build_model(cfg)
+    params = sh.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    l1, _ = model.loss_fn(params, batch, scan_layers=True, remat="none",
+                          compute_dtype=jnp.float32)
+    l2, _ = model.loss_fn(params, batch, scan_layers=False, remat="none",
+                          compute_dtype=jnp.float32)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_remat_matches_no_remat():
+    cfg = _dense_cfg()
+    model = build_model(cfg)
+    params = sh.init_params(model.param_specs(), jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    g1 = jax.grad(lambda p: model.loss_fn(p, batch, remat="layer",
+                                          compute_dtype=jnp.float32)[0])(
+        params)
+    g2 = jax.grad(lambda p: model.loss_fn(p, batch, remat="none",
+                                          compute_dtype=jnp.float32)[0])(
+        params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

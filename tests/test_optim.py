@@ -1,0 +1,126 @@
+"""Optimizer + schedule unit tests (pool space)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.core.pool import GradientPool
+from repro.optim import adamw, lars, schedules, sgd
+
+
+def test_momentum_sgd_dense_step():
+    cfg = OptimizerConfig(name="momentum_sgd", momentum=0.9,
+                          weight_decay=0.01)
+    n = 256
+    master = jnp.ones((n,))
+    grads = jnp.full((n,), 2.0)
+    state = sgd.init(n)
+    mask = jnp.ones((n,), bool)
+    new_master, state = sgd.update_pool(master, grads, state, mask, cfg,
+                                        lr=0.1)
+    u = 0.1 * (2.0 + 0.01 * 1.0)
+    np.testing.assert_allclose(np.asarray(new_master), 1.0 - u, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.momentum), u, rtol=1e-6)
+    # second step accumulates momentum
+    new_master, state = sgd.update_pool(new_master, grads, state, mask,
+                                        cfg, lr=0.1)
+    u2 = 0.9 * u + 0.1 * (2.0 + 0.01 * float(1.0 - u))
+    np.testing.assert_allclose(np.asarray(state.momentum), u2, rtol=1e-6)
+
+
+def test_momentum_sgd_csc_mask():
+    """Algorithm 1 update step: unimportant elements keep w and hu."""
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=0.0)
+    n = 128
+    master = jnp.ones((n,))
+    grads = jnp.where(jnp.arange(n) < 64, 1.0, 0.0)
+    state = sgd.SGDState(momentum=jnp.full((n,), 5.0))
+    mask = jnp.arange(n) < 64
+    new_master, state2 = sgd.update_pool(master, grads, state, mask, cfg,
+                                         lr=0.1)
+    np.testing.assert_array_equal(np.asarray(new_master[64:]), 1.0)
+    np.testing.assert_array_equal(np.asarray(state2.momentum[64:]), 5.0)
+    u = 0.9 * 5.0 + 0.1 * 1.0
+    np.testing.assert_allclose(np.asarray(state2.momentum[:64]), u)
+    np.testing.assert_allclose(np.asarray(new_master[:64]), 1.0 - u)
+
+
+def test_sgd_kernel_path_matches():
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=1e-3)
+    n = 4096
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    master = jax.random.normal(ks[0], (n,))
+    grads = jax.random.normal(ks[1], (n,))
+    state = sgd.SGDState(momentum=jax.random.normal(ks[2], (n,)))
+    mask = jax.random.bernoulli(ks[3], 0.4, (n,))
+    a_m, a_s = sgd.update_pool(master, grads, state, mask, cfg, lr=0.05,
+                               use_kernels=False)
+    b_m, b_s = sgd.update_pool(master, grads, state, mask, cfg, lr=0.05,
+                               use_kernels=True)
+    # fused kernel reorders float ops vs XLA's fusion: 1-2 ulp tolerance
+    np.testing.assert_allclose(np.asarray(a_m), np.asarray(b_m), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a_s.momentum),
+                               np.asarray(b_s.momentum), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_adamw_masked_bias_correction():
+    cfg = OptimizerConfig(name="adamw", beta1=0.9, beta2=0.99, eps=1e-8,
+                          weight_decay=0.0)
+    n = 64
+    master = jnp.zeros((n,))
+    state = adamw.init(n)
+    mask_a = jnp.arange(n) < 32
+    # element group A updates twice, group B once — counts must differ
+    m1, state = adamw.update_pool(master, jnp.ones((n,)), state, mask_a,
+                                  cfg, lr=0.1)
+    m2, state = adamw.update_pool(m1, jnp.ones((n,)),
+                                  state, jnp.ones((n,), bool), cfg, lr=0.1)
+    counts = np.asarray(state.counts)
+    assert (counts[:32] == 2).all() and (counts[32:] == 1).all()
+    # group B's single update has first-step bias correction => step ≈ lr
+    np.testing.assert_allclose(np.asarray(m2[32:]), -0.1, rtol=1e-4)
+
+
+def test_lars_trust_ratio():
+    tree = {"w1": jnp.full((64,), 2.0), "w2": jnp.full((64,), 1.0)}
+    pool = GradientPool(tree)
+    scaler = lars.LARSScaler(pool)
+    cfg = OptimizerConfig(name="lars", lars_eta=0.001, weight_decay=0.0,
+                          lars_eps=0.0)
+    master = pool.ravel(tree)
+    grads = jnp.ones((pool.size,))
+    scale = scaler.scale(master, grads, cfg)
+    # per-tensor: eta * ||w|| / ||g||
+    s1 = 0.001 * np.sqrt(64 * 4) / np.sqrt(64)
+    s2 = 0.001 * np.sqrt(64 * 1) / np.sqrt(64)
+    got = np.asarray(scale)
+    seg = pool.segment_ids()
+    for i, expected in enumerate([s2, s1] if pool.specs[0].name == "w2"
+                                 else [s1, s2]):
+        np.testing.assert_allclose(got[seg == i], expected, rtol=1e-5)
+
+
+def test_lars_zero_norm_guard():
+    tree = {"w": jnp.zeros((32,))}
+    pool = GradientPool(tree)
+    scaler = lars.LARSScaler(pool)
+    cfg = OptimizerConfig(name="lars")
+    scale = scaler.scale(pool.ravel(tree), jnp.zeros((pool.size,)), cfg)
+    np.testing.assert_array_equal(np.asarray(scale), 1.0)
+
+
+def test_lr_schedules():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                          total_steps=110, schedule="warmup_cosine")
+    # 1-indexed warmup: step 0 trains at lr/warmup, not zero
+    np.testing.assert_allclose(float(schedules.lr_at(cfg, 0)), 0.1)
+    np.testing.assert_allclose(float(schedules.lr_at(cfg, 10)), 1.0)
+    np.testing.assert_allclose(float(schedules.lr_at(cfg, 110)), 0.0,
+                               atol=1e-6)
+    mid = float(schedules.lr_at(cfg, 60))
+    np.testing.assert_allclose(mid, 0.5, atol=1e-6)
+    # linear scaling rule
+    assert schedules.linear_scaled_lr(0.1, 65536, 256) == pytest.approx(25.6)

@@ -1,0 +1,107 @@
+"""Validate the paper-table reproduction: the calibrated model must
+reproduce the paper's *relative* findings (its contribution), and the
+bucketing/selection numbers must come from the real GradientFlow logic."""
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")
+
+from benchmarks import paper_tables
+from benchmarks.paper_workloads import (ALEXNET_TENSORS, RESNET50_TENSORS,
+                                        workload)
+
+
+def test_workload_tensor_counts_match_paper():
+    """Fig 5: AlexNet 26 tensors / 60.9M params; ResNet-50 ~152 tensors /
+    25.5M params."""
+    assert len(ALEXNET_TENSORS) == 26
+    total = sum(s for _, s in ALEXNET_TENSORS)
+    assert abs(total - 60.9e6) / 60.9e6 < 0.02
+    # paper says 152 tensors; our generator counts downsample-BN pairs
+    # separately (161) — same distribution shape, same total params
+    assert 150 <= len(RESNET50_TENSORS) <= 165
+    total = sum(s for _, s in RESNET50_TENSORS)
+    assert abs(total - 25.5e6) / 25.5e6 < 0.03
+
+
+def test_alexnet_top_layers_hold_most_params():
+    """Fig 13: the top (FC) layers hold ~96% of AlexNet's parameters."""
+    total = sum(s for _, s in ALEXNET_TENSORS)
+    fc = sum(s for n, s in ALEXNET_TENSORS if n.startswith("fc"))
+    assert fc / total > 0.94
+
+
+@pytest.fixture(scope="module")
+def t1():
+    return {r["combo"]: r for r in paper_tables.table1_alexnet()}
+
+
+@pytest.fixture(scope="module")
+def t2():
+    return {r["combo"]: r for r in paper_tables.table2_resnet50()}
+
+
+def test_optimization_ordering_matches_paper(t1, t2):
+    """Every optimization must help (or not hurt), in the paper's order."""
+    order = [c for c, _ in paper_tables.COMBOS]
+    for table in (t1, t2):
+        tps = [table[c]["model_img_s"] for c in order]
+        assert all(b >= a * 0.999 for a, b in zip(tps, tps[1:])), tps
+
+
+def test_lazy_allreduce_gain_is_large_for_alexnet(t1):
+    """Table 1: LA gives AlexNet a >2x jump over NCCL+MP+Overlap
+    (paper: 349K -> 780K)."""
+    gain = (t1["NCCL+MP+LA+Overlap"]["model_img_s"]
+            / t1["NCCL+MP+Overlap"]["model_img_s"])
+    assert gain > 2.0
+
+
+def test_csc_helps_alexnet_not_resnet(t1, t2):
+    """The paper's headline asymmetry: CSC speeds AlexNet ~2x on top of LA
+    (Table 1) but leaves ResNet-50 nearly unchanged (Table 2) because
+    ResNet is not traffic-bound."""
+    a_gain = (t1["NCCL+MP+LA+CSC+Overlap"]["model_img_s"]
+              / t1["NCCL+MP+LA+Overlap"]["model_img_s"])
+    r_gain = (t2["NCCL+MP+LA+CSC+Overlap"]["model_img_s"]
+              / t2["NCCL+MP+LA+Overlap"]["model_img_s"])
+    assert a_gain > 1.5
+    assert r_gain < 1.1
+
+
+def test_absolute_throughput_within_2x_of_paper(t1, t2):
+    """Loose absolute-fidelity check on the calibrated model (relative
+    effects are the target; absolutes should still be the right scale)."""
+    for table, combos in [(t1, ["NCCL", "NCCL+MP", "NCCL+MP+LA+Overlap",
+                                "NCCL+MP+LA+CSC+Overlap"]),
+                          (t2, ["NCCL", "NCCL+MP+LA+Overlap"])]:
+        for c in combos:
+            ratio = table[c]["model_img_s"] / table[c]["paper_img_s"]
+            assert 0.5 < ratio < 2.0, (c, ratio)
+
+
+def test_wire_bytes_use_real_gradientflow_logic(t1):
+    """CSC wire bytes must equal k-chunks * 32K * 2B from the actual
+    selection arithmetic (85% sparsity on the real padded pool)."""
+    row = t1["NCCL+MP+LA+CSC+Overlap"]
+    from repro.core.schedule import num_selected_chunks
+    w = workload("alexnet")
+    import math
+    n_chunks = math.ceil(w["params"] / 32768)
+    k = num_selected_chunks(0.85, n_chunks)
+    expected = k * 32768 * 2
+    assert abs(row["wire_MB"] * 2 ** 20 - expected) / expected < 0.05
+
+
+def test_end_to_end_times_scale_with_paper():
+    rows = {(r["model"], r["combo"]): r
+            for r in paper_tables.tables34_end_to_end()}
+    alex_dense = rows[("alexnet", "DenseCommu")]["model_minutes"]
+    alex_sparse = rows[("alexnet", "SparseCommu")]["model_minutes"]
+    assert alex_sparse < alex_dense
+    # paper: 2.6 min dense / 1.5 min sparse; model within 2x
+    assert 1.3 < alex_dense < 5.2
+    assert 0.75 < alex_sparse < 3.0
+    res = rows[("resnet50", "DenseCommu")]["model_minutes"]
+    assert 3.6 < res < 14.6  # paper: 7.3 min

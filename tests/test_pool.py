@@ -1,0 +1,97 @@
+"""GradientPool unit + property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pool import GradientPool
+
+
+def make_tree(sizes):
+    """Deterministic pytree with leaves of the given flat sizes."""
+    tree = {}
+    for i, n in enumerate(sizes):
+        shape = (n,) if n < 6 else (2, n // 2) if n % 2 == 0 else (n,)
+        tree[f"t{i}"] = jnp.arange(int(np.prod(shape)),
+                                   dtype=jnp.float32).reshape(shape) + i
+    return tree
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 300), min_size=1, max_size=8),
+    pad_to=st.sampled_from([1, 8, 64, 256]),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_ravel_unravel_roundtrip(sizes, pad_to):
+    tree = make_tree(sizes)
+    pool = GradientPool(tree, pad_to=pad_to)
+    assert pool.size % pad_to == 0
+    assert pool.size - pool.unpadded_size < pad_to
+    flat = pool.ravel(tree)
+    assert flat.shape == (pool.size,)
+    back = pool.unravel(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 500), min_size=1, max_size=10),
+    theta=st.integers(1, 2000),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_bucket_boundaries_partition(sizes, theta):
+    tree = make_tree(sizes)
+    pool = GradientPool(tree, pad_to=16)
+    bounds = pool.bucket_boundaries(theta)
+    # exact partition of [0, size)
+    assert bounds[0][0] == 0
+    assert bounds[-1][1] == pool.size
+    for (s0, e0), (s1, e1) in zip(bounds, bounds[1:]):
+        assert e0 == s1
+        assert e0 > s0
+    # every bucket except the last holds >= theta elements (the paper's
+    # "wait until the waited tensors exceed theta" rule)
+    for s, e in bounds[:-1]:
+        assert e - s >= min(theta, pool.size)
+
+
+def test_reverse_generation_order():
+    """The pool must start with the LAST-flattened (top/head) tensors —
+    backward produces them first (paper Fig 15)."""
+    tree = {"a_embed": jnp.zeros((4,)), "z_head": jnp.ones((4,))}
+    pool = GradientPool(tree)
+    assert pool.specs[0].name == "z_head"
+    assert pool.specs[0].offset == 0
+    assert pool.specs[1].name == "a_embed"
+    flat = pool.ravel(tree)
+    np.testing.assert_array_equal(np.asarray(flat[:4]), np.ones(4))
+
+
+def test_segment_ids():
+    tree = make_tree([5, 7, 3])
+    pool = GradientPool(tree, pad_to=8)
+    ids = pool.segment_ids()
+    assert ids.shape == (pool.size,)
+    for i, spec in enumerate(pool.specs):
+        assert (ids[spec.offset:spec.offset + spec.size] == i).all()
+    if pool.padding:
+        assert (ids[pool.unpadded_size:] == len(pool.specs)).all()
+
+
+def test_single_bucket_modes():
+    tree = make_tree([100, 100])
+    pool = GradientPool(tree)
+    assert pool.bucket_boundaries(0) == [(0, pool.size)]
+    assert pool.bucket_boundaries(10 ** 9) == [(0, pool.size)]
+
+
+def test_dtype_cast_on_ravel():
+    tree = make_tree([16])
+    pool = GradientPool(tree)
+    flat = pool.ravel(tree, dtype=jnp.bfloat16)
+    assert flat.dtype == jnp.bfloat16
+    back = pool.unravel(flat.astype(jnp.float32))
+    assert jax.tree_util.tree_leaves(back)[0].dtype == jnp.float32

@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GradientFlowConfig, OptimizerConfig
+from repro.core import csc
+from repro.core.pool import GradientPool
+from repro.core.schedule import build_stages, num_selected_chunks
+from repro.kernels import ref
+from repro.optim import sgd
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 200), min_size=1, max_size=6),
+    theta=st.integers(1, 500),
+    seed=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_bucketed_sum_equals_whole_pool_sum(sizes, theta, seed):
+    """Lazy allreduce is sum-preserving regardless of bucket layout:
+    concatenating per-bucket sums == summing the whole pool (single-device
+    analogue of the collective invariant)."""
+    tree = {f"t{i}": jnp.zeros((n,)) for i, n in enumerate(sizes)}
+    pool = GradientPool(tree, pad_to=8)
+    g = jax.random.normal(jax.random.PRNGKey(seed), (pool.size,))
+    parts = [g[s:e] for s, e in pool.bucket_boundaries(theta)]
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(parts)),
+                               np.asarray(g), rtol=0)
+
+
+@hypothesis.given(
+    nchunks=st.integers(2, 64),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 50),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_selection_is_topk_and_deterministic(nchunks, k, seed):
+    k = min(k, nchunks)
+    norms = jax.random.uniform(jax.random.PRNGKey(seed), (nchunks,))
+    idx1, mask1 = csc.select_chunks(norms, k)
+    idx2, mask2 = csc.select_chunks(norms, k)
+    np.testing.assert_array_equal(np.asarray(idx1), np.asarray(idx2))
+    assert int(mask1.sum()) == k
+    # selected chunks have norms >= every unselected chunk's norm
+    sel = np.asarray(norms)[np.asarray(idx1)]
+    unsel = np.asarray(norms)[~np.asarray(mask1)]
+    if unsel.size:
+        assert sel.min() >= unsel.max() - 1e-7
+
+
+@hypothesis.given(
+    sparsity=st.floats(0.0, 0.99),
+    warmup=st.integers(0, 1000),
+    stages=st.integers(1, 8),
+    nchunks=st.integers(1, 500),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_warmup_stages_monotone_and_bounded(sparsity, warmup, stages,
+                                            nchunks):
+    cfg = GradientFlowConfig(mode="csc", sparsity=sparsity,
+                             warmup_steps=warmup, warmup_stages=stages)
+    built = build_stages(cfg, nchunks)
+    sp = [s.sparsity for s in built]
+    ks = [s.num_selected for s in built]
+    assert sp == sorted(sp)
+    assert ks == sorted(ks, reverse=True)
+    assert all(1 <= k <= nchunks for k in ks)
+    assert built[0].first_step == 0
+    firsts = [s.first_step for s in built]
+    assert firsts == sorted(firsts)
+
+
+@hypothesis.given(
+    n=st.integers(16, 512),
+    mask_frac=st.floats(0.0, 1.0),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 20),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_masked_update_touches_only_masked(n, mask_frac, lr, seed):
+    """For any mask, the update is the identity off-mask and the dense
+    update on-mask (Algorithm 1's update-step contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    master = jax.random.normal(ks[0], (n,))
+    grads = jax.random.normal(ks[1], (n,))
+    mom = jax.random.normal(ks[2], (n,))
+    mask = jax.random.bernoulli(ks[3], mask_frac, (n,))
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=1e-3)
+    new_m, st2 = sgd.update_pool(master, grads, sgd.SGDState(mom), mask,
+                                 cfg, lr=lr)
+    m = np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(new_m)[~m],
+                                  np.asarray(master)[~m])
+    np.testing.assert_array_equal(np.asarray(st2.momentum)[~m],
+                                  np.asarray(mom)[~m])
+    dense_m, dense_s = sgd.update_pool(master, grads, sgd.SGDState(mom),
+                                       jnp.ones((n,), bool), cfg, lr=lr)
+    np.testing.assert_allclose(np.asarray(new_m)[m],
+                               np.asarray(dense_m)[m], rtol=1e-6)
+
+
+@hypothesis.given(
+    rows=st.integers(1, 6),
+    cols=st.integers(1, 64),
+    new_n=st.integers(1, 8),
+    seed=st.integers(0, 20),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_hg_reshard_preserves_totals(rows, cols, new_n, seed):
+    """Elastic hg redistribution preserves the column totals (the only
+    quantity the algorithm consumes)."""
+    from repro.checkpoint.reshard import reshard_hg
+    hg = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                      (rows, cols)))
+    new = reshard_hg(hg, new_n)
+    assert new.shape == (new_n, cols)
+    np.testing.assert_allclose(new.sum(axis=0), hg.sum(axis=0), atol=1e-5)
+
+
+@hypothesis.given(
+    nchunks=st.integers(1, 32),
+    chunk=st.sampled_from([16, 64]),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 20),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_compact_scatter_inverse(nchunks, chunk, k, seed):
+    """scatter(compact(x)) restores exactly the selected chunks."""
+    k = min(k, nchunks)
+    pool = jax.random.normal(jax.random.PRNGKey(seed), (nchunks * chunk,))
+    idx = jnp.sort(jax.random.permutation(
+        jax.random.PRNGKey(seed + 1), nchunks)[:k]).astype(jnp.int32)
+    wire = csc.compact_chunks(pool, idx, chunk)
+    back = csc.scatter_chunks(jnp.zeros_like(pool), idx, wire, chunk)
+    mask = np.zeros(nchunks, bool)
+    mask[np.asarray(idx)] = True
+    emask = np.repeat(mask, chunk)
+    np.testing.assert_array_equal(np.asarray(back)[emask],
+                                  np.asarray(pool)[emask])
+    np.testing.assert_array_equal(np.asarray(back)[~emask], 0.0)

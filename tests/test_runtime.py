@@ -1,0 +1,147 @@
+"""Fault tolerance, straggler mitigation, elastic controller."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime import (ElasticController, Preempted, StragglerDetector,
+                           SupervisorConfig, TrainSupervisor)
+from repro.runtime.elastic import candidates_for
+
+
+# -- stragglers ---------------------------------------------------------------
+
+def test_straggler_detector_flags_persistent_slow_host():
+    det = StragglerDetector(num_hosts=8, threshold=1.5, patience=3,
+                            remesh_after=6)
+    base = [1.0] * 8
+    for i in range(2):
+        rep = det.observe(base)
+        assert rep.action == "none"
+    slow = list(base)
+    slow[3] = 5.0
+    actions = []
+    for i in range(8):
+        rep = det.observe(slow)
+        actions.append(rep.action)
+    assert "rebatch" in actions          # after `patience` windows
+    assert actions[-1] == "remesh"       # after `remesh_after` windows
+    assert det.observe(slow).slow_hosts == [3]
+
+
+def test_straggler_rebatch_lr_rescale():
+    det = StragglerDetector(num_hosts=4, patience=1, remesh_after=100)
+    rep = det.observe([1.0, 1.0, 1.0, 9.0])
+    assert rep.action == "rebatch"
+    assert rep.lr_rescale == pytest.approx(0.75)
+
+
+def test_straggler_recovery_resets_flags():
+    det = StragglerDetector(num_hosts=4, patience=2, alpha=1.0)
+    det.observe([1, 1, 1, 5])
+    rep = det.observe([1, 1, 1, 1])
+    assert rep.action == "none"
+    assert det.flags[3] == 0
+
+
+# -- elastic ------------------------------------------------------------------
+
+def test_elastic_candidates():
+    c = candidates_for(256, model_parallel=16)
+    assert c.shape == (16, 16)
+    c = candidates_for(512, model_parallel=16, pods=2)
+    assert c.shape == (2, 16, 16)
+    assert candidates_for(250, model_parallel=16) is None
+
+
+def test_elastic_controller_respects_batch():
+    ctl = ElasticController(model_parallel=16, global_batch=256)
+    c = ctl.propose(healthy_devices=256)
+    assert c.shape == (16, 16)
+    # 240 devices -> data=15, 256 % 15 != 0 -> step down to data=14... until
+    # a divisor of 256 is found (data=8 -> 128 devices)
+    c = ctl.propose(healthy_devices=240)
+    assert c is not None
+    data_total = c.num_devices // 16
+    assert 256 % data_total == 0
+
+
+# -- supervisor ---------------------------------------------------------------
+
+def _mini_state():
+    return {"x": jnp.zeros((4,)), "step_val": jnp.asarray(0, jnp.int32)}
+
+
+def test_supervisor_restart_from_checkpoint(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=5,
+                                                 max_restarts=2))
+    calls = {"n": 0}
+    faulted = {"done": False}
+
+    def step_fn(step, state):
+        calls["n"] += 1
+        return {"x": state["x"] + 1.0,
+                "step_val": jnp.asarray(step + 1, jnp.int32)}
+
+    def fault(step):
+        if step == 7 and not faulted["done"]:
+            faulted["done"] = True
+            raise RuntimeError("injected node failure")
+
+    final = sup.run(_mini_state(), 0, 12, step_fn, fault_injector=fault)
+    # restart went back to the step-5 checkpoint and replayed 5..11
+    assert float(final["x"][0]) == 12.0
+    assert sup.restarts == 1
+    assert calls["n"] == 12 + (7 - 5)  # replayed two steps
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=100,
+                                                 max_restarts=2))
+
+    def step_fn(step, state):
+        raise RuntimeError("always failing")
+
+    with pytest.raises(RuntimeError):
+        sup.run(_mini_state(), 0, 5, step_fn)
+    assert sup.restarts == 3
+
+
+def test_supervisor_preemption_checkpoints(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=100))
+
+    def step_fn(step, state):
+        if step == 3:
+            sup.request_preemption()
+        return {"x": state["x"] + 1.0,
+                "step_val": jnp.asarray(step + 1, jnp.int32)}
+
+    with pytest.raises(Preempted):
+        sup.run(_mini_state(), 0, 10, step_fn)
+    # the pre-exit blocking checkpoint must exist at the preempted step
+    assert ckpt.latest_step() == 4
+
+
+def test_supervisor_on_restore_skips_data(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=2,
+                                                 max_restarts=1))
+    restored_steps = []
+    faulted = {"done": False}
+
+    def step_fn(step, state):
+        return {"x": state["x"] + 1.0,
+                "step_val": jnp.asarray(step + 1, jnp.int32)}
+
+    def fault(step):
+        if step == 5 and not faulted["done"]:
+            faulted["done"] = True
+            raise RuntimeError("boom")
+
+    sup.run(_mini_state(), 0, 8, step_fn,
+            on_restore=restored_steps.append, fault_injector=fault)
+    assert restored_steps == [4]
