@@ -1,75 +1,59 @@
-"""Analytic ring-allreduce cost model (alpha-beta with small-message
-effective bandwidth), calibrated to the paper's clusters.
+"""Analytic ring-allreduce cost model — benchmark-facing shim.
 
-The container has no 56 Gbps fabric, so the paper-table benchmarks combine
-(a) the REAL GradientFlow bucketing/selection logic — actual bucket layouts
-from the paper's tensor-size distributions — with (b) this cost model for
-the wire time. Constants are calibrated so the NCCL curve matches the
-paper's Figure 8 shape (rises to peak past ~64 MB, poor below 1 MB).
+The calibrated alpha-beta model (Fabric presets, ring/reduce-scatter/
+all-gather times, effective throughput) was promoted into the library at
+``repro.parallel.cost_model`` so the topology-aware collective backend can
+price algorithms at build time; this module re-exports it for the
+paper-table benchmarks and adds the per-algorithm comparison the backend's
+auto-selector is judged against.
 
-t_ring(M, N) = 2(N-1) * (alpha + (M/N) / bw_eff(M/N))
-bw_eff(s)    = BW_peak * s / (s + s_half)       [half-performance size]
+Run directly for the algorithm-selection table on the paper's Cluster-V
+fabric (56 Gbps IB, 8 V100s/node):
+
+  PYTHONPATH=src python benchmarks/comm_model.py
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Sequence
+from typing import Dict, List
+
+from repro.parallel.cost_model import (  # noqa: F401  (re-exports)
+    Fabric, GLOO_56G, INTRA_NODE, MPI_56G, NCCL_56G, all_gather_time,
+    allreduce_sequence_time, bw_eff, effective_throughput,
+    hierarchical_allreduce_time, reduce_scatter_time, ring_allreduce_time)
+from repro.parallel.topology import (REGISTRY, Topology, select_algorithm)
+
+CLUSTER_V = Topology.cluster_v(nodes=64, gpus_per_node=8)  # N = 512
 
 
-@dataclasses.dataclass(frozen=True)
-class Fabric:
-    name: str
-    bw_peak: float      # bytes/s achievable by the backend on this fabric
-    alpha: float        # per-ring-step latency (s)
-    s_half: float       # half-performance message size (bytes)
+def algo_comparison(msg_bytes: float,
+                    topo: Topology = CLUSTER_V) -> Dict[str, object]:
+    """Predicted wire time per registered algorithm + the auto pick."""
+    row: Dict[str, object] = {"msg_MB": msg_bytes / 2 ** 20}
+    for name, algo in REGISTRY.items():
+        if algo.applicable(topo):
+            row[f"t_{name}_ms"] = algo.predicted_time(msg_bytes, topo) * 1e3
+    picked, t = select_algorithm(msg_bytes, topo)
+    row["auto"] = picked.name
+    row["t_auto_ms"] = t * 1e3
+    return row
 
 
-# 56 Gbps IB = 7 GB/s line rate. Backends reach different fractions of it
-# (Fig 8: NCCL ~ near line rate at >=64MB; OpenMPI plateaus much lower).
-# Calibration anchors (Cluster-V, N=512, paper Tables 1-2):
-#   NCCL+MP AlexNet dense-26-msg comm ~ 170 ms  -> alpha = 5 us
-#   NCCL+MP+LA 4-bucket comm ~ 60 ms            -> near-peak big-message bw
-#   MPI AlexNet ~ 1.1 s / ResNet ~ 1.7 s        -> alpha = 15 us, 1.2 GB/s
-NCCL_56G = Fabric("nccl-56G", bw_peak=6.5e9, alpha=5e-6, s_half=16e3)
-MPI_56G = Fabric("mpi-56G", bw_peak=0.75e9, alpha=15e-6, s_half=256e3)
-# Gloo (PyTorch default in §2.3) — the paper measured 3.3% utilization.
-GLOO_56G = Fabric("gloo-56G", bw_peak=0.25e9, alpha=60e-6, s_half=1e6)
+def algo_selection_table(topo: Topology = CLUSTER_V) -> List[Dict]:
+    """Fig-8-style sweep, per algorithm: the auto column must never lose
+    to the flat ring (flat is in its candidate set)."""
+    return [algo_comparison(mb * 2 ** 20, topo)
+            for mb in [0.25, 1, 4, 16, 64, 256, 1024]]
 
 
-def bw_eff(fabric: Fabric, per_step_bytes: float) -> float:
-    return fabric.bw_peak * per_step_bytes / (per_step_bytes
-                                              + fabric.s_half)
+def main() -> None:
+    print(f"Collective algorithm selection on Cluster-V "
+          f"({CLUSTER_V.num_devices} GPUs, 56 Gbps inter-node)")
+    rows = algo_selection_table()
+    cols = [c for c in rows[0] if c != "auto"]
+    print("  ".join(f"{c:>12}" for c in cols) + "  auto")
+    for r in rows:
+        print("  ".join(f"{r[c]:>12.2f}" for c in cols) + f"  {r['auto']}")
 
 
-def ring_allreduce_time(msg_bytes: float, n: int, fabric: Fabric) -> float:
-    """One ring allreduce of msg_bytes over n ranks."""
-    if msg_bytes <= 0:
-        return 0.0
-    per_step = msg_bytes / n
-    steps = 2 * (n - 1)
-    return steps * (fabric.alpha + per_step / bw_eff(fabric, per_step))
-
-
-def hierarchical_allreduce_time(msg_bytes: float, n: int, group: int,
-                                fabric: Fabric,
-                                intra_bw: float = 10e9) -> float:
-    """NCCL-H (Fig 7b): intra-group reduce + inter-group ring + broadcast.
-    Intra-group ops are NOT bandwidth optimal (the paper's observation)."""
-    m = n // group
-    t_intra = 2 * (msg_bytes / intra_bw + fabric.alpha * group)
-    per_step = msg_bytes / m
-    t_inter = 2 * (m - 1) * (fabric.alpha
-                             + per_step / bw_eff(fabric, per_step))
-    return t_intra + t_inter
-
-
-def allreduce_sequence_time(messages: Sequence[float], n: int,
-                            fabric: Fabric) -> float:
-    """Total wire time of a sequence of allreduces (no overlap)."""
-    return sum(ring_allreduce_time(m, n, fabric) for m in messages)
-
-
-def effective_throughput(msg_bytes: float, n: int, fabric: Fabric) -> float:
-    """Algorithm bandwidth (bytes/s): payload / time (the Fig 8 y-axis)."""
-    t = ring_allreduce_time(msg_bytes, n, fabric)
-    return msg_bytes / t if t else float("inf")
+if __name__ == "__main__":
+    main()

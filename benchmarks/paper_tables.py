@@ -21,10 +21,11 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.comm_model import (Fabric, GLOO_56G, MPI_56G, NCCL_56G,
-                                   allreduce_sequence_time,
+from benchmarks.comm_model import (CLUSTER_V, Fabric, GLOO_56G, MPI_56G,
+                                   NCCL_56G, allreduce_sequence_time,
                                    effective_throughput,
                                    ring_allreduce_time)
+from repro.parallel.topology import REGISTRY, Topology, select_algorithm
 from benchmarks.paper_workloads import (PAPER_TABLE1_ALEXNET_V,
                                         PAPER_TABLE2_RESNET_V, workload)
 from repro.core.pool import GradientPool
@@ -140,6 +141,36 @@ def fig8_allreduce_sweep() -> List[Dict]:
                 "backend": fab.name, "msg_MB": mb,
                 "algo_GBps": effective_throughput(msg, N_GPUS, fab) / 1e9,
             })
+    return rows
+
+
+def table_collective_algos(topo: Topology = CLUSTER_V) -> List[Dict]:
+    """Per-algorithm predicted wire time over the REAL lazy bucket layouts.
+
+    For each workload the pool is θ-bucketed exactly as GradientFlow would
+    (tensor-aligned boundaries), then each registered collective algorithm
+    prices the whole bucket sequence on the Cluster-V topology; the 'auto'
+    column selects per bucket. auto ≤ flat by construction — the
+    topology-backend acceptance bar (tests/test_topology.py).
+    """
+    rows = []
+    for name in ("alexnet", "resnet50"):
+        w = workload(name)
+        pool = _pool_for(w["tensors"])
+        bounds = pool.bucket_boundaries(THETA)
+        msgs = [(e - s) * 2 for s, e in bounds]  # fp16 wire
+        row: Dict[str, object] = {
+            "model": name, "pool_MB": pool.size * 2 / 2 ** 20,
+            "buckets": len(bounds),
+        }
+        for aname, algo in REGISTRY.items():
+            if algo.applicable(topo):
+                row[f"t_{aname}_ms"] = 1e3 * sum(
+                    algo.predicted_time(m, topo) for m in msgs)
+        picks = [select_algorithm(m, topo) for m in msgs]
+        row["t_auto_ms"] = 1e3 * sum(t for _, t in picks)
+        row["auto_algos"] = sorted({a.name for a, _ in picks})
+        rows.append(row)
     return rows
 
 

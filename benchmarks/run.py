@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * table1 / table2 — AlexNet / ResNet-50 optimization-combo throughput
                       (REAL GradientFlow bucketing + comm model) vs paper
   * table3_4        — end-to-end training-time reproduction
+  * collective_algos — per-algorithm predicted wire time on Cluster-V
+                      over the real lazy bucket layouts (topology backend)
   * roofline        — per-cell terms from the dry-run (if results exist)
 """
 from __future__ import annotations
@@ -42,6 +44,15 @@ def main() -> None:
                  if r["paper_minutes"] else "")
         rows.append((f"table3_4/{r['model']}/{r['combo']}", "",
                      f"model={r['model_minutes']:.1f}min{paper}"))
+
+    # Topology backend: per-algorithm predicted wire time over the REAL
+    # lazy bucket layouts on Cluster-V (auto must never lose to flat).
+    for r in paper_tables.table_collective_algos():
+        algo_ms = " ".join(
+            f"{k[2:-3]}={r[k]:.1f}ms" for k in sorted(r) if k.startswith("t_"))
+        rows.append((f"collective_algos/{r['model']}", "",
+                     f"pool={r['pool_MB']:.0f}MB buckets={r['buckets']} "
+                     f"{algo_ms} picked={'+'.join(r['auto_algos'])}"))
 
     try:
         from benchmarks import roofline

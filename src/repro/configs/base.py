@@ -8,6 +8,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping, Optional, Sequence, Tuple
 
+from repro.parallel.topology import Topology
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -122,11 +124,21 @@ class GradientFlowConfig:
     # len(warmup_stages) discrete compiled stages.
     warmup_steps: int = 0
     warmup_stages: int = 4
-    # Reduction axes (mesh axis names) — e.g. ('data',) or ('pod','data').
+    # Reduction axes (mesh axis names), slowest level first — e.g.
+    # ('data',) or ('pod', 'data').
     reduce_axes: Tuple[str, ...] = ("data",)
-    # Hierarchical two-level reduce: reduce-scatter+all-gather over 'data'
-    # then cross-pod psum on the scattered shard (beyond-paper option).
-    hierarchical: bool = False
+    # Collective algorithm: 'flat' (single ring psum), 'two_level'
+    # (reduce-scatter → psum → all-gather; the old hierarchical=True),
+    # 'tree' (k-level), or 'auto' — pick per bucket from the cost model.
+    # 'auto' without a topology falls back to 'flat'.
+    collective_algo: str = "auto"
+    # Bandwidth/latency model of the reduction mesh (one Level per entry of
+    # reduce_axes, slowest first). Trainer derives it from the jax Mesh
+    # when left None; required for 'auto' selection and auto_bucket.
+    topology: Optional[Topology] = None
+    # Auto-tune the lazy-allreduce θ from the topology's cost model
+    # (overrides bucket_elems when a topology is available).
+    auto_bucket: bool = False
     # Use Pallas fused kernels where available (CPU falls back to ref).
     use_kernels: bool = False
 

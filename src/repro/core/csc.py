@@ -110,6 +110,7 @@ def csc_reduce(
     num_selected: int,
     bucket_boundaries: Sequence[Tuple[int, int]],
     num_data_shards: int,
+    algo=None,
 ) -> CSCReduceResult:
     """One CSC reduction (Fig 17 + Algorithm 1 preprocess step).
 
@@ -122,6 +123,9 @@ def csc_reduce(
         "relies on lazy allreduce" (paper §3.2): the compacted selection is
         itself transmitted in fused θ buckets.
       num_data_shards: product of data-axis sizes (for the mean).
+      algo: ReduceAlgorithm (or one per bucket) for the wire-buffer
+        collectives; None = flat ring psum. The norm census stays flat —
+        it is one tiny f32[chunks] message, below any crossover point.
     """
     chunk = cfg.chunk_elems
     momentum = cfg.momentum
@@ -142,7 +146,7 @@ def csc_reduce(
         wire = compact_chunks(g, idx, chunk)
     reduced = bucketed_reduce(
         wire, bucket_boundaries, cfg.reduce_axes, cfg.wire_dtype,
-        hierarchical=cfg.hierarchical)
+        algo=algo)
     reduced = reduced / num_data_shards  # mean over data shards
 
     # Post-reduce view: important chunks hold the mean, others local g

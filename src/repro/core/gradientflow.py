@@ -27,6 +27,7 @@ from repro.core import csc as csc_mod
 from repro.core import schedule as schedule_mod
 from repro.core.lazy_allreduce import bucketed_reduce
 from repro.core.pool import GradientPool
+from repro.parallel import topology as topo_mod
 
 
 class GFState(NamedTuple):
@@ -49,10 +50,31 @@ class GradientFlow:
         else:
             self.num_chunks = 0
         self.stages = schedule_mod.build_stages(cfg, max(self.num_chunks, 1))
-        # Static bucket layouts.
+        # Static bucket layouts. θ comes from the config, or — when
+        # auto_bucket is on and a topology is known — from the cost-model
+        # tuner (docs/collectives.md).
         self._dense_bounds = tuple(
             (s.offset, s.offset + s.size) for s in pool.specs)
-        self._lazy_bounds = tuple(pool.bucket_boundaries(cfg.bucket_elems))
+        self.bucket_elems = cfg.bucket_elems
+        if cfg.auto_bucket and cfg.topology is not None:
+            self.bucket_elems, bounds = topo_mod.auto_bucket_boundaries(
+                pool, cfg.wire_dtype, cfg.topology,
+                collective_algo=cfg.collective_algo)
+            self._lazy_bounds = tuple(bounds)
+        else:
+            self._lazy_bounds = tuple(
+                pool.bucket_boundaries(self.bucket_elems))
+        # Per-bucket collective algorithms, resolved once at build time.
+        self._dense_algos = self._algos_for(self._dense_bounds)
+        self._lazy_algos = self._algos_for(self._lazy_bounds)
+
+    def _algos_for(self, bounds) -> tuple:
+        """One ReduceAlgorithm per bucket (auto-selected by byte size)."""
+        elt = jnp.dtype(self.cfg.wire_dtype).itemsize
+        return tuple(
+            topo_mod.resolve_algorithm(self.cfg.collective_algo,
+                                       self.cfg.topology, (e - s) * elt)
+            for s, e in bounds)
 
     # -- state -------------------------------------------------------------
 
@@ -100,7 +122,7 @@ class GradientFlow:
                 # CSC state must keep tracking norms for the handoff.
                 return self._dense_or_lazy_with_norms(pool_grads, state)
             wire_bounds = csc_mod.wire_bucket_boundaries(
-                k, cfg.chunk_elems, cfg.bucket_elems)
+                k, cfg.chunk_elems, self.bucket_elems)
             res = csc_mod.csc_reduce(
                 pool_grads,
                 csc_mod.CSCState(hg=state.hg, chunk_norms=state.chunk_norms),
@@ -108,15 +130,16 @@ class GradientFlow:
                 num_selected=k,
                 bucket_boundaries=wire_bounds,
                 num_data_shards=self.num_data_shards,
+                algo=self._algos_for(wire_bounds),
             )
             return res.grads, res.elem_mask, GFState(
                 hg=res.state.hg, chunk_norms=res.state.chunk_norms)
 
-        bounds = (self._dense_bounds if cfg.mode == "dense"
-                  else self._lazy_bounds)
+        dense = cfg.mode == "dense"
+        bounds = self._dense_bounds if dense else self._lazy_bounds
+        algos = self._dense_algos if dense else self._lazy_algos
         summed = bucketed_reduce(pool_grads, bounds, cfg.reduce_axes,
-                                 cfg.wire_dtype,
-                                 hierarchical=cfg.hierarchical)
+                                 cfg.wire_dtype, algo=algos)
         mean = summed / self.num_data_shards
         mask = jnp.ones(mean.shape, dtype=jnp.bool_)
         return mean, mask, state
@@ -129,8 +152,7 @@ class GradientFlow:
         cfg = self.cfg
         g = pool_grads.astype(jnp.float32) + state.hg
         summed = bucketed_reduce(g, self._lazy_bounds, cfg.reduce_axes,
-                                 cfg.wire_dtype,
-                                 hierarchical=cfg.hierarchical)
+                                 cfg.wire_dtype, algo=self._lazy_algos)
         mean = summed / self.num_data_shards
         l1 = csc_mod.chunk_l1_norms(mean, cfg.chunk_elems)
         from repro.parallel.collectives import reduce_pool
@@ -167,4 +189,4 @@ class GradientFlow:
         if stage.num_selected >= self.num_chunks:
             return len(self._lazy_bounds) + 1
         return len(csc_mod.wire_bucket_boundaries(
-            stage.num_selected, cfg.chunk_elems, cfg.bucket_elems)) + 1
+            stage.num_selected, cfg.chunk_elems, self.bucket_elems)) + 1

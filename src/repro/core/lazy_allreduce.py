@@ -10,15 +10,29 @@ top layers' gradients, available earliest).
 
 ``bucket_elems == 0`` reproduces the paper's *disable-overlap* setting:
 a single fused allreduce over the whole pool after backward.
+
+The reduction itself is delegated to a ``ReduceAlgorithm`` from
+``repro.parallel.topology`` (flat ring / two-level / k-level tree) —
+either one algorithm for every bucket or one per bucket, the layout the
+topology auto-selector produces.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.parallel.collectives import reduce_pool
+
+# One algorithm for all buckets, or one per bucket (len == len(boundaries)).
+AlgoSpec = Union[None, object, Sequence[object]]
+
+
+def _algo_for(algo: AlgoSpec, i: int):
+    if algo is None or hasattr(algo, "reduce"):
+        return algo
+    return algo[i]
 
 
 def bucketed_reduce(
@@ -27,7 +41,7 @@ def bucketed_reduce(
     axes: Sequence[str],
     wire_dtype,
     *,
-    hierarchical: bool = False,
+    algo: AlgoSpec = None,
     accum_dtype=jnp.float32,
 ) -> jax.Array:
     """Reduce the 1-D pool across data axes in fused buckets.
@@ -35,14 +49,15 @@ def bucketed_reduce(
     The wire dtype (paper: FP16; here default bf16) is applied per bucket —
     gradients are cast down for transport and back up to ``accum_dtype``
     after the reduce, mirroring mixed-precision communication (§2.5).
+    ``algo`` selects the collective algorithm (None = flat ring psum).
     Returns the *summed* pool in ``accum_dtype`` (caller normalizes).
     """
     wire_dtype = jnp.dtype(wire_dtype)
     parts: List[jax.Array] = []
-    for start, end in boundaries:
+    for i, (start, end) in enumerate(boundaries):
         seg = jax.lax.slice_in_dim(pool, start, end)
         seg = seg.astype(wire_dtype)
-        seg = reduce_pool(seg, axes, hierarchical=hierarchical)
+        seg = reduce_pool(seg, axes, algo=_algo_for(algo, i))
         parts.append(seg.astype(accum_dtype))
     if len(parts) == 1:
         return parts[0]

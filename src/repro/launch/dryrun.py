@@ -98,7 +98,10 @@ def build_train_cfg(arch_id: str, shape: ShapeConfig, mesh_cfg_name: str,
     gf = GradientFlowConfig(
         mode="csc", bucket_elems=16 * 1024 * 1024, chunk_elems=32768,
         sparsity=0.85, momentum=0.9, warmup_steps=200, warmup_stages=4,
-        hierarchical=optimized,
+        # Optimized profile: cost-model algorithm selection + auto θ on the
+        # mesh-derived topology (two-level reduce on the 2x16x16 mesh).
+        collective_algo="auto" if optimized else "flat",
+        auto_bucket=optimized,
     )
     opt = OptimizerConfig(name="lars", learning_rate=0.1, momentum=0.9)
     return TrainConfig(

@@ -6,9 +6,34 @@ single real CPU device; only dryrun.py forces 512 placeholder devices.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+
+from repro.parallel.cost_model import Fabric
+from repro.parallel.topology import Topology
+
+
+def mesh_topology(mesh, data_axes: Sequence[str],
+                  fabrics: Optional[Sequence[Fabric]] = None,
+                  ) -> Optional[Topology]:
+    """Bandwidth/latency levels of a mesh's data axes (slowest first).
+
+    The repo's mesh convention already orders data axes slowest-first
+    ('pod' before 'data'), so the level stack mirrors the axis tuple: on
+    the 2x16x16 production mesh, 'pod' becomes the inter-pod (56G-class)
+    level and 'data' the intra-pod level. Single-axis meshes yield a
+    one-level topology (auto-selection then degenerates to the flat
+    ring); returns None when the mesh has no data axes (pure-TP). The
+    Trainer feeds the result to GradientFlowConfig.topology when the
+    user left it None.
+    """
+    data_axes = tuple(data_axes)
+    if not data_axes:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return Topology.from_axis_sizes(
+        data_axes, [sizes[a] for a in data_axes], fabrics=fabrics)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -76,6 +76,13 @@ class Trainer:
                                              self.model_size)
         gf_cfg = dataclasses.replace(cfg.gradientflow,
                                      reduce_axes=self.data_axes)
+        if gf_cfg.topology is None and self.data_axes:
+            # Derive bandwidth/latency levels from the mesh so 'auto'
+            # algorithm selection and θ tuning have a model to price
+            # against (see repro.parallel.topology).
+            from repro.launch.mesh import mesh_topology
+            gf_cfg = dataclasses.replace(
+                gf_cfg, topology=mesh_topology(mesh, self.data_axes))
         pad = gf_cfg.chunk_elems if gf_cfg.csc_enabled else 1
         self.pool = GradientPool(sh.abstract_params(self.local_specs),
                                  pad_to=pad)

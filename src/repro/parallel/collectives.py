@@ -3,6 +3,12 @@
 All functions assume they are called inside a shard_map whose *manual* axes
 include every name in ``axes``. The `model` axis is GSPMD-auto and never
 appears here.
+
+Axis-name convention (matches ``GradientFlowConfig.reduce_axes`` and
+``Topology``): axes are ordered outermost/slowest first — e.g.
+``('pod', 'data')`` — so ``axes[-1]`` is always the fastest (intra-node)
+level. The multi-level reductions scatter over the fast axes first, push
+the shrunken shard across the slow links, then gather back out.
 """
 from __future__ import annotations
 
@@ -12,10 +18,19 @@ import jax
 import jax.numpy as jnp
 
 
+def _one_axis_size(axis: str) -> int:
+    """Static size of a manual axis, across jax versions: lax.axis_size is
+    recent; psum of a Python scalar has always constant-folded to the axis
+    size (the classic ``psum(1, axis)`` idiom)."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis))
+    return int(jax.lax.psum(1, axis))
+
+
 def axis_size(axes: Sequence[str]) -> int:
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= _one_axis_size(a)
     return n
 
 
@@ -34,9 +49,21 @@ def _pad_to_multiple(x: jax.Array, m: int) -> Tuple[jax.Array, int]:
     return x, pad
 
 
+def _all_gather_invariant(shard: jax.Array, axis: str, n: int) -> jax.Array:
+    """All-gather via place-and-psum: semantically an all-gather with the
+    same wire bytes, but the vma system knows a psum result is device-
+    invariant (a raw all_gather keeps the varying tag and fails check_vma
+    at the shard_map boundary)."""
+    n_sh = shard.shape[0]
+    idx = jax.lax.axis_index(axis)
+    buf = jnp.zeros((n, n_sh), shard.dtype)
+    buf = jax.lax.dynamic_update_index_in_dim(buf, shard, idx, 0)
+    return jax.lax.psum(buf, axis).reshape(-1)
+
+
 def hierarchical_psum(x: jax.Array, intra_axis: str,
                       inter_axes: Sequence[str]) -> jax.Array:
-    """Two-level allreduce for multi-pod meshes (beyond-paper option).
+    """Two-level allreduce for multi-pod meshes.
 
     reduce-scatter over the (fast, intra-pod) ``intra_axis``, psum the
     scattered shard over the (slow, inter-pod) ``inter_axes``, then
@@ -47,30 +74,52 @@ def hierarchical_psum(x: jax.Array, intra_axis: str,
     """
     if not inter_axes:
         return jax.lax.psum(x, intra_axis)
-    n = jax.lax.axis_size(intra_axis)
+    n = _one_axis_size(intra_axis)
     xp, pad = _pad_to_multiple(x, n)
     shard = jax.lax.psum_scatter(xp, intra_axis, scatter_dimension=0,
                                  tiled=True)
     shard = jax.lax.psum(shard, tuple(inter_axes))
-    # Gather via place-and-psum: semantically an all-gather with the same
-    # wire bytes, but the vma system knows a psum result is device-
-    # invariant (a raw all_gather keeps the varying tag and fails
-    # check_vma at the shard_map boundary).
-    n_sh = shard.shape[0]
-    idx = jax.lax.axis_index(intra_axis)
-    buf = jnp.zeros((n, n_sh), shard.dtype)
-    buf = jax.lax.dynamic_update_index_in_dim(buf, shard, idx, 0)
-    full = jax.lax.psum(buf, intra_axis).reshape(-1)
+    full = _all_gather_invariant(shard, intra_axis, n)
+    if pad:
+        full = full[:x.shape[0]]
+    return full
+
+
+def tree_psum(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """k-level tree allreduce.
+
+    Recursively reduce-scatters from the innermost (fastest) axis outward,
+    runs the top-level psum over the outermost (slowest) axis on a shard
+    shrunk by the product of all inner level sizes, then all-gathers back
+    down. With two axes this coincides with ``hierarchical_psum``; with
+    three (e.g. ``('pod', 'host', 'data')``) the slowest link carries
+    |x| / (host*data) bytes per device instead of |x|.
+    """
+    axes = tuple(axes)
+    if len(axes) <= 1:
+        return jax.lax.psum(x, axes)
+    inner = axes[-1]
+    n = _one_axis_size(inner)
+    xp, pad = _pad_to_multiple(x, n)
+    shard = jax.lax.psum_scatter(xp, inner, scatter_dimension=0,
+                                 tiled=True)
+    shard = tree_psum(shard, axes[:-1])
+    full = _all_gather_invariant(shard, inner, n)
     if pad:
         full = full[:x.shape[0]]
     return full
 
 
 def reduce_pool(x: jax.Array, axes: Sequence[str],
-                hierarchical: bool = False) -> jax.Array:
-    """Sum ``x`` across the data-parallel axes."""
+                algo: "object | None" = None) -> jax.Array:
+    """Sum ``x`` across the data-parallel axes.
+
+    ``algo`` is a ``repro.parallel.topology.ReduceAlgorithm`` (or anything
+    with a ``reduce(x, axes)`` method); ``None`` means the flat single-ring
+    psum. The old ``hierarchical: bool`` flag grew into this object — see
+    docs/collectives.md.
+    """
     axes = tuple(axes)
-    if hierarchical and len(axes) > 1:
-        # convention: last axis name is intra-pod ('data'), the rest inter.
-        return hierarchical_psum(x, axes[-1], axes[:-1])
-    return jax.lax.psum(x, axes)
+    if algo is None:
+        return jax.lax.psum(x, axes)
+    return algo.reduce(x, axes)

@@ -1,0 +1,145 @@
+"""Analytic collective cost model (alpha-beta with small-message effective
+bandwidth), calibrated to the paper's clusters.
+
+Promoted from ``benchmarks/comm_model.py`` so the *library* — not just the
+paper-table benchmarks — can price collectives: the topology-aware backend
+(``repro.parallel.topology``) uses these functions to pick a reduce
+algorithm and a lazy-allreduce bucket size θ per pool. The benchmark module
+now re-exports from here.
+
+Primitives:
+
+  t_ring(M, N)  = 2(N-1) * (alpha + (M/N) / bw_eff(M/N))     allreduce
+  t_rs(M, N)    =  (N-1) * (alpha + (M/N) / bw_eff(M/N))     reduce-scatter
+  t_ag(M, N)    =  (N-1) * (alpha + (M/N) / bw_eff(M/N))     all-gather
+  bw_eff(s)     = BW_peak * s / (s + s_half)          [half-performance size]
+
+A ring allreduce is exactly reduce-scatter + all-gather, which is why the
+two-level/tree algorithms in ``topology.py`` price their per-level phases
+with ``reduce_scatter_time`` / ``all_gather_time`` and their top-level psum
+with ``ring_allreduce_time``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """One interconnect's alpha-beta parameters.
+
+    Hashable and frozen so it can ride inside ``GradientFlowConfig`` (via
+    ``Topology``) as a jit static argument.
+    """
+
+    name: str
+    bw_peak: float      # bytes/s achievable by the backend on this fabric
+    alpha: float        # per-ring-step latency (s)
+    s_half: float       # half-performance message size (bytes)
+
+
+# 56 Gbps IB = 7 GB/s line rate. Backends reach different fractions of it
+# (Fig 8: NCCL ~ near line rate at >=64MB; OpenMPI plateaus much lower).
+# Calibration anchors (Cluster-V, N=512, paper Tables 1-2):
+#   NCCL+MP AlexNet dense-26-msg comm ~ 170 ms  -> alpha = 5 us
+#   NCCL+MP+LA 4-bucket comm ~ 60 ms            -> near-peak big-message bw
+#   MPI AlexNet ~ 1.1 s / ResNet ~ 1.7 s        -> alpha = 15 us, 1.2 GB/s
+NCCL_56G = Fabric("nccl-56G", bw_peak=6.5e9, alpha=5e-6, s_half=16e3)
+MPI_56G = Fabric("mpi-56G", bw_peak=0.75e9, alpha=15e-6, s_half=256e3)
+# Gloo (PyTorch default in §2.3) — the paper measured 3.3% utilization.
+GLOO_56G = Fabric("gloo-56G", bw_peak=0.25e9, alpha=60e-6, s_half=1e6)
+# Intra-node PCIe/NVLink-class link (Cluster-V packs 8 V100s per node).
+# The paper's NCCL-H observation: intra-node phases are latency-cheap and
+# bandwidth-rich relative to the 56G wire.
+INTRA_NODE = Fabric("intra-node", bw_peak=10e9, alpha=1.5e-6, s_half=8e3)
+# Placeholder-device fabric for simulated host meshes (tests / dryrun).
+HOST_LOOPBACK = Fabric("host-loopback", bw_peak=20e9, alpha=1e-6,
+                       s_half=4e3)
+
+
+def bw_eff(fabric: Fabric, per_step_bytes: float) -> float:
+    return fabric.bw_peak * per_step_bytes / (per_step_bytes
+                                              + fabric.s_half)
+
+
+def ring_allreduce_time(msg_bytes: float, n: int, fabric: Fabric) -> float:
+    """One ring allreduce of msg_bytes over n ranks."""
+    if msg_bytes <= 0 or n <= 1:
+        return 0.0
+    per_step = msg_bytes / n
+    steps = 2 * (n - 1)
+    return steps * (fabric.alpha + per_step / bw_eff(fabric, per_step))
+
+
+def reduce_scatter_time(msg_bytes: float, n: int, fabric: Fabric) -> float:
+    """Ring reduce-scatter: each rank ends with a summed msg/n shard."""
+    if msg_bytes <= 0 or n <= 1:
+        return 0.0
+    per_step = msg_bytes / n
+    return (n - 1) * (fabric.alpha + per_step / bw_eff(fabric, per_step))
+
+
+def all_gather_time(msg_bytes: float, n: int, fabric: Fabric) -> float:
+    """Ring all-gather of a msg/n shard back to the full msg."""
+    return reduce_scatter_time(msg_bytes, n, fabric)
+
+
+def hierarchical_allreduce_time(msg_bytes: float, n: int, group: int,
+                                fabric: Fabric,
+                                intra_bw: float = 10e9) -> float:
+    """NCCL-H (Fig 7b): intra-group reduce + inter-group ring + broadcast.
+    Intra-group ops are NOT bandwidth optimal (the paper's observation).
+
+    Kept for the Figure-7 benchmark comparison; the library's two-level
+    algorithm (reduce-scatter based, bandwidth-optimal intra phase) is
+    priced by ``topology.TwoLevel.predicted_time``.
+    """
+    m = n // group
+    t_intra = 2 * (msg_bytes / intra_bw + fabric.alpha * group)
+    per_step = msg_bytes / m
+    t_inter = 2 * (m - 1) * (fabric.alpha
+                             + per_step / bw_eff(fabric, per_step))
+    return t_intra + t_inter
+
+
+def allreduce_sequence_time(messages: Sequence[float], n: int,
+                            fabric: Fabric) -> float:
+    """Total wire time of a sequence of allreduces (no overlap)."""
+    return sum(ring_allreduce_time(m, n, fabric) for m in messages)
+
+
+def effective_throughput(msg_bytes: float, n: int, fabric: Fabric) -> float:
+    """Algorithm bandwidth (bytes/s): payload / time (the Fig 8 y-axis)."""
+    t = ring_allreduce_time(msg_bytes, n, fabric)
+    return msg_bytes / t if t else float("inf")
+
+
+# -- overlap / bucket-size model ---------------------------------------------
+
+
+def overlapped_finish_time(bucket_times: Sequence[float],
+                           release_times: Sequence[float]) -> float:
+    """Finish time of the last collective when bucket i may start only
+    after ``release_times[i]`` (the backward compute that produces it) and
+    the comm engine is serial (one in-flight collective, §3.1's model).
+
+    Returns the absolute finish time; exposed comm for the iteration is
+    ``finish - total_backward`` clamped at 0.
+    """
+    t = 0.0
+    for bt, rel in zip(bucket_times, release_times):
+        t = max(t, rel) + bt
+    return t
+
+
+def bucket_release_times(bucket_bytes: Sequence[float],
+                         backward_s: float) -> List[float]:
+    """Model backward as producing pool bytes at a uniform rate: bucket i
+    is ready once the cumulative bytes up to and including it are done."""
+    total = sum(bucket_bytes) or 1.0
+    rel, acc = [], 0.0
+    for b in bucket_bytes:
+        acc += b
+        rel.append(backward_s * acc / total)
+    return rel

@@ -1,0 +1,339 @@
+"""Topology-aware collective backend (the boolean that became a subsystem).
+
+The paper's 410× speedup comes from matching the collective layer to the
+fabric: ring allreduce for bandwidth, fused θ buckets for latency, and a
+hierarchical variant when the cluster has unequal links (NCCL-H, Fig 7).
+This module generalizes the old ``hierarchical: bool`` flag into:
+
+* ``Topology`` — the device mesh modeled as bandwidth/latency *levels*
+  (intra-node, inter-node, inter-pod, ...), each level an axis of the
+  reduction with its own calibrated ``Fabric`` (alpha-beta parameters from
+  ``repro.parallel.cost_model``).
+* a registry of ``ReduceAlgorithm`` objects — flat ring psum, 2-level
+  reduce-scatter→psum→all-gather, k-level tree — each knowing both how to
+  *execute* inside a shard_map (``reduce``) and what it should *cost* on a
+  given topology (``predicted_time``).
+* an auto-selector (``select_algorithm``) that picks the cheapest
+  applicable algorithm per message size, and a θ auto-tuner
+  (``auto_bucket_boundaries``) that picks the lazy-allreduce bucket size
+  minimizing modeled exposed communication under backward overlap.
+
+Everything here is static Python executed at trace time: ``Topology`` is a
+frozen, hashable dataclass so it can live inside ``GradientFlowConfig``
+(a jit static argument), and algorithm selection never looks at runtime
+values — only at bucket byte sizes and the calibrated fabric constants.
+
+See docs/collectives.md for the selection math and calibration guide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.parallel import collectives
+from repro.parallel.cost_model import (Fabric, HOST_LOOPBACK, INTRA_NODE,
+                                       NCCL_56G, all_gather_time,
+                                       bucket_release_times,
+                                       overlapped_finish_time,
+                                       reduce_scatter_time,
+                                       ring_allreduce_time)
+
+
+# -- the topology model ------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    """One bandwidth/latency level of the reduction mesh.
+
+    ``axis`` is the mesh axis name the level reduces over; ``size`` its
+    degree. Levels are ordered outermost/slowest FIRST, matching
+    ``GradientFlowConfig.reduce_axes`` (e.g. ``('pod', 'data')`` — the last
+    entry is the fast intra-node level).
+    """
+
+    axis: str
+    size: int
+    fabric: Fabric
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """An ordered stack of levels, slowest first."""
+
+    levels: Tuple[Level, ...]
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return tuple(lv.axis for lv in self.levels)
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for lv in self.levels:
+            n *= lv.size
+        return n
+
+    @property
+    def innermost(self) -> Level:
+        return self.levels[-1]
+
+    @property
+    def slowest_fabric(self) -> Fabric:
+        return min((lv.fabric for lv in self.levels),
+                   key=lambda f: f.bw_peak)
+
+    def restrict(self, axes: Sequence[str]) -> "Topology":
+        """Sub-topology covering only ``axes`` (order preserved)."""
+        keep = tuple(lv for lv in self.levels if lv.axis in set(axes))
+        return Topology(levels=keep)
+
+    # -- constructors --------------------------------------------------------
+
+    @staticmethod
+    def flat(axis: str, size: int, fabric: Fabric = NCCL_56G) -> "Topology":
+        return Topology(levels=(Level(axis, size, fabric),))
+
+    @staticmethod
+    def from_axis_sizes(axes: Sequence[str], sizes: Sequence[int],
+                        fabrics: Optional[Sequence[Fabric]] = None,
+                        ) -> "Topology":
+        """Build from parallel (axes, sizes) lists, slowest first.
+
+        Without explicit ``fabrics``, the innermost level gets the
+        intra-node fabric and every outer level the 56G inter-node wire —
+        the paper's Cluster-V shape generalized to any depth.
+        """
+        axes = tuple(axes)
+        sizes = tuple(int(s) for s in sizes)
+        assert len(axes) == len(sizes) and axes, (axes, sizes)
+        if fabrics is None:
+            fabrics = [NCCL_56G] * (len(axes) - 1) + [INTRA_NODE]
+        return Topology(levels=tuple(
+            Level(a, s, f) for a, s, f in zip(axes, sizes, fabrics)))
+
+    @staticmethod
+    def cluster_v(nodes: int = 64, gpus_per_node: int = 8) -> "Topology":
+        """The paper's Cluster-V: V100 nodes on the 56 Gbps fabric."""
+        return Topology.from_axis_sizes(
+            ("node", "gpu"), (nodes, gpus_per_node),
+            fabrics=(NCCL_56G, INTRA_NODE))
+
+    @staticmethod
+    def host_mesh(axes: Sequence[str], sizes: Sequence[int]) -> "Topology":
+        """Simulated host-platform mesh (tests / dryrun): every level is
+        the loopback fabric, so auto-selection degenerates gracefully."""
+        return Topology.from_axis_sizes(
+            axes, sizes, fabrics=[HOST_LOOPBACK] * len(tuple(axes)))
+
+
+# -- reduce algorithms -------------------------------------------------------
+
+
+class ReduceAlgorithm:
+    """One way to sum a buffer across the reduction axes.
+
+    ``reduce`` runs inside the manual shard_map region; ``predicted_time``
+    prices one reduction of ``msg_bytes`` on a ``Topology`` — both sides of
+    the registry contract the auto-selector needs.
+    """
+
+    name: str = "?"
+    min_levels: int = 1
+
+    def reduce(self, x: jax.Array, axes: Sequence[str]) -> jax.Array:
+        raise NotImplementedError
+
+    def predicted_time(self, msg_bytes: float, topo: Topology) -> float:
+        raise NotImplementedError
+
+    def applicable(self, topo: Topology) -> bool:
+        return len(topo.levels) >= self.min_levels
+
+    def __repr__(self) -> str:  # readable in test/benchmark output
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class FlatRing(ReduceAlgorithm):
+    """Single ring over every device; the ring necessarily crosses the
+    slowest links, so the whole payload pays slow-fabric prices."""
+
+    name = "flat"
+
+    def reduce(self, x, axes):
+        return collectives.psum(x, axes)
+
+    def predicted_time(self, msg_bytes, topo):
+        return ring_allreduce_time(msg_bytes, topo.num_devices,
+                                   topo.slowest_fabric)
+
+
+class TwoLevel(ReduceAlgorithm):
+    """reduce-scatter over the innermost level → psum the shard over all
+    outer levels → all-gather back (the seed's ``hierarchical_psum``)."""
+
+    name = "two_level"
+    min_levels = 2
+
+    def reduce(self, x, axes):
+        axes = tuple(axes)
+        return collectives.hierarchical_psum(x, axes[-1], axes[:-1])
+
+    def predicted_time(self, msg_bytes, topo):
+        inner = topo.innermost
+        outer = topo.restrict([lv.axis for lv in topo.levels[:-1]])
+        t = reduce_scatter_time(msg_bytes, inner.size, inner.fabric)
+        if outer.levels:
+            t += ring_allreduce_time(msg_bytes / inner.size,
+                                     outer.num_devices,
+                                     outer.slowest_fabric)
+        t += all_gather_time(msg_bytes, inner.size, inner.fabric)
+        return t
+
+
+class TreeReduce(ReduceAlgorithm):
+    """k-level tree: recursive reduce-scatter down the level stack, psum at
+    the top, all-gather back up. Equals two-level at depth 2; at depth ≥3
+    each extra level shrinks the slow-link payload by its inner sizes."""
+
+    name = "tree"
+    min_levels = 2
+
+    def reduce(self, x, axes):
+        return collectives.tree_psum(x, axes)
+
+    def predicted_time(self, msg_bytes, topo):
+        if len(topo.levels) == 1:
+            lv = topo.levels[0]
+            return ring_allreduce_time(msg_bytes, lv.size, lv.fabric)
+        inner = topo.innermost
+        t = reduce_scatter_time(msg_bytes, inner.size, inner.fabric)
+        t += self.predicted_time(msg_bytes / inner.size,
+                                 Topology(levels=topo.levels[:-1]))
+        t += all_gather_time(msg_bytes, inner.size, inner.fabric)
+        return t
+
+
+FLAT = FlatRing()
+TWO_LEVEL = TwoLevel()
+TREE = TreeReduce()
+
+REGISTRY: Dict[str, ReduceAlgorithm] = {}
+
+
+def register_algorithm(algo: ReduceAlgorithm) -> ReduceAlgorithm:
+    REGISTRY[algo.name] = algo
+    return algo
+
+
+for _a in (FLAT, TWO_LEVEL, TREE):
+    register_algorithm(_a)
+
+
+def get_algorithm(name: str) -> ReduceAlgorithm:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown collective_algo {name!r}; "
+            f"registered: {sorted(REGISTRY)}") from None
+
+
+# -- auto-selection ----------------------------------------------------------
+
+
+def select_algorithm(msg_bytes: float, topo: Topology,
+                     ) -> Tuple[ReduceAlgorithm, float]:
+    """Cheapest applicable algorithm for one message on this topology.
+
+    The candidate set always contains the flat ring, so the selected
+    predicted time is ≤ the flat-ring time by construction — the
+    acceptance bar the benchmarks assert.
+    """
+    best, best_t = FLAT, FLAT.predicted_time(msg_bytes, topo)
+    for algo in REGISTRY.values():
+        if algo is FLAT or not algo.applicable(topo):
+            continue
+        t = algo.predicted_time(msg_bytes, topo)
+        if t < best_t:
+            best, best_t = algo, t
+    return best, best_t
+
+
+def resolve_algorithm(collective_algo: str, topo: Optional[Topology],
+                      msg_bytes: float = 0.0) -> ReduceAlgorithm:
+    """Config string → algorithm object (GradientFlow's entry point).
+
+    'auto' needs a topology to price candidates; without one it falls back
+    to the flat ring (the seed's default behavior). Explicit names resolve
+    through the registry regardless of topology.
+    """
+    if collective_algo == "auto":
+        if topo is None or len(topo.levels) < 2:
+            return FLAT
+        return select_algorithm(msg_bytes, topo)[0]
+    return get_algorithm(collective_algo)
+
+
+# -- θ auto-tuning -----------------------------------------------------------
+
+
+def _pow2_candidates(lo: int, hi: int) -> List[int]:
+    out, c = [], lo
+    while c < hi:
+        out.append(c)
+        c *= 2
+    out.append(hi)
+    return out
+
+
+def auto_bucket_boundaries(
+    pool, wire_dtype, topo: Topology, *,
+    collective_algo: str = "auto",
+    backward_s: Optional[float] = None,
+    min_bucket_elems: int = 256 * 1024,
+) -> Tuple[int, List[Tuple[int, int]]]:
+    """Pick the lazy-allreduce threshold θ for this pool and topology.
+
+    Models the §3.1 tradeoff: small buckets overlap more backward compute
+    but pay per-collective latency; one huge bucket is bandwidth-optimal
+    but can only start after the whole backward. For each candidate θ
+    (powers of two, tensor-aligned via ``pool.bucket_boundaries``) we price
+    every bucket with the algorithm that will actually run
+    (``collective_algo`` resolved exactly as GradientFlow resolves it, so
+    a pinned 'flat' is tuned against flat-ring costs, not the auto pick),
+    release buckets at the uniform backward rate, and keep the θ whose
+    last collective finishes earliest
+    (``cost_model.overlapped_finish_time``).
+
+    ``backward_s`` defaults to the flat-ring time of the whole pool — the
+    paper's comm-bound regime where compute and wire are comparable.
+    Returns ``(theta, boundaries)``.
+    """
+    import jax.numpy as jnp
+
+    elt = jnp.dtype(wire_dtype).itemsize
+    if backward_s is None:
+        backward_s = FLAT.predicted_time(pool.size * elt, topo)
+
+    def _bucket_time(nbytes: float) -> float:
+        algo = resolve_algorithm(collective_algo, topo, nbytes)
+        return algo.predicted_time(nbytes, topo)
+
+    best_theta, best_finish, best_bounds = pool.size, float("inf"), None
+    for theta in _pow2_candidates(min(min_bucket_elems, pool.size),
+                                  pool.size):
+        bounds = pool.bucket_boundaries(theta)
+        sizes = [(e - s) * elt for s, e in bounds]
+        times = [_bucket_time(b) for b in sizes]
+        finish = overlapped_finish_time(
+            times, bucket_release_times(sizes, backward_s))
+        if finish < best_finish - 1e-12:
+            best_theta, best_finish, best_bounds = theta, finish, bounds
+    return best_theta, best_bounds
+
+
+# Deriving a Topology from a live jax Mesh lives with the mesh code:
+# ``repro.launch.mesh.mesh_topology``.

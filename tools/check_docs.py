@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Docs ↔ code consistency check (runs in CI).
+
+Every path-like reference (src/..., benchmarks/..., tests/..., docs/...,
+examples/..., tools/...) and every dotted ``repro.*`` module mentioned in
+README.md or docs/*.md must resolve to a real file. Keeps the paper-map
+table and the architecture guide honest as the tree moves.
+
+  python tools/check_docs.py        # exit 1 + list of broken refs
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+PATH_RE = re.compile(
+    r"\b(?:src|tests|benchmarks|examples|docs|tools)/[\w./\-]+\.(?:py|md|toml|yml|yaml)\b")
+MODULE_RE = re.compile(r"\brepro(?:\.\w+)+\b")
+
+
+def module_resolves(dotted: str) -> bool:
+    """True when repro.a.b.c names a real module (trailing segments may be
+    attributes). A .py prefix legitimizes any suffix; a package prefix
+    only legitimizes a submodule, subpackage, or a name its __init__.py
+    mentions — so 'repro.parallel.costmodel' (no such module) fails even
+    though 'repro.parallel' exists."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        rel = ROOT / "src" / pathlib.Path(*parts[:end])
+        if rel.with_suffix(".py").is_file():
+            return True
+        if rel.is_dir():
+            if end == len(parts):
+                return True
+            nxt = parts[end]
+            if (rel / f"{nxt}.py").is_file() or (rel / nxt).is_dir():
+                return True
+            init = rel / "__init__.py"
+            return init.is_file() and nxt in init.read_text(encoding="utf-8")
+    return False
+
+
+def check_file(path: pathlib.Path) -> list:
+    text = path.read_text(encoding="utf-8")
+    broken = []
+    for m in PATH_RE.finditer(text):
+        ref = m.group(0).split("::")[0]
+        if not (ROOT / ref).exists():
+            broken.append((path.name, ref))
+    for m in MODULE_RE.finditer(text):
+        if not module_resolves(m.group(0)):
+            broken.append((path.name, m.group(0)))
+    return broken
+
+
+def main() -> int:
+    targets = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing_docs = [t for t in targets if not t.exists()]
+    if missing_docs:
+        for t in missing_docs:
+            print(f"MISSING DOC: {t.relative_to(ROOT)}")
+        return 1
+    broken = []
+    for t in targets:
+        broken += check_file(t)
+    if broken:
+        print(f"{len(broken)} broken reference(s):")
+        for doc, ref in broken:
+            print(f"  {doc}: {ref}")
+        return 1
+    print(f"docs check OK: {len(targets)} files, all references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
