@@ -45,6 +45,7 @@ def lower_cell(arch_id: str, shape_name: str, num_layers: int, *,
     from repro.launch.dryrun import build_train_cfg, collective_stats
     from repro.launch.mesh import make_production_mesh
     from repro.launch.trainer import Trainer
+    from repro.parallel.collectives import compat_set_mesh
     from repro.models.layers import attention
     attention.SCAN_UNROLL = True  # count every attention block's FLOPs
 
@@ -56,7 +57,7 @@ def lower_cell(arch_id: str, shape_name: str, num_layers: int, *,
     cfg = dataclasses.replace(cfg, model=model_cfg, scan_layers=False)
 
     trainer = Trainer(cfg, mesh, rules)
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         if shape.kind == "train":
             step = trainer.build_train_step(donate=False)
             lowered = step.lower(trainer.abstract_state(),

@@ -22,6 +22,7 @@ from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
 from repro.data.synthetic import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.trainer import Trainer
+from repro.parallel.collectives import compat_set_mesh
 
 
 def run(steps, mode, sparsity, momentum_corr, warmup):
@@ -42,7 +43,7 @@ def run(steps, mode, sparsity, momentum_corr, warmup):
     trainer = Trainer(cfg, mesh, rules)
     data = SyntheticLM(model_cfg.vocab_size, seed=0)
     losses = []
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         state = trainer.init_state(jax.random.PRNGKey(0))
         steps_by_stage = {s.index: trainer.build_train_step(stage=s)
                           for s in trainer.gf.stages}

@@ -17,6 +17,7 @@ from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
 from repro.data.synthetic import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.launch.trainer import Trainer
+from repro.parallel.collectives import compat_set_mesh
 
 
 def main():
@@ -35,7 +36,7 @@ def main():
                                                     total_steps=20),
                           seq_len=64, global_batch=4, attn_chunk=0)
         trainer = Trainer(cfg, mesh, rules)
-        with jax.sharding.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             state = trainer.init_state(jax.random.PRNGKey(0))
             step = trainer.build_train_step()
             losses = []

@@ -89,9 +89,11 @@ def scatter_chunks(pool: jax.Array, idx: jax.Array, values: jax.Array,
 
 
 def chunk_l1_norms(pool: jax.Array, chunk_elems: int) -> jax.Array:
-    """Per-chunk L1 norm; f32 accumulate regardless of pool dtype."""
-    chunks = pool.reshape((-1, chunk_elems)).astype(jnp.float32)
-    return jnp.sum(jnp.abs(chunks), axis=1)
+    """Per-chunk L1 norm; f32 accumulate regardless of pool dtype.
+    Delegates to the kernel oracle so the census has one definition —
+    the same math the fused pack emits in its single pass."""
+    from repro.kernels import ref
+    return ref.chunk_l1norm(pool, chunk_elems)
 
 
 @dataclasses.dataclass(frozen=True)

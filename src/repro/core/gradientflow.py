@@ -106,15 +106,24 @@ class GradientFlow:
         state: GFState,
         *,
         stage: Optional[schedule_mod.SparsityStage] = None,
+        prepacked: bool = False,
     ) -> Tuple[jax.Array, jax.Array, GFState]:
         """Reduce the local gradient pool across the data axes.
 
         Returns (mean_grads f32[pool], elem_mask bool[pool], new_state).
         ``elem_mask`` is all-True except for CSC's unselected chunks, whose
         update the optimizer must skip (Algorithm 1 lines 13–17).
+
+        ``prepacked=True`` declares that ``pool_grads`` is already in the
+        wire dtype (the single-pass pack pipeline casts at pack time), so
+        the dense/lazy buckets skip their per-bucket down-cast. CSC keeps
+        f32 input regardless — its hg accumulation must not round through
+        the wire dtype before the selection decides what is transmitted.
         """
         cfg = self.cfg
         if cfg.mode == "csc":
+            assert not prepacked, (
+                "CSC consumes the f32 pool: pack with dtype=float32")
             stage = stage or self.stages[-1]
             k = stage.num_selected
             if k >= self.num_chunks:
@@ -138,8 +147,9 @@ class GradientFlow:
         dense = cfg.mode == "dense"
         bounds = self._dense_bounds if dense else self._lazy_bounds
         algos = self._dense_algos if dense else self._lazy_algos
+        wire = None if prepacked else cfg.wire_dtype
         summed = bucketed_reduce(pool_grads, bounds, cfg.reduce_axes,
-                                 cfg.wire_dtype, algo=algos)
+                                 wire, algo=algos)
         mean = summed / self.num_data_shards
         mask = jnp.ones(mean.shape, dtype=jnp.bool_)
         return mean, mask, state

@@ -49,14 +49,18 @@ def bucketed_reduce(
     The wire dtype (paper: FP16; here default bf16) is applied per bucket —
     gradients are cast down for transport and back up to ``accum_dtype``
     after the reduce, mirroring mixed-precision communication (§2.5).
+    ``wire_dtype=None`` means the pool is *already* in wire form (the
+    single-pass pack pipeline casts at pack time) and buckets go on the
+    wire as-is, with no per-bucket cast.
     ``algo`` selects the collective algorithm (None = flat ring psum).
     Returns the *summed* pool in ``accum_dtype`` (caller normalizes).
     """
-    wire_dtype = jnp.dtype(wire_dtype)
+    wire_dtype = None if wire_dtype is None else jnp.dtype(wire_dtype)
     parts: List[jax.Array] = []
     for i, (start, end) in enumerate(boundaries):
         seg = jax.lax.slice_in_dim(pool, start, end)
-        seg = seg.astype(wire_dtype)
+        if wire_dtype is not None:
+            seg = seg.astype(wire_dtype)
         seg = reduce_pool(seg, axes, algo=_algo_for(algo, i))
         parts.append(seg.astype(accum_dtype))
     if len(parts) == 1:

@@ -11,6 +11,11 @@ In JAX the analogue is a deterministic ravel of the gradient pytree into a
 embedding → layers → head; backward generates head-first), plus metadata
 (offsets / sizes / names) so that:
 
+  * ``pack`` builds the pool in a single pass with zero concatenates
+    (static-offset in-place writes + one trailing wire cast + optional
+    fused chunk-L1 census; ``pack_into`` threads a donated staging buffer
+    so steady-state steps allocate nothing pool-sized);
+
   * lazy allreduce can split the pool into θ-element buckets whose psum
     depends only on the grads inside the bucket (XLA can then overlap each
     bucket's collective with the remaining backward compute);
@@ -20,7 +25,7 @@ embedding → layers → head; backward generates head-first), plus metadata
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,41 +91,101 @@ class GradientPool:
         rem = offset % self.pad_to
         self.padding = (self.pad_to - rem) % self.pad_to
         self.size = offset + self.padding
+        # Static segment table, precomputed once: python tuples specialize
+        # the pack/unpack kernels (every slice compile-time constant); the
+        # device-array form serves runtime consumers (the LARS scale
+        # expansion) without rebuilding per step.
+        self.offsets: Tuple[int, ...] = tuple(s.offset for s in self.specs)
+        self.sizes: Tuple[int, ...] = tuple(s.size for s in self.specs)
+        self.sizes_dev = jnp.asarray(self.sizes or (0,), jnp.int32)
 
-    # -- ravel / unravel --------------------------------------------------
+    # -- single-pass pack / unpack (the pipeline entry points) -------------
+
+    def flat_leaves(self, grads: Any) -> List[jax.Array]:
+        """Pytree → 1-D leaves in pool (reverse-generation) order, with
+        shape checks against the layout this pool was built for."""
+        leaves = list(reversed(jax.tree_util.tree_leaves(grads)))
+        assert len(leaves) == len(self.specs), (
+            f"pool built for {len(self.specs)} leaves, got {len(leaves)}")
+        out = []
+        for leaf, spec in zip(leaves, self.specs):
+            assert tuple(leaf.shape) == spec.shape, (
+                f"{spec.name}: expected {spec.shape}, got {leaf.shape}")
+            out.append(leaf.reshape((-1,)))
+        return out
+
+    def unflatten(self, leaves_1d: Sequence[jax.Array]) -> Any:
+        """1-D leaves in pool order → pytree (inverse of flat_leaves)."""
+        assert len(leaves_1d) == len(self.specs)
+        shaped = [x.reshape(spec.shape)
+                  for x, spec in zip(leaves_1d, self.specs)]
+        return jax.tree_util.tree_unflatten(self.treedef,
+                                            list(reversed(shaped)))
+
+    def pack(self, grads: Any, dtype: Any = None, *,
+             norms_chunk: int = 0, use_kernels: bool = False,
+             out: Optional[jax.Array] = None,
+             ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Pytree → (1-D pool, optional f32 per-chunk L1 norms), one pass.
+
+        Fuses what used to be three passes — concatenate-ravel, wire-dtype
+        cast, chunk-norm census — into a single sweep with no concatenate:
+        each leaf is written into its static segment of one preallocated
+        buffer, with a single trailing cast to ``dtype``. ``norms_chunk >
+        0`` additionally emits the per-chunk L1 norms of the packed (wire)
+        values. ``out`` optionally supplies the staging buffer (see
+        ``pack_into`` for the donation-threading variant that returns it).
+        """
+        pool, norms, _ = self._pack(grads, dtype, norms_chunk, use_kernels,
+                                    out)
+        return pool, norms
+
+    def pack_into(self, out: jax.Array, grads: Any, dtype: Any = None, *,
+                  norms_chunk: int = 0,
+                  ) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        """Donation-aware pack: writes into the staging buffer ``out``
+        (leaves' dtype, initialized with zeros once) and returns (pool,
+        norms, staging) so the caller can thread the staging buffer
+        through a donated jit argument — steady-state packs then allocate
+        no pool-sized buffer and skip the zero-fill entirely."""
+        return self._pack(grads, dtype, norms_chunk, False, out)
+
+    def _pack(self, grads, dtype, norms_chunk, use_kernels, out):
+        leaves = self.flat_leaves(grads)
+        if dtype is None:
+            dtype = jnp.result_type(*leaves) if leaves else jnp.float32
+        if norms_chunk:
+            assert self.size % norms_chunk == 0, (self.size, norms_chunk)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            return kops.pool_pack(leaves, self.offsets, self.sizes,
+                                  self.size, norms_chunk, dtype, out=out)
+        from repro.kernels import ref
+        return ref.pool_pack(leaves, self.offsets, self.size, norms_chunk,
+                             dtype, out=out)
+
+    # -- ravel / unravel (thin compatibility wrappers) ---------------------
 
     def ravel(self, grads: Any, dtype: Any = None) -> jax.Array:
         """Pytree → 1-D pool (reverse-generation order, padded)."""
-        leaves = jax.tree_util.tree_leaves(grads)
-        ordered = list(reversed(leaves))
-        assert len(ordered) == len(self.specs), (
-            f"pool built for {len(self.specs)} leaves, got {len(ordered)}")
-        flat = []
-        for leaf, spec in zip(ordered, self.specs):
-            assert tuple(leaf.shape) == spec.shape, (
-                f"{spec.name}: expected {spec.shape}, got {leaf.shape}")
-            x = leaf.reshape((-1,))
-            if dtype is not None:
-                x = x.astype(dtype)
-            flat.append(x)
-        if self.padding:
-            pad_dtype = dtype if dtype is not None else flat[-1].dtype
-            flat.append(jnp.zeros((self.padding,), dtype=pad_dtype))
-        return jnp.concatenate(flat)
+        pool, _ = self.pack(grads, dtype=dtype)
+        return pool
 
     def unravel(self, pool: jax.Array, dtype: Any = None) -> Any:
-        """1-D pool → pytree (inverse of ravel; drops padding)."""
+        """1-D pool → pytree (inverse of ravel; drops padding). Static
+        ``lax.slice`` per segment — the offsets are compile-time constants
+        from the segment table, so XLA fuses the slices into the consumers
+        instead of emitting dynamic-slice ops."""
         leaves = []
         for spec in self.specs:
-            x = jax.lax.dynamic_slice_in_dim(pool, spec.offset, spec.size)
+            x = jax.lax.slice(pool, (spec.offset,),
+                              (spec.offset + spec.size,))
             if dtype is not None:
                 x = x.astype(dtype)
             elif x.dtype != spec.dtype:
                 x = x.astype(spec.dtype)
-            leaves.append(x.reshape(spec.shape))
-        # specs are reverse-flatten-order; restore flatten order.
-        leaves = list(reversed(leaves))
-        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+            leaves.append(x)
+        return self.unflatten(leaves)
 
     # -- bucketing for lazy allreduce -------------------------------------
 
@@ -164,9 +229,12 @@ class GradientPool:
         return len(self.specs)
 
     def num_chunks(self, chunk_elems: int) -> int:
-        assert self.size % chunk_elems == 0 or self.pad_to % chunk_elems == 0, (
-            "pool must be padded to a multiple of chunk_elems")
-        return -(-self.size // chunk_elems)
+        # The *padded* size must divide exactly: a pool merely padded to a
+        # pad_to that chunk_elems divides is not enough (e.g. pad_to=1).
+        assert self.size % chunk_elems == 0, (
+            f"pool size {self.size} must be a multiple of chunk_elems "
+            f"{chunk_elems}; construct with pad_to=chunk_elems")
+        return self.size // chunk_elems
 
     def abstract_pool(self, dtype: Any = jnp.float32) -> jax.ShapeDtypeStruct:
         return jax.ShapeDtypeStruct((self.size,), jnp.dtype(dtype))

@@ -13,7 +13,7 @@ kernels run everywhere.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +21,18 @@ import jax.numpy as jnp
 from repro.kernels import chunk_l1norm as _cl
 from repro.kernels import csc_compact as _cc
 from repro.kernels import fused_update as _fu
+from repro.kernels import pool_pack as _pp
+from repro.kernels import pool_unpack as _pu
 from repro.kernels import ref
 
 # TPU targets run compiled kernels; anything else interprets.
 _INTERPRET = jax.default_backend() != "tpu"
+
+# The pool pack/unpack kernels are the whole-pool-resident variants (see
+# their module docstrings): above this many pool elements they defer to the
+# ref twins, which XLA also executes copy-free (in-place dynamic-update-
+# slices / fused static slices).
+_POOL_KERNEL_MAX_ELEMS = 4 * 1024 * 1024
 
 
 def _needs_ref_fallback(*arrays) -> bool:
@@ -50,6 +58,45 @@ def csc_compact(pool: jax.Array, idx: jax.Array,
     if _needs_ref_fallback(pool, idx):
         return ref.csc_compact(pool, idx, chunk_elems)
     return _cc.csc_compact(pool, idx, chunk_elems, interpret=_INTERPRET)
+
+
+def pool_pack(leaves: Sequence[jax.Array], offsets: Tuple[int, ...],
+              sizes: Tuple[int, ...], pool_size: int, chunk_elems: int,
+              wire_dtype, out: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Optional[jax.Array],
+                         Optional[jax.Array]]:
+    """Fused ravel + wire cast + chunk-L1 census over the gradient pool.
+    Returns (wire pool, norms or None, staging buffer or None) — see
+    ref.pool_pack for the staging/donation contract."""
+    if out is not None or pool_size > _POOL_KERNEL_MAX_ELEMS or \
+            not leaves or _needs_ref_fallback(*leaves):
+        return ref.pool_pack(leaves, offsets, pool_size, chunk_elems,
+                             wire_dtype, out=out)
+    pool, norms = _pp.pool_pack(
+        tuple(leaves), tuple(offsets), tuple(sizes), pool_size,
+        chunk_elems, jnp.dtype(wire_dtype).name, interpret=_INTERPRET)
+    # The kernel casts during its single pass — there is no source-dtype
+    # staging buffer to thread to a next step (callers that donate one via
+    # out=... always take the ref path above), so staging is None here.
+    return pool, norms, None
+
+
+def pool_unpack_update(master, grads, momentum_buf, mask,
+                       offsets: Tuple[int, ...], sizes: Tuple[int, ...], *,
+                       lr, momentum, weight_decay,
+                       scale: Optional[jax.Array] = None
+                       ) -> Tuple[List[jax.Array], jax.Array]:
+    """Fused momentum-SGD update + pool unravel (leaves out, pool never
+    re-materialized on the update side)."""
+    if master.shape[0] > _POOL_KERNEL_MAX_ELEMS or \
+            _needs_ref_fallback(master, grads, momentum_buf, mask):
+        return ref.pool_unpack_update(
+            master, grads, momentum_buf, mask, offsets, sizes, lr=lr,
+            momentum=momentum, weight_decay=weight_decay, scale=scale)
+    return _pu.pool_unpack_update(
+        master, grads, momentum_buf, mask, tuple(offsets), tuple(sizes),
+        lr=lr, momentum=momentum, weight_decay=weight_decay, scale=scale,
+        interpret=_INTERPRET)
 
 
 def fused_update(master, grads, momentum_buf, mask, *, lr, momentum,

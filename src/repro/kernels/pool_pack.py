@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-pass gradient-pool pack (paper §3.1, Fig 15).
+
+The legacy path built the pool from an O(num_tensors) reshape+concatenate
+chain, then made a *second* full pass to cast to the wire dtype and a
+*third* for CSC's per-chunk L1 census — three HBM round trips over a
+pool that can be hundreds of MB per shard. This kernel does all of it in
+one pass: every leaf is DMA'd from its backward-pass buffer straight into
+its static segment of the pool, cast to the wire dtype in VMEM on the way
+through, and the chunk-L1 census is reduced from the same resident data
+before it is written out.
+
+The segment table (per-leaf offset/size) is compile-time static — it comes
+from ``GradientPool.specs``, which is built once from the parameter
+structure — so every slice below is a static `pl.ds` and the compiler sees
+a fixed DMA schedule (no scatter/gather indexing at all; the paper's
+"zero-copy" property).
+
+This is the whole-pool-resident variant: leaves and pool live in VMEM for
+the duration of the (single-program) grid, which bounds it to pools of a
+few MiB per invocation. That covers the per-model-shard pools of the test
+and benchmark configs; bigger pools take the jnp twin in ``ref.py``
+(semantically identical, validated bit-for-bit in
+tests/test_pool_pipeline.py), whose dynamic-update-slice writes XLA also
+performs in place. A production blocked variant would stream (rows,
+chunk) tiles like ``chunk_l1norm`` with per-tile async copies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _struct(shape, dtype, like):
+    """ShapeDtypeStruct whose vma matches ``like`` (required when the kernel
+    runs inside a manual shard_map region with check_vma)."""
+    try:
+        vma = jax.typeof(like).vma
+    except Exception:
+        vma = None
+    if vma is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _kernel(*refs, offsets, sizes, pool_size, chunk_elems, with_norms):
+    n = len(offsets)
+    leaf_refs = refs[:n]
+    pool_ref = refs[n]
+    # Pack + cast: one static-offset VMEM write per leaf.
+    for leaf, off, sz in zip(leaf_refs, offsets, sizes):
+        pool_ref[pl.ds(off, sz)] = leaf[...].astype(pool_ref.dtype)
+    covered = offsets[-1] + sizes[-1] if n else 0
+    if covered < pool_size:  # tail padding (CSC chunk alignment)
+        pool_ref[pl.ds(covered, pool_size - covered)] = jnp.zeros(
+            (pool_size - covered,), pool_ref.dtype)
+    if with_norms:
+        norms_ref = refs[n + 1]
+        x = pool_ref[...].astype(jnp.float32).reshape(-1, chunk_elems)
+        norms_ref[...] = jnp.sum(jnp.abs(x), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offsets", "sizes", "pool_size", "chunk_elems", "wire_dtype",
+    "interpret"))
+def pool_pack(
+    leaves: Sequence[jax.Array],
+    offsets: Tuple[int, ...],
+    sizes: Tuple[int, ...],
+    pool_size: int,
+    chunk_elems: int,
+    wire_dtype,
+    interpret: bool = True,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """1-D leaves -> (pool[pool_size] in wire dtype, f32 chunk norms).
+
+    ``chunk_elems == 0`` skips the norm output (plain ravel+cast)."""
+    wire = jnp.dtype(wire_dtype)
+    with_norms = chunk_elems > 0
+    if with_norms:
+        assert pool_size % chunk_elems == 0, (pool_size, chunk_elems)
+    like = leaves[0] if leaves else jnp.zeros((0,))
+    out_shape = [_struct((pool_size,), wire, like)]
+    if with_norms:
+        out_shape.append(
+            _struct((pool_size // chunk_elems,), jnp.float32, like))
+    kern = functools.partial(
+        _kernel, offsets=tuple(offsets), sizes=tuple(sizes),
+        pool_size=pool_size, chunk_elems=chunk_elems, with_norms=with_norms)
+    out = pl.pallas_call(
+        kern,
+        out_shape=tuple(out_shape),
+        interpret=interpret,
+    )(*leaves)
+    return (out[0], out[1]) if with_norms else (out[0], None)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused pool unpack + momentum-SGD update.
+
+The inverse seam of ``pool_pack``: the optimizer update (Algorithm 1) and
+the pool→pytree unravel used to be two separate passes — a 4-buffer
+elementwise loop producing a new master pool, then one dynamic-slice per
+tensor to rebuild the parameter tree. This kernel computes the update and
+writes each tensor's updated segment *directly* to its own output buffer
+via the static segment table, so the full new-master pool is never
+round-tripped through HBM and the gradient pytree is never materialized
+on the update side at all. Momentum stays in pool form (one buffer, donated
+across steps).
+
+Same residency caveat as ``pool_pack``: single-program whole-pool-in-VMEM
+variant, sized for per-model-shard pools of a few MiB; larger pools use
+the jnp twin (``ref.pool_unpack_update``), whose static ``lax.slice``
+reads XLA fuses into the consumers. A production blocked variant would
+grid over chunk tiles and DMA each updated segment out as it completes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _struct(shape, dtype, like):
+    """ShapeDtypeStruct whose vma matches ``like`` (required when the kernel
+    runs inside a manual shard_map region with check_vma)."""
+    try:
+        vma = jax.typeof(like).vma
+    except Exception:
+        vma = None
+    if vma is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _kernel(lr_ref, master_ref, grads_ref, mom_ref, mask_ref, scale_ref,
+            *out_refs, momentum, weight_decay, has_scale, offsets, sizes):
+    lr = lr_ref[0]
+    master = master_ref[...]
+    g = grads_ref[...] + weight_decay * master
+    if has_scale:
+        g = g * scale_ref[...]
+    u = momentum * mom_ref[...] + lr * g
+    mask = mask_ref[...]
+    new_mom_ref = out_refs[0]
+    new_mom_ref[...] = jnp.where(mask, u, mom_ref[...])
+    new_master = jnp.where(mask, master - u, master)
+    for ref, off, sz in zip(out_refs[1:], offsets, sizes):
+        ref[...] = jax.lax.slice(new_master, (off,), (off + sz,))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "offsets", "sizes", "momentum", "weight_decay", "interpret"))
+def pool_unpack_update(
+    master: jax.Array,
+    grads: jax.Array,
+    momentum_buf: jax.Array,
+    mask: jax.Array,
+    offsets: Tuple[int, ...],
+    sizes: Tuple[int, ...],
+    *,
+    lr,
+    momentum: float,
+    weight_decay: float,
+    scale: Optional[jax.Array] = None,
+    interpret: bool = True,
+) -> Tuple[List[jax.Array], jax.Array]:
+    """Returns (updated 1-D leaves in segment-table order, new momentum)."""
+    n = master.shape[0]
+    has_scale = scale is not None
+    if scale is None:
+        scale = jnp.ones((1,), jnp.float32)  # dummy operand, never read
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    kern = functools.partial(
+        _kernel, momentum=momentum, weight_decay=weight_decay,
+        has_scale=has_scale, offsets=tuple(offsets), sizes=tuple(sizes))
+    out_shape = tuple(
+        [_struct((n,), momentum_buf.dtype, momentum_buf)]
+        + [_struct((sz,), master.dtype, master) for sz in sizes])
+    out = pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(lr_arr, master, grads, momentum_buf, mask, scale)
+    return list(out[1:]), out[0]

@@ -33,6 +33,7 @@ from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
 from repro.configs.shapes import SHAPES, shapes_for
 from repro.launch.mesh import make_production_mesh
 from repro.launch.trainer import Trainer
+from repro.parallel.collectives import compat_set_mesh
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -123,7 +124,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     trainer = Trainer(cfg, mesh, rules)
 
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         if shape.kind == "train":
             step = trainer.build_train_step(donate=False)
             state = trainer.abstract_state()

@@ -10,6 +10,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
+from repro.parallel.collectives import compat_make_mesh
 from repro.parallel.cost_model import Fabric
 from repro.parallel.topology import Topology
 
@@ -40,16 +41,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests, elastic remesh, examples)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():

@@ -16,6 +16,7 @@ from repro.configs import get_arch, get_smoke
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.launch.mesh import make_mesh
 from repro.launch.trainer import Trainer
+from repro.parallel.collectives import compat_set_mesh
 
 
 def main(argv=None):
@@ -42,7 +43,7 @@ def main(argv=None):
     sc = ShapeConfig(name="serve", seq_len=max_len,
                      global_batch=args.batch, kind="decode")
 
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         key = jax.random.PRNGKey(args.seed)
         params = jax.tree_util.tree_map(
             lambda x: x.astype(jnp.bfloat16),

@@ -28,6 +28,7 @@ from repro.data.synthetic import SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.launch.trainer import Trainer
 from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
+from repro.parallel.collectives import compat_set_mesh
 
 
 def build(args):
@@ -93,7 +94,7 @@ def main(argv=None):
     sup = TrainSupervisor(ckpt, SupervisorConfig(
         checkpoint_every=args.ckpt_every))
 
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         state = trainer.init_state(jax.random.PRNGKey(args.seed))
         # One compiled executable per CSC warm-up stage.
         steps_by_stage = {s.index: trainer.build_train_step(stage=s)

@@ -36,10 +36,12 @@ from repro.models import build_model
 from repro.models.registry import input_specs as model_input_specs
 from repro.optim import abstract_state as opt_abstract_state
 from repro.optim import init_state as opt_init_state
-from repro.optim import update_pool as opt_update_pool
+from repro.optim import update_unpack as opt_update_unpack
 from repro.optim.lars import LARSScaler
 from repro.optim.schedules import lr_at
 from repro.parallel import sharding as sh
+from repro.parallel.collectives import (compat_pvary, compat_set_mesh,
+                                        compat_shard_map)
 
 
 class TrainState(NamedTuple):
@@ -49,10 +51,7 @@ class TrainState(NamedTuple):
     step: jax.Array
 
 
-def _pvary(x, axes):
-    for a in axes:
-        x = jax.lax.pcast(x, a, to="varying")
-    return x
+_pvary = compat_pvary
 
 
 class Trainer:
@@ -144,7 +143,7 @@ class Trainer:
                                                              P())))
 
     def init_state(self, key: jax.Array) -> TrainState:
-        with jax.sharding.set_mesh(self.mesh):
+        with compat_set_mesh(self.mesh):
             params = sh.init_params(self.specs, key, dtype=jnp.float32)
             params = jax.tree_util.tree_map(jax.device_put, params,
                                             self.param_shardings)
@@ -196,19 +195,34 @@ class Trainer:
 
     def _inner_update(self, grads, params, opt, gfstate, lr, stage):
         """Runs fully manual (data+model). Everything here is local.
-        gfstate.hg arrives as this data shard's (1, local_pool) row."""
-        gpool = self.pool.ravel(grads, dtype=jnp.float32)
+        gfstate.hg arrives as this data shard's (1, local_pool) row.
+
+        Single-pass pool pipeline: gradients stay in pool form end-to-end
+        across pack → reduce → update. Dense/lazy modes pack straight to
+        the wire dtype (the reduce then skips its per-bucket cast); CSC
+        packs to f32 because hg accumulation precedes the wire cast. The
+        update side is the fused unpack: the optimizer reads pool segments
+        and emits the updated parameter pytree directly — no gradient
+        pytree and no intermediate new-master pool on the way out.
+        """
+        cfg = self.gf_cfg
+        prepacked = cfg.mode in ("dense", "lazy")
+        pack_dtype = jnp.dtype(cfg.wire_dtype) if prepacked else jnp.float32
+        gpool, _ = self.pool.pack(grads, dtype=pack_dtype,
+                                  use_kernels=cfg.use_kernels)
         gf_local = GFState(hg=gfstate.hg[0], chunk_norms=gfstate.chunk_norms)
-        reduced, mask, gf2 = self.gf.reduce(gpool, gf_local, stage=stage)
-        master = self.pool.ravel(params)
+        reduced, mask, gf2 = self.gf.reduce(gpool, gf_local, stage=stage,
+                                            prepacked=prepacked)
+        master, _ = self.pool.pack(params, dtype=jnp.float32,
+                                   use_kernels=cfg.use_kernels)
         scale = None
         if self.lars is not None:
             scale = self.lars.scale(master, reduced, self.cfg.optimizer,
                                     mask)
-        new_master, opt2 = opt_update_pool(
-            self.opt_name, master, reduced, opt, mask, self.cfg.optimizer,
-            lr, scale=scale, use_kernels=self.gf_cfg.use_kernels)
-        new_params = self.pool.unravel(new_master)
+        new_params, opt2 = opt_update_unpack(
+            self.opt_name, self.pool, master, reduced, opt, mask,
+            self.cfg.optimizer, lr, scale=scale,
+            use_kernels=cfg.use_kernels)
         gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms)
         return new_params, opt2, gf2
 
@@ -263,8 +277,8 @@ class Trainer:
                 # grads arrive model-invariant (GSPMD all-reduces them in
                 # the auto region) and the update is deterministic, so all
                 # model shards compute identical values (tested).
-                new_params, opt2, gf2 = jax.shard_map(
-                    update,
+                new_params, opt2, gf2 = compat_shard_map(
+                    update, legacy_mesh=self.mesh,
                     in_specs=(self.param_pspecs, self.param_pspecs,
                               opt_specs, gf_specs, P()),
                     out_specs=(self.param_pspecs, opt_specs, gf_specs),
@@ -291,10 +305,10 @@ class Trainer:
         batch_in = self.batch_pspec(global_batch_tree)
         metrics_out = {"loss": P(), "aux_loss": P()}
 
-        sm = jax.shard_map(outer, mesh=self.mesh,
-                           in_specs=(state_in, batch_in),
-                           out_specs=(state_in, metrics_out),
-                           axis_names=manual_axes)
+        sm = compat_shard_map(outer, mesh=self.mesh,
+                              in_specs=(state_in, batch_in),
+                              out_specs=(state_in, metrics_out),
+                              axis_names=manual_axes)
         return jax.jit(sm, donate_argnums=(0,) if donate else ())
 
     def _accumulate(self, loss_fn, params_v, batch):

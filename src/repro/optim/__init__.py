@@ -23,3 +23,19 @@ def update_pool(name: str, *args, **kwargs):
     if name == "adamw":
         return adamw.update_pool(*args, **kwargs)
     raise ValueError(f"unknown optimizer {name}")
+
+
+def update_unpack(name: str, pool, master, grads, state, mask, cfg, lr, *,
+                  scale=None, use_kernels: bool = False):
+    """Fused update+unravel: returns (new_params_pytree, new_opt_state).
+
+    SGD/LARS take the single-pass kernel path; optimizers without a fused
+    kernel (adamw) fall back to update_pool + the static-slice unravel —
+    same output pytree, one extra pool pass."""
+    if name in ("momentum_sgd", "lars"):
+        return sgd.update_unpack(pool, master, grads, state, mask, cfg, lr,
+                                 scale=scale, use_kernels=use_kernels)
+    new_master, new_state = update_pool(name, master, grads, state, mask,
+                                        cfg, lr, scale=scale,
+                                        use_kernels=use_kernels)
+    return pool.unravel(new_master), new_state

@@ -32,10 +32,20 @@ class LARSScaler:
 
     def __init__(self, pool: GradientPool):
         self.pool = pool
+        # Segment lengths for expanding per-tensor ratios to pool space,
+        # from the pool's precomputed device-array table (padding gets its
+        # own unit-ratio segment), built once.
+        if pool.padding:
+            self._repeat_sizes = jnp.concatenate(
+                [pool.sizes_dev, jnp.asarray([pool.padding], jnp.int32)])
+        else:
+            self._repeat_sizes = pool.sizes_dev
 
-    def scale(self, master: jax.Array, grads: jax.Array,
-              cfg: OptimizerConfig,
-              mask: Optional[jax.Array] = None) -> jax.Array:
+    def ratios(self, master: jax.Array, grads: jax.Array,
+               cfg: OptimizerConfig,
+               mask: Optional[jax.Array] = None) -> jax.Array:
+        """f32[num_tensors] trust ratios (plus a trailing 1.0 for the pool
+        padding when present), via static spans over the pool layout."""
         g = grads if mask is None else jnp.where(mask, grads, 0.0)
         parts = []
         for spec in self.pool.specs:
@@ -47,8 +57,21 @@ class LARSScaler:
             g_norm = jnp.sqrt(jnp.sum(jnp.square(g_seg)))
             ratio = cfg.lars_eta * w_norm / (
                 g_norm + cfg.weight_decay * w_norm + cfg.lars_eps)
-            ratio = jnp.where((w_norm > 0.0) & (g_norm > 0.0), ratio, 1.0)
-            parts.append(jnp.broadcast_to(ratio, (spec.size,)))
+            parts.append(
+                jnp.where((w_norm > 0.0) & (g_norm > 0.0), ratio, 1.0))
         if self.pool.padding:
-            parts.append(jnp.ones((self.pool.padding,), master.dtype))
-        return jnp.concatenate(parts).astype(master.dtype)
+            parts.append(jnp.ones((), master.dtype))
+        return jnp.stack(parts)
+
+    def scale(self, master: jax.Array, grads: jax.Array,
+              cfg: OptimizerConfig,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+        """Pool-sized per-element LR scale. The per-tensor ratios expand
+        through the pool's precomputed segment table with a single
+        ``repeat`` (static total length) — the old per-tensor
+        broadcast+concatenate chain issued a pool-sized concatenate of
+        O(num_tensors) operands every step."""
+        r = self.ratios(master, grads, cfg, mask)
+        return jnp.repeat(r, self._repeat_sizes,
+                          total_repeat_length=self.pool.size
+                          ).astype(master.dtype)

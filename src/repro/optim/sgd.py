@@ -13,7 +13,7 @@ several XLA loops) — validated against this exact function in tests.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,3 +59,43 @@ def update_pool(
     new_mom = jnp.where(mask, u, state.momentum)
     new_master = jnp.where(mask, master - u, master)
     return new_master, SGDState(momentum=new_mom)
+
+
+def update_unpack(
+    pool,                    # GradientPool (segment table + treedef)
+    master: jax.Array,       # f32[pool] master params
+    grads: jax.Array,        # f32[pool] mean-reduced grads
+    state: SGDState,
+    mask: jax.Array,         # bool[pool]
+    cfg: OptimizerConfig,
+    lr: jax.Array,
+    *,
+    scale: Optional[jax.Array] = None,
+    use_kernels: bool = False,
+) -> Tuple[Any, SGDState]:
+    """Fused update + unravel: the single-pass pipeline's update side.
+
+    Where ``update_pool`` + ``GradientPool.unravel`` made two passes (write
+    the new master pool, then slice it back into tensors), this computes
+    the momentum-SGD step and emits the updated *parameter pytree*
+    directly from the pool segments — the new-master pool and the gradient
+    pytree are never materialized. Momentum stays in pool form (donated
+    across steps). Returns (new_params_pytree, new_state)."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+        leaves, new_mom = kops.pool_unpack_update(
+            master, grads, state.momentum, mask, pool.offsets, pool.sizes,
+            lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay,
+            scale=scale)
+    else:
+        from repro.kernels import ref
+        leaves, new_mom = ref.pool_unpack_update(
+            master, grads, state.momentum, mask, pool.offsets, pool.sizes,
+            lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay,
+            scale=scale)
+    # Restore each leaf to its declared param dtype (what unravel does on
+    # the two-pass path) so the output pytree's dtypes match state.params
+    # even for non-f32 pools.
+    leaves = [x if x.dtype == spec.dtype else x.astype(spec.dtype)
+              for x, spec in zip(leaves, pool.specs)]
+    return pool.unflatten(leaves), SGDState(momentum=new_mom)

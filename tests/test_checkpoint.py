@@ -11,6 +11,7 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint import reshard
 from repro.launch.mesh import make_mesh
+from repro.parallel.collectives import compat_abstract_mesh
 
 
 def _state(seed=0):
@@ -77,7 +78,7 @@ def test_reshard_plan_feasibility():
     assert bad == []  # model axis size 1 divides anything
     # a larger-than-local mesh is described abstractly (the supervisor
     # plans remeshes before devices exist)
-    abstract = jax.sharding.AbstractMesh((3, 1), ("data", "model"))
+    abstract = compat_abstract_mesh((3, 1), ("data", "model"))
     problems = reshard.plan(
         {"w": jax.ShapeDtypeStruct((8, 15), jnp.float32)},
         {"w": P(("data", "model"), None)}, abstract)

@@ -9,6 +9,7 @@ from repro.configs.base import GradientFlowConfig
 from repro.core import csc
 from repro.core.schedule import build_stages, num_selected_chunks, stage_at
 from repro.launch.mesh import make_mesh
+from repro.parallel.collectives import compat_set_mesh, compat_shard_map
 
 CHUNK = 64
 NCHUNK = 16
@@ -29,9 +30,9 @@ def run_reduce(pool_grads, state, cfg, k):
             num_data_shards=1)
         return res.grads, res.elem_mask, res.state.hg, res.state.chunk_norms
 
-    sm = jax.shard_map(f, mesh=mesh, in_specs=(P(None),) * 3,
-                       out_specs=(P(None),) * 4, axis_names={"data"})
-    with jax.sharding.set_mesh(mesh):
+    sm = compat_shard_map(f, mesh=mesh, in_specs=(P(None),) * 3,
+                          out_specs=(P(None),) * 4, axis_names={"data"})
+    with compat_set_mesh(mesh):
         return jax.jit(sm)(pool_grads, state.hg, state.chunk_norms)
 
 

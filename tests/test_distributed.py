@@ -19,6 +19,8 @@ def run_multi_device(body: str, devices: int = 8, timeout: int = 900):
         sys.path.insert(0, {SRC!r})
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.parallel.collectives import (compat_make_mesh,
+            compat_set_mesh, compat_shard_map)
     """) + textwrap.dedent(body)
     proc = subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, timeout=timeout)
@@ -32,8 +34,7 @@ def test_lazy_allreduce_sums_across_shards():
     run_multi_device("""
         from repro.core import GradientPool, GradientFlow, GFState
         from repro.configs.base import GradientFlowConfig
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_make_mesh((8,), ("data",))
         params = {"a": jnp.zeros((100, 8)), "b": jnp.zeros((64,))}
         pool = GradientPool(params, pad_to=64)
         cfg = GradientFlowConfig(mode="lazy", bucket_elems=256,
@@ -45,10 +46,10 @@ def test_lazy_allreduce_sums_across_shards():
             g = jnp.full((pool.size,), shard_val[0])
             red, mask, _ = gf.reduce(g, gf.init_state())
             return red
-        sm = jax.shard_map(step, mesh=mesh, in_specs=P("data"),
+        sm = compat_shard_map(step, mesh=mesh, in_specs=P("data"),
                            out_specs=P(None), axis_names={"data"})
         vals = jnp.arange(1.0, 9.0)
-        with jax.sharding.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             red = jax.jit(sm)(vals)
         # mean of 1..8 = 4.5
         np.testing.assert_allclose(np.asarray(red), 4.5, rtol=1e-6)
@@ -61,8 +62,7 @@ def test_csc_cross_shard_selection_agrees_and_reduces():
     run_multi_device("""
         from repro.core import csc
         from repro.configs.base import GradientFlowConfig
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_make_mesh((8,), ("data",))
         CHUNK, NCHUNK = 64, 8
         POOL = CHUNK * NCHUNK
         cfg = GradientFlowConfig(mode="csc", chunk_elems=CHUNK,
@@ -78,10 +78,10 @@ def test_csc_cross_shard_selection_agrees_and_reduces():
                                  bucket_boundaries=((0, 4 * CHUNK),),
                                  num_data_shards=8)
             return res.grads, res.elem_mask, res.state.chunk_norms
-        sm = jax.shard_map(step, mesh=mesh, in_specs=P("data"),
+        sm = compat_shard_map(step, mesh=mesh, in_specs=P("data"),
                            out_specs=(P(None), P(None), P(None)),
                            axis_names={"data"})
-        with jax.sharding.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             grads, mask, norms = jax.jit(sm)(jnp.arange(1.0, 9.0))
         m = np.asarray(mask)
         # transmitted chunks: mean over shards of (i+1) = 4.5
@@ -121,7 +121,7 @@ def test_trainer_2x2_mesh_modes_match_single_device():
             trainer = Trainer(cfg, mesh, rules)
             data = SyntheticLM(model_cfg.vocab_size, seed=0)
             losses = []
-            with jax.sharding.set_mesh(mesh):
+            with compat_set_mesh(mesh):
                 state = trainer.init_state(jax.random.PRNGKey(0))
                 step = trainer.build_train_step(donate=False)
                 for t in range(6):
@@ -146,16 +146,15 @@ def test_trainer_2x2_mesh_modes_match_single_device():
 def test_hierarchical_psum_matches_flat():
     run_multi_device("""
         from repro.parallel.collectives import hierarchical_psum
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat_make_mesh((2, 4), ("pod", "data"))
         def f(x):
             flat = jax.lax.psum(x, ("pod", "data"))
             hier = hierarchical_psum(x, "data", ("pod",))
             return flat, hier
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+        sm = compat_shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
                            out_specs=(P(None), P(None)),
                            axis_names={"pod", "data"})
-        with jax.sharding.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             # 13 elements: exercises the padding path
             x = jnp.arange(8 * 13.0)
             flat, hier = jax.jit(sm)(x)
@@ -199,7 +198,7 @@ def test_elastic_reshard_resume():
         mgr = CheckpointManager(tmp, keep=1)
 
         trainer, mesh = make((2, 2))
-        with jax.sharding.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             state = trainer.init_state(jax.random.PRNGKey(0))
             step = trainer.build_train_step(donate=False)
             for t in range(3):
@@ -212,7 +211,7 @@ def test_elastic_reshard_resume():
 
         for new_shape in [(4, 2), (1, 2)]:
             tr2, mesh2 = make(new_shape)
-            with jax.sharding.set_mesh(mesh2):
+            with compat_set_mesh(mesh2):
                 s2 = tr2.init_state(jax.random.PRNGKey(1))
                 _, restored = mgr.restore(s2)
                 restored = jax.tree_util.tree_map(

@@ -1,0 +1,223 @@
+"""Single-pass gradient-pool pipeline tests: pack/unpack round-trips vs the
+legacy ravel/unravel semantics (bit-for-bit), fused norms vs the census
+oracle, kernel-vs-ref twins, and the donation/aliasing contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.core.pool import GradientPool
+from repro.kernels import ops, ref
+from repro.kernels.pool_pack import pool_pack as k_pack
+from repro.kernels.pool_unpack import pool_unpack_update as k_unpack
+from repro.optim import sgd
+
+CHUNK = 256
+SIZES = [(7,), (33, 5), (2, 3, 4), (129,), (64, 2)]
+
+
+def make_tree(dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(SIZES))
+    return {f"t{i}": jax.random.normal(k, s, jnp.float32).astype(dtype)
+            for i, (k, s) in enumerate(zip(ks, SIZES))}
+
+
+def concat_oracle(pool: GradientPool, tree, dtype):
+    """The pre-pipeline ravel, kept as an independent oracle."""
+    flat = [leaf.reshape((-1,)).astype(dtype)
+            for leaf in reversed(jax.tree_util.tree_leaves(tree))]
+    if pool.padding:
+        flat.append(jnp.zeros((pool.padding,), dtype))
+    return jnp.concatenate(flat)
+
+
+@pytest.mark.parametrize("wire", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("pad_to", [1, CHUNK])
+def test_pack_matches_concat_oracle_bitexact(wire, pad_to):
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=pad_to)
+    got, _ = pool.pack(tree, dtype=wire)
+    want = concat_oracle(pool, tree, wire)
+    assert got.dtype == jnp.dtype(wire)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ravel is a thin wrapper over the same path
+    np.testing.assert_array_equal(np.asarray(pool.ravel(tree, dtype=wire)),
+                                  np.asarray(want))
+
+
+def test_pack_unravel_roundtrip_bitexact():
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    packed, _ = pool.pack(tree)
+    back = pool.unravel(packed)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("wire", [jnp.float32, jnp.bfloat16])
+def test_fused_norms_equal_census_of_ravel(wire):
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    _, norms = pool.pack(tree, dtype=wire, norms_chunk=CHUNK)
+    want = ref.chunk_l1norm(pool.ravel(tree, dtype=wire), CHUNK)
+    assert norms.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(norms), np.asarray(want))
+
+
+def test_pack_into_threads_staging_across_steps():
+    """Steady-state shape: the staging buffer from step t is the input of
+    step t+1 and each step's pool matches a fresh pack exactly."""
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+    staging = jnp.zeros((pool.size,), jnp.float32)
+    for seed in (1, 2, 3):
+        tree = make_tree(seed=seed)
+        p, norms, staging = pool.pack_into(staging, tree,
+                                           dtype=jnp.bfloat16,
+                                           norms_chunk=CHUNK)
+        fresh, fresh_norms = pool.pack(tree, dtype=jnp.bfloat16,
+                                       norms_chunk=CHUNK)
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(fresh))
+        np.testing.assert_array_equal(np.asarray(norms),
+                                      np.asarray(fresh_norms))
+
+
+@pytest.mark.parametrize("wire", [jnp.float32, jnp.bfloat16])
+def test_pool_pack_kernel_matches_ref(wire):
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    leaves = pool.flat_leaves(tree)
+    got_p, got_n = k_pack(tuple(leaves), pool.offsets, pool.sizes,
+                          pool.size, CHUNK, jnp.dtype(wire).name,
+                          interpret=True)
+    want_p, want_n, _ = ref.pool_pack(leaves, pool.offsets, pool.size,
+                                      CHUNK, wire)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_allclose(np.asarray(got_n), np.asarray(want_n),
+                               rtol=2e-5)
+
+
+def test_pool_pack_ops_dispatch_matches_ref():
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    leaves = pool.flat_leaves(tree)
+    got_p, got_n, _ = ops.pool_pack(leaves, pool.offsets, pool.sizes,
+                                    pool.size, CHUNK, jnp.bfloat16)
+    want_p, want_n, _ = ref.pool_pack(leaves, pool.offsets, pool.size,
+                                      CHUNK, jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_allclose(np.asarray(got_n), np.asarray(want_n),
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("has_scale", [False, True])
+@pytest.mark.parametrize("mask_frac", [0.0, 0.4, 1.0])
+def test_pool_unpack_update_kernel_matches_ref(has_scale, mask_frac):
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+    n = pool.size
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    master = jax.random.normal(ks[0], (n,))
+    grads = jax.random.normal(ks[1], (n,))
+    mom = jax.random.normal(ks[2], (n,))
+    mask = jax.random.bernoulli(ks[3], mask_frac, (n,))
+    scale = jnp.abs(jax.random.normal(ks[4], (n,))) if has_scale else None
+    got_leaves, got_mom = k_unpack(
+        master, grads, mom, mask, pool.offsets, pool.sizes, lr=0.05,
+        momentum=0.9, weight_decay=1e-4, scale=scale, interpret=True)
+    want_leaves, want_mom = ref.pool_unpack_update(
+        master, grads, mom, mask, pool.offsets, pool.sizes, lr=0.05,
+        momentum=0.9, weight_decay=1e-4, scale=scale)
+    np.testing.assert_allclose(np.asarray(got_mom), np.asarray(want_mom),
+                               rtol=1e-6, atol=1e-6)
+    for g, w in zip(got_leaves, want_leaves):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_update_unpack_equals_update_pool_plus_unravel():
+    """The fused update side is bit-compatible with the two-pass legacy
+    (update_pool then unravel) it replaces."""
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    n = pool.size
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    master = pool.ravel(tree)
+    grads = jax.random.normal(ks[0], (n,))
+    state = sgd.SGDState(momentum=jax.random.normal(ks[1], (n,)))
+    mask = jax.random.bernoulli(ks[2], 0.5, (n,))
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=1e-4)
+    params_fused, st_fused = sgd.update_unpack(
+        pool, master, grads, state, mask, cfg, 0.1)
+    new_master, st_legacy = sgd.update_pool(master, grads, state, mask,
+                                            cfg, 0.1)
+    params_legacy = pool.unravel(new_master)
+    np.testing.assert_array_equal(np.asarray(st_fused.momentum),
+                                  np.asarray(st_legacy.momentum))
+    for a, b in zip(jax.tree_util.tree_leaves(params_fused),
+                    jax.tree_util.tree_leaves(params_legacy)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pool_and_momentum_buffers_are_donated():
+    """The jitted pipeline step must alias its pool-form buffers: the
+    staging pool and the momentum pool come back at the same address, so
+    steady-state steps allocate no new pool-sized buffers."""
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=1e-4)
+
+    def step(staging, mom_state, grads_tree, master):
+        gpool, _, staging = pool.pack_into(staging, grads_tree)
+        mask = jnp.ones((pool.size,), bool)
+        params, mom_state = sgd.update_unpack(pool, master, gpool,
+                                              mom_state, mask, cfg, 0.1)
+        return staging, mom_state, params
+
+    jstep = jax.jit(step, donate_argnums=(0, 1))
+    staging = jnp.zeros((pool.size,), jnp.float32)
+    mom = sgd.SGDState(momentum=jnp.zeros((pool.size,), jnp.float32))
+    master = pool.ravel(tree)
+    staging_ptr = staging.unsafe_buffer_pointer()
+    mom_ptr = mom.momentum.unsafe_buffer_pointer()
+    staging2, mom2, _ = jstep(staging, mom, make_tree(seed=3), master)
+    assert staging.is_deleted() and mom.momentum.is_deleted()
+    assert staging2.unsafe_buffer_pointer() == staging_ptr
+    assert mom2.momentum.unsafe_buffer_pointer() == mom_ptr
+
+
+def test_pack_mixed_dtype_tree_promotes_like_concatenate():
+    """Regression: a pytree with mixed leaf dtypes must pack (per-leaf
+    promotion to the staging dtype), as the old concatenate-ravel did."""
+    tree = {"a": jnp.ones((8,), jnp.bfloat16), "b": jnp.ones((8,))}
+    pool = GradientPool(tree)
+    p, _ = pool.pack(tree)
+    assert p.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(p), 1.0)
+    p16, _ = pool.pack(tree, dtype=jnp.bfloat16)
+    assert p16.dtype == jnp.bfloat16
+
+
+def test_update_unpack_restores_param_dtype():
+    """Regression: the fused unpack must hand back leaves in the declared
+    param dtype (as unravel does), not the f32 master dtype."""
+    tree = {"w": jnp.ones((16,), jnp.bfloat16)}
+    pool = GradientPool(tree)
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=0.0)
+    master = pool.ravel(tree, dtype=jnp.float32)
+    params, _ = sgd.update_unpack(
+        pool, master, jnp.zeros((pool.size,)),
+        sgd.SGDState(momentum=jnp.zeros((pool.size,))),
+        jnp.ones((pool.size,), bool), cfg, 0.1)
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_num_chunks_requires_padded_multiple():
+    """Regression: the old assertion accepted `pad_to % chunk == 0` even
+    when the pool size itself was not chunk-aligned."""
+    tree = {"a": jnp.zeros((100,))}
+    pool = GradientPool(tree, pad_to=64)  # size 128
+    assert pool.num_chunks(64) == 2
+    bad = GradientPool(tree, pad_to=1)  # size 100, NOT chunk-aligned
+    with pytest.raises(AssertionError):
+        bad.num_chunks(64)

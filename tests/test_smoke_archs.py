@@ -15,6 +15,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.trainer import Trainer
 from repro.models import build_model
 from repro.parallel import sharding as sh
+from repro.parallel.collectives import compat_set_mesh
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
@@ -31,7 +32,7 @@ def test_smoke_train_step(arch):
     trainer = Trainer(cfg, mesh, rules)
     data = SyntheticLM(model_cfg.vocab_size, seed=0,
                        num_codebooks=model_cfg.num_codebooks)
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         state = trainer.init_state(jax.random.PRNGKey(0))
         step = trainer.build_train_step(donate=False)
         batch = data.batch(0, 2, 32)

@@ -188,14 +188,11 @@ def run_multi_device(body: str, devices: int = 8, timeout: int = 900):
         sys.path.insert(0, {SRC!r})
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.parallel.collectives import compat_shard_map
 
         def smap(f, mesh, in_specs, out_specs, axes):
-            if hasattr(jax, "shard_map"):
-                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                     out_specs=out_specs, axis_names=axes)
-            from jax.experimental.shard_map import shard_map
-            return shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False)
+            return compat_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, axis_names=axes)
     """) + textwrap.dedent(body)
     proc = subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, timeout=timeout)
