@@ -11,6 +11,19 @@ concatenate/dynamic-slice/copy ops and wall time, and emits
 
     python benchmarks/micro.py --pool-json BENCH_pool.json   # refresh baseline
     python benchmarks/micro.py --pool-check                  # CI gate
+
+``--kernel-check`` gates the streaming tiled pack/unpack kernels the same
+way against ``BENCH_kernels.json``: it re-validates kernel-vs-ref
+equivalence on a >4M-element pool (past the retired whole-pool-in-VMEM
+bound) and pins the streaming property itself — tile count, peak
+VMEM-resident bytes (must stay O(tile), never O(pool)), and the static
+copy-schedule size — so the kernels cannot silently regress to
+pool-resident variants. ``--kernel-json`` refreshes the baseline (adds
+wall time, informational only).
+
+This module must import clean with no dev extras installed (the CI bench
+jobs run ``pip install -e .`` without ``[dev]`` and assert exactly that):
+runtime deps only — jax + numpy + repro.
 """
 from __future__ import annotations
 
@@ -182,6 +195,176 @@ def pool_pipeline(measure_time: bool = True) -> Dict:
     return result
 
 
+# -- streaming kernel benchmark (tile count / VMEM residency gate) ----------
+
+# >4M elements — past the retired 4M whole-pool-in-VMEM bound — with odd
+# tensor sizes so segments straddle tile boundaries in the copy schedule.
+KERNEL_BENCH_SHAPES = [
+    (1024, 1024), (1536, 1024), (999, 777), (640_000,),
+    (131_072,), (50_000,), (4096,), (1000,), (31,),
+]
+
+
+def kernel_bench(measure_time: bool = True) -> Dict:
+    """Streaming tiled pack/unpack vs the ref oracles on a >4M pool.
+
+    Records the properties the CI gate pins: kernel/ref equivalence, tile
+    count (>1 = actually streaming), static copy-schedule size, and the
+    analytic peak VMEM-resident bytes (O(tile), pool-size independent).
+    Wall time is recorded for trend-watching but never gated (interpret
+    mode on CPU is not the production execution model)."""
+    from repro.kernels import pool_pack as pp_mod
+    from repro.kernels import pool_unpack as pu_mod
+
+    grads = {f"t{i}": jnp.ones(s, jnp.float32)
+             for i, s in enumerate(KERNEL_BENCH_SHAPES)}
+    pool = GradientPool(grads, pad_to=CHUNK)
+    assert pool.size > 4 * 1024 * 1024, pool.size
+    leaves = pool.flat_leaves(grads)
+    key = jax.random.PRNGKey(0)
+    leaves = [jax.random.normal(k, x.shape)
+              for k, x in zip(jax.random.split(key, len(leaves)), leaves)]
+
+    pack_plan = pp_mod.plan(pool.offsets, pool.sizes, pool.size, CHUNK,
+                            jnp.float32, jnp.bfloat16)
+    k_pack = lambda: ops.pool_pack(leaves, pool.offsets, pool.sizes,
+                                   pool.size, CHUNK, jnp.bfloat16)
+    counts_before = dict(ops.dispatch_counts)
+    got_p, got_n, _ = k_pack()
+    want_p, want_n, _ = ref.pool_pack(leaves, pool.offsets, pool.size,
+                                      CHUNK, jnp.bfloat16)
+    norms_err = float(jnp.max(jnp.abs(got_n - want_n) /
+                              jnp.maximum(jnp.abs(want_n), 1e-6)))
+    def took_kernel_path(name, before):
+        """ops counts its kernel/ref decision in python at call time —
+        this is the proof the streaming kernel is the path actually
+        dispatched (output equality alone can't tell: ref == kernel)."""
+        kern = ops.dispatch_counts.get(f"{name}.kernel", 0) \
+            - before.get(f"{name}.kernel", 0)
+        fell_back = ops.dispatch_counts.get(f"{name}.ref", 0) \
+            - before.get(f"{name}.ref", 0)
+        return kern > 0 and fell_back == 0
+
+    pack_row = {
+        "tile_elems": pack_plan["tile_elems"],
+        "num_tiles": pack_plan["num_tiles"],
+        "num_copies": pack_plan["num_copies"],
+        "vmem_bytes": pack_plan["vmem_bytes"],
+        "kernel_dispatched": took_kernel_path("pool_pack", counts_before),
+        "pool_exact": bool(jnp.array_equal(got_p, want_p)),
+        "norms_rel_err": norms_err,
+    }
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    master = jax.random.normal(ks[0], (pool.size,))
+    rgrads = jax.random.normal(ks[1], (pool.size,))
+    mom = jax.random.normal(ks[2], (pool.size,))
+    mask = jax.random.bernoulli(ks[3], 0.5, (pool.size,))
+    ratios = jnp.abs(jax.random.normal(jax.random.PRNGKey(2),
+                                       (pool.num_tensors,))) + 0.1
+    upd_plan = pu_mod.plan(pool.offsets, pool.sizes, pool.size,
+                           jnp.float32, has_ratios=True)
+    kw = dict(lr=0.05, momentum=0.9, weight_decay=1e-4, ratios=ratios)
+    k_upd = lambda: ops.update_unpack(master, rgrads, mom, mask,
+                                      pool.offsets, pool.sizes, **kw)
+    counts_before_upd = dict(ops.dispatch_counts)
+    got_l, got_m = k_upd()
+    want_l, want_m = ref.pool_unpack_update(master, rgrads, mom, mask,
+                                            pool.offsets, pool.sizes, **kw)
+    leaf_err = max(float(jnp.max(jnp.abs(g - w)))
+                   for g, w in zip(got_l, want_l))
+    upd_row = {
+        "tile_elems": upd_plan["tile_elems"],
+        "num_tiles": upd_plan["num_tiles"],
+        "num_copies": upd_plan["num_copies"],
+        "vmem_bytes": upd_plan["vmem_bytes"],
+        "kernel_dispatched": took_kernel_path("update_unpack",
+                                              counts_before_upd),
+        # Not gated bit-exact: XLA may fuse the multiply-adds differently
+        # in the two graphs; the test-suite tolerance (1e-6) applies.
+        "mom_max_abs_err": float(jnp.max(jnp.abs(got_m - want_m))),
+        "leaves_max_abs_err": leaf_err,
+    }
+
+    if measure_time:
+        pack_row["wall_us_kernel"] = timeit(lambda: k_pack()[0], warmup=1,
+                                            iters=3)
+        pack_row["wall_us_ref"] = timeit(
+            jax.jit(lambda ls: ref.pool_pack(ls, pool.offsets, pool.size,
+                                             CHUNK, jnp.bfloat16)[0]),
+            leaves, warmup=1, iters=3)
+        upd_row["wall_us_kernel"] = timeit(lambda: k_upd()[1], warmup=1,
+                                           iters=3)
+        upd_row["wall_us_ref"] = timeit(
+            jax.jit(lambda m, g, mo, ma: ref.pool_unpack_update(
+                m, g, mo, ma, pool.offsets, pool.sizes, **kw)[1]),
+            master, rgrads, mom, mask, warmup=1, iters=3)
+    return {
+        "workload": "straddle_4M",
+        "pool_elems": pool.size,
+        "num_tensors": pool.num_tensors,
+        "chunk_elems": CHUNK,
+        "jax_version": jax.__version__,
+        "pack": pack_row,
+        "unpack": upd_row,
+    }
+
+
+# Peak VMEM the streaming kernels may claim per pallas_call — well under
+# the ~16MiB/core budget so double buffering always has headroom.
+_KERNEL_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def check_kernel_regression(baseline_path: str) -> int:
+    """CI gate: fail (exit 1) if the tiled kernels diverge from the ref
+    oracles on the >4M pool, stop streaming (single tile), exceed the VMEM
+    budget, or — when the environment's jax matches the baseline's — drift
+    in tile count / copy-schedule size / VMEM bytes without the committed
+    BENCH_kernels.json being refreshed alongside."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    cur = kernel_bench(measure_time=False)
+    failures = []
+    for side, name in (("pack", "pool_pack"), ("unpack", "update_unpack")):
+        if not cur[side]["kernel_dispatched"]:
+            failures.append(
+                f"ops.{name} did not dispatch to the streaming kernel on "
+                "the >4M pool (ref fallback reintroduced?)")
+    if not cur["pack"]["pool_exact"]:
+        failures.append("tiled pool_pack no longer bit-exact vs ref")
+    if cur["pack"]["norms_rel_err"] > 2e-5:
+        failures.append(
+            f"pack census rel err {cur['pack']['norms_rel_err']:.2e} > 2e-5")
+    for k in ("mom_max_abs_err", "leaves_max_abs_err"):
+        if cur["unpack"][k] > 1e-6:
+            failures.append(
+                f"unpack {k} {cur['unpack'][k]:.2e} > 1e-6")
+    for side in ("pack", "unpack"):
+        if cur[side]["num_tiles"] <= 1:
+            failures.append(f"{side} kernel is not streaming "
+                            f"(num_tiles={cur[side]['num_tiles']})")
+        if cur[side]["vmem_bytes"] > _KERNEL_VMEM_BUDGET:
+            failures.append(
+                f"{side} peak VMEM {cur[side]['vmem_bytes']} bytes exceeds "
+                f"budget {_KERNEL_VMEM_BUDGET}")
+    # The tiling fields are pure-python schedule arithmetic — independent
+    # of the installed jax/XLA — so the drift comparison applies
+    # unconditionally (unlike the pool-bench HLO op counts).
+    for side in ("pack", "unpack"):
+        for k in ("tile_elems", "num_tiles", "num_copies", "vmem_bytes"):
+            if cur[side][k] != base[side][k]:
+                failures.append(
+                    f"{side}.{k} drifted: {cur[side][k]} != baseline "
+                    f"{base[side][k]} (refresh BENCH_kernels.json if "
+                    "intentional)")
+    for msg in failures:
+        print(f"KERNEL BENCH REGRESSION: {msg}")
+    if not failures:
+        print(f"kernel bench OK: pack={cur['pack']} "
+              f"unpack={cur['unpack']}")
+    return 1 if failures else 0
+
+
 def check_pool_regression(baseline_path: str, measure_time: bool = False
                           ) -> int:
     """CI gate: re-run the op-count benchmark and fail (exit 1) if the
@@ -233,10 +416,28 @@ def main() -> int:
     ap.add_argument("--pool-check", action="store_true",
                     help="op-count mode: compare against the committed "
                          "BENCH_pool.json; exit 1 on regression")
+    ap.add_argument("--kernel-json", metavar="PATH",
+                    help="run the streaming-kernel benchmark (with wall "
+                         "time) and write the baseline JSON")
+    ap.add_argument("--kernel-check", action="store_true",
+                    help="kernel gate: re-validate tiled pack/unpack vs "
+                         "ref on a >4M pool and compare tile count / peak "
+                         "VMEM bytes against the committed "
+                         "BENCH_kernels.json; exit 1 on regression")
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     if args.pool_check:
         return check_pool_regression(os.path.join(root, "BENCH_pool.json"))
+    if args.kernel_check:
+        return check_kernel_regression(
+            os.path.join(root, "BENCH_kernels.json"))
+    if args.kernel_json:
+        res = kernel_bench(measure_time=True)
+        with open(args.kernel_json, "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
+        print(json.dumps(res, indent=2))
+        return 0
     if args.pool_json:
         res = pool_pipeline(measure_time=True)
         with open(args.pool_json, "w") as f:

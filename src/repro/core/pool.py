@@ -91,13 +91,12 @@ class GradientPool:
         rem = offset % self.pad_to
         self.padding = (self.pad_to - rem) % self.pad_to
         self.size = offset + self.padding
-        # Static segment table, precomputed once: python tuples specialize
-        # the pack/unpack kernels (every slice compile-time constant); the
-        # device-array form serves runtime consumers (the LARS scale
-        # expansion) without rebuilding per step.
+        # Static segment table, precomputed once: python tuples that
+        # specialize the pack/unpack kernels — every slice, and the whole
+        # leaf<->tile DMA schedule of the streaming kernels, is a
+        # compile-time constant derived from these.
         self.offsets: Tuple[int, ...] = tuple(s.offset for s in self.specs)
         self.sizes: Tuple[int, ...] = tuple(s.size for s in self.specs)
-        self.sizes_dev = jnp.asarray(self.sizes or (0,), jnp.int32)
 
     # -- single-pass pack / unpack (the pipeline entry points) -------------
 
@@ -124,7 +123,7 @@ class GradientPool:
 
     def pack(self, grads: Any, dtype: Any = None, *,
              norms_chunk: int = 0, use_kernels: bool = False,
-             out: Optional[jax.Array] = None,
+             out: Optional[jax.Array] = None, tile_elems: int = 0,
              ) -> Tuple[jax.Array, Optional[jax.Array]]:
         """Pytree → (1-D pool, optional f32 per-chunk L1 norms), one pass.
 
@@ -135,9 +134,13 @@ class GradientPool:
         0`` additionally emits the per-chunk L1 norms of the packed (wire)
         values. ``out`` optionally supplies the staging buffer (see
         ``pack_into`` for the donation-threading variant that returns it).
-        """
+
+        ``use_kernels=True`` routes through the streaming tiled Pallas
+        kernel at EVERY pool size: leaf slices DMA through ~512KiB VMEM
+        tiles (``tile_elems`` overrides the auto tile), so peak on-chip
+        residency is O(tile) rather than O(pool)."""
         pool, norms, _ = self._pack(grads, dtype, norms_chunk, use_kernels,
-                                    out)
+                                    out, tile_elems)
         return pool, norms
 
     def pack_into(self, out: jax.Array, grads: Any, dtype: Any = None, *,
@@ -148,9 +151,10 @@ class GradientPool:
         norms, staging) so the caller can thread the staging buffer
         through a donated jit argument — steady-state packs then allocate
         no pool-sized buffer and skip the zero-fill entirely."""
-        return self._pack(grads, dtype, norms_chunk, False, out)
+        return self._pack(grads, dtype, norms_chunk, False, out, 0)
 
-    def _pack(self, grads, dtype, norms_chunk, use_kernels, out):
+    def _pack(self, grads, dtype, norms_chunk, use_kernels, out,
+              tile_elems=0):
         leaves = self.flat_leaves(grads)
         if dtype is None:
             dtype = jnp.result_type(*leaves) if leaves else jnp.float32
@@ -159,7 +163,8 @@ class GradientPool:
         if use_kernels:
             from repro.kernels import ops as kops
             return kops.pool_pack(leaves, self.offsets, self.sizes,
-                                  self.size, norms_chunk, dtype, out=out)
+                                  self.size, norms_chunk, dtype, out=out,
+                                  tile_elems=tile_elems)
         from repro.kernels import ref
         return ref.pool_pack(leaves, self.offsets, self.size, norms_chunk,
                              dtype, out=out)

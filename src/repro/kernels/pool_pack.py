@@ -1,37 +1,47 @@
-"""Pallas TPU kernel: single-pass gradient-pool pack (paper §3.1, Fig 15).
+"""Pallas TPU kernel: streaming tiled gradient-pool pack (paper §3.1, Fig 15).
 
-The legacy path built the pool from an O(num_tensors) reshape+concatenate
-chain, then made a *second* full pass to cast to the wire dtype and a
-*third* for CSC's per-chunk L1 census — three HBM round trips over a
-pool that can be hundreds of MB per shard. This kernel does all of it in
-one pass: every leaf is DMA'd from its backward-pass buffer straight into
-its static segment of the pool, cast to the wire dtype in VMEM on the way
-through, and the chunk-L1 census is reduced from the same resident data
-before it is written out.
+One pass over the pool, never pool-resident: the grid walks ~512KiB tiles
+of the output pool, and each grid step DMAs exactly the leaf slices that
+land in its tile from HBM into a double-buffered VMEM scratch slot, casts
+them to the wire dtype on the way out, and reduces the tile's chunk-L1
+census from the same resident data. Peak VMEM is O(tile), independent of
+pool size — this retires the whole-pool-in-VMEM variant (and its 4M-element
+ref fallback in ``ops.py``): the streaming kernel is the production path at
+every pool size; the jnp twin in ``ref.py`` remains as the correctness
+oracle and the shard_map/interpret fallback only.
 
-The segment table (per-leaf offset/size) is compile-time static — it comes
-from ``GradientPool.specs``, which is built once from the parameter
-structure — so every slice below is a static `pl.ds` and the compiler sees
-a fixed DMA schedule (no scatter/gather indexing at all; the paper's
-"zero-copy" property).
+Mechanics (see ``tiling.py`` for the schedule):
 
-This is the whole-pool-resident variant: leaves and pool live in VMEM for
-the duration of the (single-program) grid, which bounds it to pools of a
-few MiB per invocation. That covers the per-model-shard pools of the test
-and benchmark configs; bigger pools take the jnp twin in ``ref.py``
-(semantically identical, validated bit-for-bit in
-tests/test_pool_pipeline.py), whose dynamic-update-slice writes XLA also
-performs in place. A production blocked variant would stream (rows,
-chunk) tiles like ``chunk_l1norm`` with per-tile async copies.
+* The segment table (``GradientPool.offsets``/``sizes``) is compile-time
+  static, so the leaf↔tile intersection schedule is too. A segment that
+  straddles a tile boundary contributes one static copy per tile it
+  crosses; the kernel unrolls the schedule into ``pl.when(i == tile)``
+  blocks — a fixed DMA program, no scatter/gather indexing (the paper's
+  "zero-copy" property).
+* Leaves stay in HBM (``memory_space=ANY``); tile t's copies are *started*
+  at grid step t-1 into VMEM slot ``t % 2`` and *waited on* at step t, so
+  the DMA for the next tile overlaps the cast+census compute of the
+  current one (classic double buffering; the output tile is additionally
+  pipelined by Pallas' own block machinery).
+* The trailing CSC padding is zero-filled per tile from the same static
+  schedule, and the final tile may be ragged (the pool need not be a
+  multiple of the tile) — Pallas masks the edge block.
+
+Schedule size is O(num_leaves + num_tiles) ``pl.when`` blocks; at the
+default ~512KiB tile a 400M-element shard unrolls ~3000 tiles, which is
+trace-heavy but compiles to a fixed predicated copy list.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tiling
 
 
 def _struct(shape, dtype, like):
@@ -46,26 +56,76 @@ def _struct(shape, dtype, like):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def _kernel(*refs, offsets, sizes, pool_size, chunk_elems, with_norms):
-    n = len(offsets)
-    leaf_refs = refs[:n]
-    pool_ref = refs[n]
-    # Pack + cast: one static-offset VMEM write per leaf.
-    for leaf, off, sz in zip(leaf_refs, offsets, sizes):
-        pool_ref[pl.ds(off, sz)] = leaf[...].astype(pool_ref.dtype)
-    covered = offsets[-1] + sizes[-1] if n else 0
-    if covered < pool_size:  # tail padding (CSC chunk alignment)
-        pool_ref[pl.ds(covered, pool_size - covered)] = jnp.zeros(
-            (pool_size - covered,), pool_ref.dtype)
+def _kernel(*refs, plan: tiling.TilePlan, n_leaves, chunk_elems, rows,
+            with_norms):
+    leaf_refs = refs[:n_leaves]
+    pool_ref = refs[n_leaves]
+    norms_ref = refs[n_leaves + 1] if with_norms else None
+    scratch, sems = refs[-2], refs[-1]
+    i = pl.program_id(0)
+
+    for c in plan.copies:
+        slot = c.tile % 2
+
+        def dma(c=c, slot=slot):
+            return pltpu.make_async_copy(
+                leaf_refs[c.leaf].at[pl.ds(c.src_lo, c.elems)],
+                scratch.at[slot, pl.ds(c.dst_lo, c.elems)],
+                sems.at[slot])
+
+        # Prefetch: tile t's slices are in flight while tile t-1 computes.
+        @pl.when(i == max(c.tile - 1, 0))
+        def _(dma=dma):
+            dma().start()
+
+        @pl.when(i == c.tile)
+        def _(dma=dma):
+            dma().wait()
+
+    for f in plan.fills:  # trailing CSC padding → zeros, plain VMEM write
+        @pl.when(i == f.tile)
+        def _(f=f):
+            scratch[f.tile % 2, pl.ds(f.dst_lo, f.elems)] = jnp.zeros(
+                (f.elems,), scratch.dtype)
+
+    staged = scratch[i % 2]
+    wire = staged.astype(pool_ref.dtype)
+    pool_ref[...] = wire
     if with_norms:
-        norms_ref = refs[n + 1]
-        x = pool_ref[...].astype(jnp.float32).reshape(-1, chunk_elems)
+        x = wire.astype(jnp.float32).reshape(rows, chunk_elems)
         norms_ref[...] = jnp.sum(jnp.abs(x), axis=1)
+
+
+def plan(offsets: Tuple[int, ...], sizes: Tuple[int, ...], pool_size: int,
+         chunk_elems: int, src_dtype, wire_dtype,
+         tile_elems: int = 0) -> Dict:
+    """Tile plan + analytic VMEM footprint (benchmarks / the CI kernel
+    gate read this; the kernel itself builds from the same schedule)."""
+    src_size = tiling.itemsize(src_dtype)
+    if chunk_elems > 0:
+        # Census pools hold whole chunks, and census tiles must too so
+        # every tile emits complete per-chunk norms (the second assert
+        # lives here, not only in pick_tile, because a forced tile_elems
+        # bypasses pick_tile).
+        assert pool_size % chunk_elems == 0, (pool_size, chunk_elems)
+        if tile_elems:
+            assert tile_elems % chunk_elems == 0, (tile_elems, chunk_elems)
+    tile = tile_elems or tiling.pick_tile(pool_size, chunk_elems, src_size)
+    sched = tiling.tile_schedule(tuple(offsets), tuple(sizes), pool_size,
+                                 tile)
+    rows = tile // chunk_elems if chunk_elems > 0 else 0
+    vmem = 2 * tile * src_size                     # double-buffered scratch
+    vmem += 2 * tile * tiling.itemsize(wire_dtype)  # pipelined out block
+    if chunk_elems > 0:
+        vmem += 2 * rows * 4                       # pipelined norms block
+    return {"plan": sched, "tile_elems": tile, "num_tiles": sched.num_tiles,
+            "num_copies": sched.num_copies, "rows": rows,
+            "vmem_bytes": vmem}
 
 
 @functools.partial(jax.jit, static_argnames=(
     "offsets", "sizes", "pool_size", "chunk_elems", "wire_dtype",
-    "interpret"))
+    "tile_elems", "interpret"))
 def pool_pack(
     leaves: Sequence[jax.Array],
     offsets: Tuple[int, ...],
@@ -73,26 +133,42 @@ def pool_pack(
     pool_size: int,
     chunk_elems: int,
     wire_dtype,
+    tile_elems: int = 0,
     interpret: bool = True,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """1-D leaves -> (pool[pool_size] in wire dtype, f32 chunk norms).
 
-    ``chunk_elems == 0`` skips the norm output (plain ravel+cast)."""
+    ``chunk_elems == 0`` skips the norm output (plain ravel+cast);
+    ``tile_elems`` overrides the ~512KiB auto tile (tests force tiny tiles
+    to exercise boundary straddling)."""
     wire = jnp.dtype(wire_dtype)
     with_norms = chunk_elems > 0
-    if with_norms:
-        assert pool_size % chunk_elems == 0, (pool_size, chunk_elems)
-    like = leaves[0] if leaves else jnp.zeros((0,))
+    assert leaves, "empty leaf list takes the ref path (ops.pool_pack)"
+    src = jnp.result_type(*leaves)
+    # DMA cannot cast: a mixed-dtype tree promotes each leaf to the staging
+    # dtype here (a no-op for the uniform-dtype common case), matching the
+    # ref twin's promotion semantics.
+    leaves = [x if x.dtype == src else x.astype(src) for x in leaves]
+    p = plan(offsets, sizes, pool_size, chunk_elems, src, wire, tile_elems)
+    sched, tile, rows = p["plan"], p["tile_elems"], p["rows"]
+    like = leaves[0]
     out_shape = [_struct((pool_size,), wire, like)]
+    out_specs = [pl.BlockSpec((tile,), lambda i: (i,))]
     if with_norms:
         out_shape.append(
             _struct((pool_size // chunk_elems,), jnp.float32, like))
-    kern = functools.partial(
-        _kernel, offsets=tuple(offsets), sizes=tuple(sizes),
-        pool_size=pool_size, chunk_elems=chunk_elems, with_norms=with_norms)
+        out_specs.append(pl.BlockSpec((rows,), lambda i: (i,)))
+    kern = functools.partial(_kernel, plan=sched, n_leaves=len(leaves),
+                             chunk_elems=chunk_elems, rows=rows,
+                             with_norms=with_norms)
     out = pl.pallas_call(
         kern,
+        grid=(sched.num_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * len(leaves),
+        out_specs=tuple(out_specs),
         out_shape=tuple(out_shape),
+        scratch_shapes=[pltpu.VMEM((2, tile), src),
+                        pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
     )(*leaves)
     return (out[0], out[1]) if with_norms else (out[0], None)

@@ -1,29 +1,41 @@
-"""Pallas TPU kernel: fused pool unpack + momentum-SGD update.
+"""Pallas TPU kernel: streaming tiled pool unpack + momentum-SGD update.
 
-The inverse seam of ``pool_pack``: the optimizer update (Algorithm 1) and
-the pool→pytree unravel used to be two separate passes — a 4-buffer
-elementwise loop producing a new master pool, then one dynamic-slice per
-tensor to rebuild the parameter tree. This kernel computes the update and
-writes each tensor's updated segment *directly* to its own output buffer
-via the static segment table, so the full new-master pool is never
-round-tripped through HBM and the gradient pytree is never materialized
-on the update side at all. Momentum stays in pool form (one buffer, donated
-across steps).
+The DMA-out mirror of ``pool_pack``: the grid walks ~512KiB tiles of the
+pool, each step computes the CSC-masked momentum-SGD update (Algorithm 1,
+shared ``fused_update.update_math``) on the tile's slice of the
+master/grads/momentum/mask operands — all streamed in by Pallas' block
+pipeline — and then DMAs each updated *segment* of the tile straight out
+to its own per-tensor leaf buffer via the static segment table. The new
+master pool is never materialized in HBM and peak VMEM is O(tile),
+independent of pool size; this retires the whole-pool-in-VMEM variant and
+its 4M-element ref fallback (``ref.pool_unpack_update`` remains as the
+correctness oracle and the shard_map/interpret fallback only).
 
-Same residency caveat as ``pool_pack``: single-program whole-pool-in-VMEM
-variant, sized for per-model-shard pools of a few MiB; larger pools use
-the jnp twin (``ref.pool_unpack_update``), whose static ``lax.slice``
-reads XLA fuses into the consumers. A production blocked variant would
-grid over chunk tiles and DMA each updated segment out as it completes.
+Double buffering runs on the *output* side here: tile t's updated values
+are written to VMEM slot ``t % 2`` and its leaf DMAs started at step t,
+but waited on at step t+1 — the copies drain while the next tile
+computes. Segments straddling a tile boundary contribute one static copy
+per tile they cross (see ``tiling.py``); the final tile may be ragged and
+the copy schedule is clipped to the pool, so no garbage edge lane ever
+reaches a leaf.
+
+LARS rides along without its pool-sized scale buffer: pass the per-tensor
+``ratios`` vector (O(num_tensors), SMEM-resident) and each tile expands it
+to a per-element scale in VMEM from the same static schedule — padding
+ranges scale by 1.0, matching the ref twin's expanded-scale semantics.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tiling
+from repro.kernels.fused_update import update_math
 
 
 def _struct(shape, dtype, like):
@@ -38,24 +50,85 @@ def _struct(shape, dtype, like):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def _kernel(lr_ref, master_ref, grads_ref, mom_ref, mask_ref, scale_ref,
-            *out_refs, momentum, weight_decay, has_scale, offsets, sizes):
-    lr = lr_ref[0]
-    master = master_ref[...]
-    g = grads_ref[...] + weight_decay * master
+def _kernel(*refs, plan: tiling.TilePlan, n_leaves, momentum, weight_decay,
+            has_scale, has_ratios):
+    (lr_ref, master_ref, grads_ref, mom_ref, mask_ref, scale_ref,
+     ratios_ref) = refs[:7]
+    new_mom_ref = refs[7]
+    leaf_refs = refs[8:8 + n_leaves]
+    out_scratch, sems = refs[-3], refs[-2]
+    scale_scratch = refs[-1]
+    i = pl.program_id(0)
+    last = plan.num_tiles - 1
+
+    if has_ratios:
+        # Expand the per-tensor ratios to a per-element scale tile: one
+        # static ranged fill per segment in this tile, 1.0 for padding.
+        for c in plan.copies:
+            @pl.when(i == c.tile)
+            def _(c=c):
+                scale_scratch[pl.ds(c.dst_lo, c.elems)] = jnp.full(
+                    (c.elems,), ratios_ref[c.leaf], scale_scratch.dtype)
+        for f in plan.fills:
+            @pl.when(i == f.tile)
+            def _(f=f):
+                scale_scratch[pl.ds(f.dst_lo, f.elems)] = jnp.ones(
+                    (f.elems,), scale_scratch.dtype)
+
+    scale = None
     if has_scale:
-        g = g * scale_ref[...]
-    u = momentum * mom_ref[...] + lr * g
-    mask = mask_ref[...]
-    new_mom_ref = out_refs[0]
-    new_mom_ref[...] = jnp.where(mask, u, mom_ref[...])
-    new_master = jnp.where(mask, master - u, master)
-    for ref, off, sz in zip(out_refs[1:], offsets, sizes):
-        ref[...] = jax.lax.slice(new_master, (off,), (off + sz,))
+        scale = scale_ref[...]
+    elif has_ratios:
+        scale = scale_scratch[...]
+    new_master, new_mom = update_math(
+        master_ref[...], grads_ref[...], mom_ref[...], mask_ref[...],
+        lr_ref[0], momentum=momentum, weight_decay=weight_decay,
+        scale=scale)
+    new_mom_ref[...] = new_mom
+    slot = i % 2
+    out_scratch[slot] = new_master
+
+    for c in plan.copies:
+        def dma(c=c):
+            return pltpu.make_async_copy(
+                out_scratch.at[c.tile % 2, pl.ds(c.dst_lo, c.elems)],
+                leaf_refs[c.leaf].at[pl.ds(c.src_lo, c.elems)],
+                sems.at[c.tile % 2])
+
+        @pl.when(i == c.tile)
+        def _(dma=dma):
+            dma().start()
+
+        # Drain while tile t+1 computes; the last tile waits in-step.
+        @pl.when(i == min(c.tile + 1, last))
+        def _(dma=dma):
+            dma().wait()
+
+
+def plan(offsets: Tuple[int, ...], sizes: Tuple[int, ...], pool_size: int,
+         master_dtype, *, has_scale: bool = False, has_ratios: bool = False,
+         tile_elems: int = 0):
+    """Tile plan + analytic VMEM footprint (benchmarks / CI gate)."""
+    msize = tiling.itemsize(master_dtype)
+    tile = tile_elems or tiling.pick_tile(pool_size, 0, msize)
+    sched = tiling.tile_schedule(tuple(offsets), tuple(sizes), pool_size,
+                                 tile)
+    # Pipelined input blocks (x2 each): master, grads, momentum, mask,
+    # optional pool-sized scale; pipelined new-momentum out block; the
+    # double-buffered out scratch; the ratio-expansion scratch.
+    per_elem = msize * 3 + 1 + (4 if has_scale else 0)
+    vmem = 2 * tile * per_elem
+    vmem += 2 * tile * 4          # new_mom out block
+    vmem += 2 * tile * msize      # out_scratch slots
+    if has_ratios:
+        vmem += tile * 4          # scale_scratch
+    return {"plan": sched, "tile_elems": tile, "num_tiles": sched.num_tiles,
+            "num_copies": sched.num_copies, "vmem_bytes": vmem}
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "offsets", "sizes", "momentum", "weight_decay", "interpret"))
+    "offsets", "sizes", "momentum", "weight_decay", "tile_elems",
+    "interpret"))
 def pool_unpack_update(
     master: jax.Array,
     grads: jax.Array,
@@ -68,23 +141,51 @@ def pool_unpack_update(
     momentum: float,
     weight_decay: float,
     scale: Optional[jax.Array] = None,
+    ratios: Optional[jax.Array] = None,
+    tile_elems: int = 0,
     interpret: bool = True,
 ) -> Tuple[List[jax.Array], jax.Array]:
-    """Returns (updated 1-D leaves in segment-table order, new momentum)."""
+    """Returns (updated 1-D leaves in segment-table order, new momentum).
+
+    ``scale`` is a pool-sized per-element LR scale; ``ratios`` the
+    per-tensor LARS vector expanded on the fly inside the kernel (pass at
+    most one). ``tile_elems`` overrides the ~512KiB auto tile."""
     n = master.shape[0]
-    has_scale = scale is not None
+    has_scale, has_ratios = scale is not None, ratios is not None
+    assert not (has_scale and has_ratios), "pass scale OR ratios, not both"
+    p = plan(offsets, sizes, n, master.dtype, has_scale=has_scale,
+             has_ratios=has_ratios, tile_elems=tile_elems)
+    sched, tile = p["plan"], p["tile_elems"]
     if scale is None:
-        scale = jnp.ones((1,), jnp.float32)  # dummy operand, never read
+        scale = jnp.ones((1,), jnp.float32)   # dummy operand, never read
+    if ratios is None:
+        ratios = jnp.ones((1,), jnp.float32)  # dummy operand, never read
     lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    one = pl.BlockSpec((1,), lambda i: (0,))  # broadcast to every tile
     kern = functools.partial(
-        _kernel, momentum=momentum, weight_decay=weight_decay,
-        has_scale=has_scale, offsets=tuple(offsets), sizes=tuple(sizes))
+        _kernel, plan=sched, n_leaves=len(sizes), momentum=momentum,
+        weight_decay=weight_decay, has_scale=has_scale,
+        has_ratios=has_ratios)
     out_shape = tuple(
         [_struct((n,), momentum_buf.dtype, momentum_buf)]
         + [_struct((sz,), master.dtype, master) for sz in sizes])
+    out_specs = tuple(
+        [vec] + [pl.BlockSpec(memory_space=pltpu.ANY)] * len(sizes))
     out = pl.pallas_call(
         kern,
+        grid=(sched.num_tiles,),
+        in_specs=[one, vec, vec, vec, vec,
+                  vec if has_scale else one,
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=out_specs,
         out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((2, tile), master.dtype),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        # Ratio-expansion scratch only when used, so the
+                        # plan()'s VMEM accounting stays exact.
+                        pltpu.VMEM((tile,) if has_ratios else (1,),
+                                   jnp.float32)],
         interpret=interpret,
-    )(lr_arr, master, grads, momentum_buf, mask, scale)
+    )(lr_arr, master, grads, momentum_buf, mask, scale, ratios)
     return list(out[1:]), out[0]

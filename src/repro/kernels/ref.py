@@ -70,6 +70,24 @@ def pool_pack(
     return pool, norms, staged
 
 
+def expand_ratios(ratios: jax.Array, sizes: Sequence[int],
+                  pool_size: int) -> jax.Array:
+    """Per-tensor LARS ratios -> pool-sized per-element scale via the
+    static segment table (padding scales by 1.0). ``ratios`` may carry
+    the trailing padding entry (LARSScaler emits one) or omit it."""
+    pad = pool_size - sum(sizes)
+    reps = list(sizes)
+    if ratios.shape[0] == len(sizes):  # no padding entry supplied
+        if pad:
+            ratios = jnp.concatenate([ratios, jnp.ones((1,), ratios.dtype)])
+    else:
+        assert ratios.shape[0] == len(sizes) + 1, (ratios.shape, len(sizes))
+    if pad:
+        reps.append(pad)
+    return jnp.repeat(ratios, jnp.asarray(reps, jnp.int32),
+                      total_repeat_length=pool_size)
+
+
 def pool_unpack_update(
     master: jax.Array,        # f32[pool]
     grads: jax.Array,         # f32[pool] (zero where ~mask)
@@ -82,11 +100,17 @@ def pool_unpack_update(
     momentum: float,
     weight_decay: float,
     scale: Optional[jax.Array] = None,
+    ratios: Optional[jax.Array] = None,
 ) -> Tuple[List[jax.Array], jax.Array]:
     """Fused unravel + momentum-SGD step: one elementwise pass over the
     pool, then static ``lax.slice`` views of the result per tensor — the
     updated parameters come out as 1-D leaves directly and the gradient
-    pytree is never materialized. Returns (leaves, new_momentum)."""
+    pytree is never materialized. Per-tensor LARS ``ratios`` (the
+    streaming kernel's no-pool-sized-scale contract) expand here via one
+    static repeat. Returns (leaves, new_momentum)."""
+    assert scale is None or ratios is None, "pass scale OR ratios"
+    if ratios is not None:
+        scale = expand_ratios(ratios, tuple(sizes), master.shape[0])
     g = grads + weight_decay * master
     if scale is not None:
         g = g * scale

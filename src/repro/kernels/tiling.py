@@ -1,0 +1,112 @@
+"""Static tile planning for the streaming pool kernels.
+
+The pool pack/unpack kernels stream the gradient pool through VMEM in
+~512KiB tiles instead of holding it resident (the whole-pool variants
+stopped scaling exactly at AlexNet size — ROADMAP's retired 4M-element
+fallback). Because the pool layout is compile-time static (the segment
+table in ``GradientPool``), the entire DMA schedule is too: this module
+intersects every leaf segment with every tile it touches and emits a flat
+list of static copies — a segment that straddles a tile boundary simply
+contributes one copy per tile it crosses. The kernels unroll the schedule
+into ``pl.when(program_id == tile)`` blocks, so the compiler sees a fixed
+per-tile copy list with no scatter/gather indexing at all.
+
+Schedule size is O(num_leaves + num_tiles): each tile boundary splits at
+most one segment, so a pool with L leaves and T tiles produces at most
+L + T - 1 copies (plus the trailing-padding zero fills).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# Per-operand tile target: comfortably inside VMEM (~16MiB/core) with
+# double-buffering headroom, same sizing rule as chunk_l1norm.
+TILE_TARGET_BYTES = 512 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TileCopy:
+    """One static copy between a leaf segment and a tile-local range.
+
+    ``leaf`` indexes the segment table; ``src_lo`` is the offset inside
+    that leaf, ``dst_lo`` the offset inside tile ``tile``'s VMEM slot.
+    For zero fills (pool tail padding) ``leaf`` is -1 and ``src_lo`` 0.
+    """
+
+    leaf: int
+    tile: int
+    src_lo: int
+    dst_lo: int
+    elems: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """A pool's static streaming schedule: tiling plus the copy list."""
+
+    pool_size: int
+    tile_elems: int
+    num_tiles: int
+    copies: Tuple[TileCopy, ...]   # leaf <-> tile segment traffic
+    fills: Tuple[TileCopy, ...]    # zero fills for the padding tail
+
+    @property
+    def num_copies(self) -> int:
+        return len(self.copies)
+
+
+def pick_tile(pool_size: int, chunk_elems: int, itemsize: int,
+              target_bytes: int = TILE_TARGET_BYTES) -> int:
+    """Tile size in elements. With a chunk census the tile is a whole
+    number of chunks (rows x chunk_elems) so every tile emits complete
+    per-chunk norms; without one it is a plain ~target_bytes range. The
+    tile need NOT divide the pool — the final tile may be ragged (Pallas
+    masks the edge block) and the copy schedule is clipped to the pool.
+    """
+    assert pool_size > 0 and itemsize > 0
+    if chunk_elems > 0:
+        assert pool_size % chunk_elems == 0, (pool_size, chunk_elems)
+        num_chunks = pool_size // chunk_elems
+        rows = max(1, target_bytes // (chunk_elems * itemsize))
+        return min(rows, num_chunks) * chunk_elems
+    return min(pool_size, max(1, target_bytes // itemsize))
+
+
+@functools.lru_cache(maxsize=None)
+def tile_schedule(offsets: Tuple[int, ...], sizes: Tuple[int, ...],
+                  pool_size: int, tile_elems: int) -> TilePlan:
+    """Intersect every segment with the tiles it spans (all static)."""
+    assert len(offsets) == len(sizes)
+    assert 0 < tile_elems
+    num_tiles = -(-pool_size // tile_elems)  # cdiv
+    copies = []
+    for leaf, (off, sz) in enumerate(zip(offsets, sizes)):
+        if sz == 0:
+            continue
+        assert off + sz <= pool_size, (off, sz, pool_size)
+        for tile in range(off // tile_elems, (off + sz - 1) // tile_elems + 1):
+            lo = max(off, tile * tile_elems)
+            hi = min(off + sz, (tile + 1) * tile_elems)
+            copies.append(TileCopy(leaf=leaf, tile=tile, src_lo=lo - off,
+                                   dst_lo=lo - tile * tile_elems,
+                                   elems=hi - lo))
+    covered = (offsets[-1] + sizes[-1]) if sizes else 0
+    fills = []
+    if covered < pool_size:  # CSC chunk-alignment padding at the tail
+        for tile in range(covered // tile_elems, num_tiles):
+            lo = max(covered, tile * tile_elems)
+            hi = min(pool_size, (tile + 1) * tile_elems)
+            fills.append(TileCopy(leaf=-1, tile=tile, src_lo=0,
+                                  dst_lo=lo - tile * tile_elems,
+                                  elems=hi - lo))
+    return TilePlan(pool_size=pool_size, tile_elems=tile_elems,
+                    num_tiles=num_tiles, copies=tuple(copies),
+                    fills=tuple(fills))
+
+
+def itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize

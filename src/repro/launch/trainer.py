@@ -215,13 +215,19 @@ class Trainer:
                                             prepacked=prepacked)
         master, _ = self.pool.pack(params, dtype=jnp.float32,
                                    use_kernels=cfg.use_kernels)
-        scale = None
+        scale = ratios = None
         if self.lars is not None:
-            scale = self.lars.scale(master, reduced, self.cfg.optimizer,
-                                    mask)
+            r = self.lars.ratios(master, reduced, self.cfg.optimizer, mask)
+            if cfg.use_kernels:
+                # Streaming update: hand the per-tensor vector straight to
+                # the kernel (expanded per tile in VMEM) — the pool-sized
+                # scale buffer and its extra HBM pass disappear.
+                ratios = r
+            else:
+                scale = self.lars.expand(r)
         new_params, opt2 = opt_update_unpack(
             self.opt_name, self.pool, master, reduced, opt, mask,
-            self.cfg.optimizer, lr, scale=scale,
+            self.cfg.optimizer, lr, scale=scale, ratios=ratios,
             use_kernels=cfg.use_kernels)
         gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms)
         return new_params, opt2, gf2

@@ -26,15 +26,24 @@ def update_pool(name: str, *args, **kwargs):
 
 
 def update_unpack(name: str, pool, master, grads, state, mask, cfg, lr, *,
-                  scale=None, use_kernels: bool = False):
+                  scale=None, ratios=None, use_kernels: bool = False,
+                  tile_elems: int = 0):
     """Fused update+unravel: returns (new_params_pytree, new_opt_state).
 
-    SGD/LARS take the single-pass kernel path; optimizers without a fused
-    kernel (adamw) fall back to update_pool + the static-slice unravel —
-    same output pytree, one extra pool pass."""
+    SGD/LARS take the single-pass streaming kernel path (LARS preferably
+    as the per-tensor ``ratios`` vector — expanded per tile in-kernel, no
+    pool-sized scale buffer); optimizers without a fused kernel (adamw)
+    fall back to update_pool + the static-slice unravel — same output
+    pytree, one extra pool pass."""
     if name in ("momentum_sgd", "lars"):
         return sgd.update_unpack(pool, master, grads, state, mask, cfg, lr,
-                                 scale=scale, use_kernels=use_kernels)
+                                 scale=scale, ratios=ratios,
+                                 use_kernels=use_kernels,
+                                 tile_elems=tile_elems)
+    if ratios is not None:
+        from repro.kernels import ref
+        assert scale is None
+        scale = ref.expand_ratios(ratios, pool.sizes, pool.size)
     new_master, new_state = update_pool(name, master, grads, state, mask,
                                         cfg, lr, scale=scale,
                                         use_kernels=use_kernels)

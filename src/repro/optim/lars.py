@@ -32,14 +32,6 @@ class LARSScaler:
 
     def __init__(self, pool: GradientPool):
         self.pool = pool
-        # Segment lengths for expanding per-tensor ratios to pool space,
-        # from the pool's precomputed device-array table (padding gets its
-        # own unit-ratio segment), built once.
-        if pool.padding:
-            self._repeat_sizes = jnp.concatenate(
-                [pool.sizes_dev, jnp.asarray([pool.padding], jnp.int32)])
-        else:
-            self._repeat_sizes = pool.sizes_dev
 
     def ratios(self, master: jax.Array, grads: jax.Array,
                cfg: OptimizerConfig,
@@ -63,15 +55,26 @@ class LARSScaler:
             parts.append(jnp.ones((), master.dtype))
         return jnp.stack(parts)
 
+    def expand(self, ratios: jax.Array, dtype=jnp.float32) -> jax.Array:
+        """Per-tensor ratios -> pool-sized per-element LR scale, one
+        static ``repeat`` through the precomputed segment table — the old
+        per-tensor broadcast+concatenate chain issued a pool-sized
+        concatenate of O(num_tensors) operands every step.
+
+        The streaming update kernel does NOT want this: feed it the raw
+        ``ratios`` vector (``optim.update_unpack(ratios=...)``) and it
+        expands per ~512KiB tile in VMEM, so the pool-sized scale buffer —
+        one full extra HBM read per step — never exists on that path. The
+        expansion here serves the jnp oracle / non-kernel path only, and
+        delegates to the same ``ref.expand_ratios`` the kernels are
+        validated against so the two paths cannot drift."""
+        from repro.kernels import ref
+        return ref.expand_ratios(ratios, self.pool.sizes,
+                                 self.pool.size).astype(dtype)
+
     def scale(self, master: jax.Array, grads: jax.Array,
               cfg: OptimizerConfig,
               mask: Optional[jax.Array] = None) -> jax.Array:
-        """Pool-sized per-element LR scale. The per-tensor ratios expand
-        through the pool's precomputed segment table with a single
-        ``repeat`` (static total length) — the old per-tensor
-        broadcast+concatenate chain issued a pool-sized concatenate of
-        O(num_tensors) operands every step."""
+        """Pool-sized per-element LR scale (``ratios`` + ``expand``)."""
         r = self.ratios(master, grads, cfg, mask)
-        return jnp.repeat(r, self._repeat_sizes,
-                          total_repeat_length=self.pool.size
-                          ).astype(master.dtype)
+        return self.expand(r, dtype=master.dtype)

@@ -71,7 +71,9 @@ def update_unpack(
     lr: jax.Array,
     *,
     scale: Optional[jax.Array] = None,
+    ratios: Optional[jax.Array] = None,
     use_kernels: bool = False,
+    tile_elems: int = 0,
 ) -> Tuple[Any, SGDState]:
     """Fused update + unravel: the single-pass pipeline's update side.
 
@@ -80,19 +82,23 @@ def update_unpack(
     the momentum-SGD step and emits the updated *parameter pytree*
     directly from the pool segments — the new-master pool and the gradient
     pytree are never materialized. Momentum stays in pool form (donated
-    across steps). Returns (new_params_pytree, new_state)."""
+    across steps). ``use_kernels=True`` streams the pool through ~512KiB
+    VMEM tiles at every size (``tile_elems`` overrides the auto tile) and
+    accepts LARS as the per-tensor ``ratios`` vector, expanded per tile
+    inside the kernel so no pool-sized ``scale`` buffer is ever built.
+    Returns (new_params_pytree, new_state)."""
     if use_kernels:
         from repro.kernels import ops as kops
-        leaves, new_mom = kops.pool_unpack_update(
+        leaves, new_mom = kops.update_unpack(
             master, grads, state.momentum, mask, pool.offsets, pool.sizes,
             lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay,
-            scale=scale)
+            scale=scale, ratios=ratios, tile_elems=tile_elems)
     else:
         from repro.kernels import ref
         leaves, new_mom = ref.pool_unpack_update(
             master, grads, state.momentum, mask, pool.offsets, pool.sizes,
             lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay,
-            scale=scale)
+            scale=scale, ratios=ratios)
     # Restore each leaf to its declared param dtype (what unravel does on
     # the two-pass path) so the output pytree's dtypes match state.params
     # even for non-f32 pools.

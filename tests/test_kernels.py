@@ -77,6 +77,34 @@ def test_fused_update_mask_semantics():
                                1.0 - expected_u, rtol=1e-6)
 
 
+@pytest.mark.parametrize("tile", [0, 777])
+def test_update_unpack_variant_streams_and_matches_fused_update(tile):
+    """fused_update's tiled ``update_unpack`` variant: same Algorithm-1
+    math as ``fused_update`` (shared ``update_math``), leaves DMA'd out
+    per tile instead of a new master pool — including with a ragged
+    forced tile."""
+    from repro.kernels.fused_update import update_unpack as k_uu
+    offsets, sizes = (0, 1000, 3500), (1000, 2500, 300)
+    n = 4096  # 296 elements of padding
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    master = jax.random.normal(ks[0], (n,))
+    grads = jax.random.normal(ks[1], (n,))
+    mom = jax.random.normal(ks[2], (n,))
+    mask = jax.random.bernoulli(ks[3], 0.5, (n,))
+    leaves, new_mom = k_uu(master, grads, mom, mask, offsets, sizes,
+                           lr=0.05, momentum=0.9, weight_decay=1e-4,
+                           tile_elems=tile, interpret=True)
+    want_master, want_mom = k_update(master, grads, mom, mask, lr=0.05,
+                                     momentum=0.9, weight_decay=1e-4,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(new_mom), np.asarray(want_mom),
+                               rtol=1e-6, atol=1e-6)
+    for (off, sz), leaf in zip(zip(offsets, sizes), leaves):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   np.asarray(want_master[off:off + sz]),
+                                   rtol=1e-6, atol=1e-6)
+
+
 def test_ops_dispatch_matches_ref():
     """Public ops wrappers agree with refs outside shard_map."""
     chunk, nchunks = 256, 12

@@ -212,6 +212,180 @@ def test_update_unpack_restores_param_dtype():
     assert params["w"].dtype == jnp.bfloat16
 
 
+# -- streaming tiled kernels: tile-boundary coverage ------------------------
+
+
+def test_tile_schedule_covers_pool_exactly_once():
+    """Every pool element is covered by exactly one copy/fill, including
+    segments straddling tile edges and the padding tail."""
+    from repro.kernels import tiling
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+    for tile in (100, CHUNK, 3 * CHUNK, pool.size + 5):
+        sched = tiling.tile_schedule(pool.offsets, pool.sizes, pool.size,
+                                     tile)
+        hits = np.zeros((pool.size,), np.int32)
+        for c in sched.copies + sched.fills:
+            lo = c.tile * tile + c.dst_lo
+            hits[lo:lo + c.elems] += 1
+            if c.leaf >= 0:  # src range stays inside its leaf
+                assert 0 <= c.src_lo and \
+                    c.src_lo + c.elems <= pool.sizes[c.leaf]
+        np.testing.assert_array_equal(hits, 1)
+        assert sched.num_tiles == -(-pool.size // tile)
+
+
+@pytest.mark.parametrize("wire", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tile_chunks", [1, 2])
+def test_pack_kernel_straddling_tile_boundaries(wire, tile_chunks):
+    """Tiny forced tiles: every segment larger than a tile straddles at
+    least one boundary; output must still match the ref twin exactly."""
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    leaves = pool.flat_leaves(tree)
+    got_p, got_n = k_pack(tuple(leaves), pool.offsets, pool.sizes,
+                          pool.size, CHUNK, jnp.dtype(wire).name,
+                          tile_elems=tile_chunks * CHUNK, interpret=True)
+    want_p, want_n, _ = ref.pool_pack(leaves, pool.offsets, pool.size,
+                                      CHUNK, wire)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_allclose(np.asarray(got_n), np.asarray(want_n),
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("tile", [64, 100, 177])
+def test_pack_kernel_ragged_final_tile(tile):
+    """Pools whose (padded) size is NOT a multiple of the tile: the final
+    grid step is a ragged edge block (no census: pad_to=1 keeps the pool
+    size odd too)."""
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=1)
+    assert pool.size % tile != 0
+    leaves = pool.flat_leaves(tree)
+    got_p, got_n = k_pack(tuple(leaves), pool.offsets, pool.sizes,
+                          pool.size, 0, "float32", tile_elems=tile,
+                          interpret=True)
+    want_p, _, _ = ref.pool_pack(leaves, pool.offsets, pool.size, 0,
+                                 jnp.float32)
+    assert got_n is None
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+@pytest.mark.parametrize("tile", [100, CHUNK])
+def test_unpack_kernel_straddling_and_ragged_tiles(tile):
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+    n = pool.size
+    ks = jax.random.split(jax.random.PRNGKey(21), 4)
+    master = jax.random.normal(ks[0], (n,))
+    grads = jax.random.normal(ks[1], (n,))
+    mom = jax.random.normal(ks[2], (n,))
+    mask = jax.random.bernoulli(ks[3], 0.5, (n,))
+    got_l, got_m = k_unpack(master, grads, mom, mask, pool.offsets,
+                            pool.sizes, lr=0.05, momentum=0.9,
+                            weight_decay=1e-4, tile_elems=tile,
+                            interpret=True)
+    want_l, want_m = ref.pool_unpack_update(
+        master, grads, mom, mask, pool.offsets, pool.sizes, lr=0.05,
+        momentum=0.9, weight_decay=1e-4)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-6, atol=1e-6)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_unpack_kernel_lars_ratios_match_expanded_scale():
+    """The in-kernel per-tile ratio expansion must equal the ref path fed
+    the pool-sized expanded scale (the buffer the kernel never builds)."""
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+    n = pool.size
+    ks = jax.random.split(jax.random.PRNGKey(23), 4)
+    master = jax.random.normal(ks[0], (n,))
+    grads = jax.random.normal(ks[1], (n,))
+    mom = jax.random.normal(ks[2], (n,))
+    mask = jax.random.bernoulli(ks[3], 0.5, (n,))
+    ratios = jnp.abs(jax.random.normal(jax.random.PRNGKey(5),
+                                       (pool.num_tensors,))) + 0.1
+    expanded = ref.expand_ratios(ratios, pool.sizes, n)
+    got_l, got_m = k_unpack(master, grads, mom, mask, pool.offsets,
+                            pool.sizes, lr=0.05, momentum=0.9,
+                            weight_decay=1e-4, ratios=ratios,
+                            tile_elems=100, interpret=True)
+    want_l, want_m = ref.pool_unpack_update(
+        master, grads, mom, mask, pool.offsets, pool.sizes, lr=0.05,
+        momentum=0.9, weight_decay=1e-4, scale=expanded)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-6, atol=1e-6)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_update_unpack_ratios_kernel_vs_scale_ref():
+    """optim-level: the kernel path fed per-tensor ratios agrees with the
+    non-kernel path fed the expanded scale (what the trainer switches
+    between)."""
+    from repro.optim.lars import LARSScaler
+    tree = make_tree()
+    pool = GradientPool(tree, pad_to=CHUNK)
+    lars = LARSScaler(pool)
+    cfg = OptimizerConfig(momentum=0.9, weight_decay=1e-4, name="lars")
+    master = pool.ravel(tree)
+    ks = jax.random.split(jax.random.PRNGKey(31), 2)
+    grads = jax.random.normal(ks[0], (pool.size,))
+    mask = jax.random.bernoulli(ks[1], 0.5, (pool.size,))
+    state = sgd.SGDState(momentum=jnp.zeros((pool.size,)))
+    r = lars.ratios(master, grads, cfg, mask)
+    p_kern, st_kern = sgd.update_unpack(pool, master, grads, state, mask,
+                                        cfg, 0.1, ratios=r,
+                                        use_kernels=True)
+    p_ref, st_ref = sgd.update_unpack(pool, master, grads, state, mask,
+                                      cfg, 0.1, scale=lars.expand(r),
+                                      use_kernels=False)
+    np.testing.assert_allclose(np.asarray(st_kern.momentum),
+                               np.asarray(st_ref.momentum),
+                               rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(p_kern),
+                    jax.tree_util.tree_leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_streaming_kernels_match_ref_above_retired_4m_bound():
+    """>4M-element pool: the old whole-pool variants deferred to the refs
+    here; the streaming kernels must now run — and agree — at this size
+    (dispatch goes through ops, which no longer has a size fallback)."""
+    from repro.kernels import ops as kops
+    assert not hasattr(kops, "_POOL_KERNEL_MAX_ELEMS")
+    big = {"a": jnp.ones((2_100_000,)), "b": jnp.ones((2_100_000,)),
+           "c": jnp.ones((999,))}
+    pool = GradientPool(big, pad_to=32768)
+    assert pool.size > 4 * 1024 * 1024
+    leaves = pool.flat_leaves(big)
+    got_p, got_n, _ = kops.pool_pack(leaves, pool.offsets, pool.sizes,
+                                     pool.size, 32768, jnp.bfloat16)
+    want_p, want_n, _ = ref.pool_pack(leaves, pool.offsets, pool.size,
+                                      32768, jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_allclose(np.asarray(got_n), np.asarray(want_n),
+                               rtol=2e-5)
+    n = pool.size
+    master = pool.ravel(big)
+    mom = jnp.zeros((n,))
+    mask = jnp.ones((n,), bool)
+    grads = got_p.astype(jnp.float32)
+    got_l, got_m = kops.update_unpack(master, grads, mom, mask,
+                                      pool.offsets, pool.sizes, lr=0.05,
+                                      momentum=0.9, weight_decay=1e-4)
+    want_l, want_m = ref.pool_unpack_update(
+        master, grads, mom, mask, pool.offsets, pool.sizes, lr=0.05,
+        momentum=0.9, weight_decay=1e-4)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-6, atol=1e-6)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
 def test_num_chunks_requires_padded_multiple():
     """Regression: the old assertion accepted `pad_to % chunk == 0` even
     when the pool size itself was not chunk-aligned."""

@@ -6,6 +6,12 @@ examples/..., tools/...) and every dotted ``repro.*`` module mentioned in
 README.md or docs/*.md must resolve to a real file. Keeps the paper-map
 table and the architecture guide honest as the tree moves.
 
+Additionally, the CI gate surface must stay documented: the benchmark
+flags and committed baselines in REQUIRED_TOKENS (e.g. ``--kernel-check``
+/ ``BENCH_kernels.json``) have to appear in at least one checked doc, and
+any ``BENCH_*.json`` baseline referenced by a doc must exist at the repo
+root.
+
   python tools/check_docs.py        # exit 1 + list of broken refs
 """
 from __future__ import annotations
@@ -19,6 +25,12 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 PATH_RE = re.compile(
     r"\b(?:src|tests|benchmarks|examples|docs|tools)/[\w./\-]+\.(?:py|md|toml|yml|yaml)\b")
 MODULE_RE = re.compile(r"\brepro(?:\.\w+)+\b")
+BASELINE_RE = re.compile(r"\bBENCH_\w+\.json\b")
+
+# CI gate surface that must be documented somewhere in README/docs: each
+# benchmark gate flag and its committed baseline file.
+REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
+                   "--kernel-check", "BENCH_kernels.json")
 
 
 def module_resolves(dotted: str) -> bool:
@@ -53,6 +65,9 @@ def check_file(path: pathlib.Path) -> list:
     for m in MODULE_RE.finditer(text):
         if not module_resolves(m.group(0)):
             broken.append((path.name, m.group(0)))
+    for m in BASELINE_RE.finditer(text):
+        if not (ROOT / m.group(0)).is_file():
+            broken.append((path.name, m.group(0)))
     return broken
 
 
@@ -66,12 +81,18 @@ def main() -> int:
     broken = []
     for t in targets:
         broken += check_file(t)
-    if broken:
-        print(f"{len(broken)} broken reference(s):")
-        for doc, ref in broken:
-            print(f"  {doc}: {ref}")
+    all_text = "\n".join(t.read_text(encoding="utf-8") for t in targets)
+    undocumented = [tok for tok in REQUIRED_TOKENS if tok not in all_text]
+    if broken or undocumented:
+        if broken:
+            print(f"{len(broken)} broken reference(s):")
+            for doc, ref in broken:
+                print(f"  {doc}: {ref}")
+        for tok in undocumented:
+            print(f"UNDOCUMENTED CI GATE: {tok} appears in no checked doc")
         return 1
-    print(f"docs check OK: {len(targets)} files, all references resolve")
+    print(f"docs check OK: {len(targets)} files, all references resolve, "
+          f"{len(REQUIRED_TOKENS)} gate tokens documented")
     return 0
 
 
