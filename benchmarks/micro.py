@@ -18,8 +18,12 @@ equivalence on a >4M-element pool (past the retired whole-pool-in-VMEM
 bound) and pins the streaming property itself — tile count, peak
 VMEM-resident bytes (must stay O(tile), never O(pool)), and the static
 copy-schedule size — so the kernels cannot silently regress to
-pool-resident variants. ``--kernel-json`` refreshes the baseline (adds
-wall time, informational only).
+pool-resident variants. The same gate covers the ring allreduce behind
+``pallas_ring`` on an 8-rank placeholder CPU mesh: ring-vs-psum max
+error (f32 and bf16 wire), the executed neighbor-exchange count vs the
+planned 2(N-1) ``exchange_steps`` (and zero hidden psums), and the
+ragged-pool ``wire_bytes_per_step`` segmentation. ``--kernel-json``
+refreshes the baseline (adds wall time, informational only).
 
 This module must import clean with no dev extras installed (the CI bench
 jobs run ``pip install -e .`` without ``[dev]`` and assert exactly that):
@@ -307,6 +311,97 @@ def kernel_bench(measure_time: bool = True) -> Dict:
         "jax_version": jax.__version__,
         "pack": pack_row,
         "unpack": upd_row,
+        "ring": ring_bench(),
+    }
+
+
+# -- ring allreduce gate (pallas_ring vs flat psum on a CPU mesh) -----------
+
+# 8 ranks (the paper's GPUs-per-node), a deliberately ragged pool (not a
+# multiple of the ring: exercises the short final segment), bf16 wire.
+RING_DEVICES = 8
+RING_POOL_ELEMS = 8 * 1237 + 5
+
+_RING_BENCH_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+import sys, json
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.parallel.collectives import (compat_make_mesh, compat_set_mesh,
+                                        compat_shard_map)
+from repro.parallel.topology import get_algorithm
+
+N = {devices}
+POOL = {pool}
+mesh = compat_make_mesh((N,), ("data",))
+algo = get_algorithm("pallas_ring")
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=N * POOL), jnp.float32)
+out = {{}}
+for wire in ("float32", "bfloat16"):
+    wd = jnp.dtype(wire)
+    def f(g):
+        gw = g.astype(wd)
+        ring = algo.reduce(gw, ("data",))
+        flat = jax.lax.psum(gw, "data")
+        return ring.astype(jnp.float32), flat.astype(jnp.float32)
+    sm = compat_shard_map(f, mesh=mesh, in_specs=P("data"),
+                          out_specs=(P(None), P(None)),
+                          axis_names={{"data"}})
+    with compat_set_mesh(mesh):
+        ring, flat = jax.jit(sm)(x)
+    out["max_abs_err_" + ("f32" if wd == jnp.float32 else "bf16")] = \\
+        float(jnp.max(jnp.abs(ring - flat)))
+# Step count: the full-ring twin under check_vma=False (pins the
+# 2(N-1)-exchange schedule on every jax version; no hidden psum).
+from repro.kernels import ref
+def g(v):
+    return ref.ring_allreduce(v.astype(jnp.bfloat16), "data")
+sm = compat_shard_map(g, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"), axis_names={{"data"}},
+                      check_vma=False)
+jaxpr = str(jax.make_jaxpr(sm)(x))
+out["ppermute_count"] = jaxpr.count("ppermute")
+out["psum_count_in_ring"] = jaxpr.count("psum")
+print(json.dumps(out))
+"""
+
+
+def ring_bench() -> Dict:
+    """pallas_ring vs flat psum on a RING_DEVICES-rank (8) placeholder
+    CPU mesh (subprocess: the bench process itself must keep the single
+    real device), merged with the static ring plan.
+
+    Records what the CI gate pins: ring/psum max error at f32 and bf16
+    wire, the executed neighbor-exchange count vs the planned 2(N-1), the
+    absence of any hidden psum on the full-ring path, and the per-step
+    wire bytes of the ragged-pool segmentation."""
+    import subprocess
+
+    from repro.kernels import ring_reduce
+    from repro.parallel.cost_model import ring_exchange_steps
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    script = _RING_BENCH_SCRIPT.format(devices=RING_DEVICES,
+                                       pool=RING_POOL_ELEMS, src=src)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"ring bench subprocess failed:\n{proc.stdout}\n{proc.stderr}")
+    measured = json.loads(proc.stdout.strip().splitlines()[-1])
+    p = ring_reduce.plan(RING_POOL_ELEMS, RING_DEVICES, "bfloat16")
+    return {
+        "devices": RING_DEVICES,
+        "pool_elems": RING_POOL_ELEMS,
+        "seg_elems": p["seg_elems"],
+        "exchange_steps": ring_exchange_steps(RING_DEVICES),
+        "wire_bytes_per_step": p["wire_bytes_per_step"],
+        "total_wire_bytes": p["total_wire_bytes"],
+        **measured,
     }
 
 
@@ -357,11 +452,43 @@ def check_kernel_regression(baseline_path: str) -> int:
                     f"{side}.{k} drifted: {cur[side][k]} != baseline "
                     f"{base[side][k]} (refresh BENCH_kernels.json if "
                     "intentional)")
+    # Ring gate: the owned collective must keep matching the psum it
+    # replaces, execute exactly its planned 2(N-1) neighbor exchanges
+    # with no hidden psum, and hold its static segmentation.
+    ring = cur["ring"]
+    # Tolerances: pure reduction-order rounding headroom (measured
+    # 1.9e-6 / 0.125 on the ~10k-element pool summed over 8 ranks); a
+    # structurally broken ring is off by O(1). The tight 1e-6 acceptance
+    # bound lives in tests/test_ring_reduce.py on its smaller pools.
+    if ring["max_abs_err_f32"] > 5e-6:
+        failures.append(
+            f"ring f32 max err {ring['max_abs_err_f32']:.2e} > 5e-6 vs "
+            "flat psum")
+    if ring["max_abs_err_bf16"] > 0.25:
+        failures.append(
+            f"ring bf16-wire max err {ring['max_abs_err_bf16']:.2e} > "
+            "0.25 vs flat psum")
+    if ring["ppermute_count"] != ring["exchange_steps"]:
+        failures.append(
+            f"ring executed {ring['ppermute_count']} neighbor exchanges, "
+            f"planned 2(N-1) = {ring['exchange_steps']}")
+    if ring["psum_count_in_ring"] != 0:
+        failures.append(
+            f"ring path contains {ring['psum_count_in_ring']} psum op(s) "
+            "— no longer owns the collective")
+    base_ring = base.get("ring", {})
+    for k in ("devices", "pool_elems", "seg_elems", "exchange_steps",
+              "wire_bytes_per_step"):
+        if ring[k] != base_ring.get(k):
+            failures.append(
+                f"ring.{k} drifted: {ring[k]} != baseline "
+                f"{base_ring.get(k)} (refresh BENCH_kernels.json if "
+                "intentional)")
     for msg in failures:
         print(f"KERNEL BENCH REGRESSION: {msg}")
     if not failures:
         print(f"kernel bench OK: pack={cur['pack']} "
-              f"unpack={cur['unpack']}")
+              f"unpack={cur['unpack']} ring={ring}")
     return 1 if failures else 0
 
 

@@ -129,8 +129,12 @@ class GradientFlowConfig:
     reduce_axes: Tuple[str, ...] = ("data",)
     # Collective algorithm: 'flat' (single ring psum), 'two_level'
     # (reduce-scatter → psum → all-gather; the old hierarchical=True),
-    # 'tree' (k-level), or 'auto' — pick per bucket from the cost model.
-    # 'auto' without a topology falls back to 'flat'.
+    # 'tree' (k-level), 'pallas_ring' (the owned 2(N-1)-step ring —
+    # Pallas RDMA kernel on TPU, lax.ppermute twin elsewhere; see
+    # docs/collectives.md for the fallback rules), or 'auto' — pick per
+    # bucket from the cost model. 'auto' without a topology falls back to
+    # 'flat'; on ties it keeps 'flat', so 'pallas_ring' is an explicit
+    # opt-in.
     collective_algo: str = "auto"
     # Bandwidth/latency model of the reduction mesh (one Level per entry of
     # reduce_axes, slowest first). Trainer derives it from the jax Mesh

@@ -126,8 +126,11 @@ def csc_reduce(
         itself transmitted in fused θ buckets.
       num_data_shards: product of data-axis sizes (for the mean).
       algo: ReduceAlgorithm (or one per bucket) for the wire-buffer
-        collectives; None = flat ring psum. The norm census stays flat —
-        it is one tiny f32[chunks] message, below any crossover point.
+        collectives; None = flat ring psum. ``pallas_ring`` reduces the
+        *compacted* buffer — k*chunk_elems elements, re-segmented per
+        wire bucket — so sparsity shrinks the ring's segments, never its
+        step count. The norm census stays flat — it is one tiny
+        f32[chunks] message, below any crossover point.
     """
     chunk = cfg.chunk_elems
     momentum = cfg.momentum

@@ -69,12 +69,23 @@ class GradientFlow:
         self._lazy_algos = self._algos_for(self._lazy_bounds)
 
     def _algos_for(self, bounds) -> tuple:
-        """One ReduceAlgorithm per bucket (auto-selected by byte size)."""
+        """One ReduceAlgorithm per bucket (auto-selected by byte size).
+
+        ``pallas_ring`` entries are stamped with the bucket index as
+        their Mosaic collective-id base: per-bucket rings in one compiled
+        step may run concurrently and must not share collective
+        bookkeeping, and the bucket layout — unlike any process-local
+        counter — is derived identically on every host."""
         elt = jnp.dtype(self.cfg.wire_dtype).itemsize
-        return tuple(
-            topo_mod.resolve_algorithm(self.cfg.collective_algo,
-                                       self.cfg.topology, (e - s) * elt)
-            for s, e in bounds)
+        algos = []
+        for i, (s, e) in enumerate(bounds):
+            algo = topo_mod.resolve_algorithm(self.cfg.collective_algo,
+                                              self.cfg.topology,
+                                              (e - s) * elt)
+            if isinstance(algo, topo_mod.PallasRing):
+                algo = algo.with_id(i)
+            algos.append(algo)
+        return tuple(algos)
 
     # -- state -------------------------------------------------------------
 

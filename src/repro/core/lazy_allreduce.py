@@ -12,9 +12,13 @@ top layers' gradients, available earliest).
 a single fused allreduce over the whole pool after backward.
 
 The reduction itself is delegated to a ``ReduceAlgorithm`` from
-``repro.parallel.topology`` (flat ring / two-level / k-level tree) —
-either one algorithm for every bucket or one per bucket, the layout the
-topology auto-selector produces.
+``repro.parallel.topology`` (flat ring / two-level / k-level tree /
+pallas_ring) — either one algorithm for every bucket or one per bucket,
+the layout the topology auto-selector produces. Buckets close at tensor
+boundaries, so their sizes are ragged; the ring algorithm re-segments
+every bucket independently into N ceil(bucket/N) segments (short or
+empty final segment included — ``ring_segment_bounds``), which is why no
+bucket layout needs to know the device count.
 """
 from __future__ import annotations
 

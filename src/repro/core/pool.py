@@ -144,14 +144,26 @@ class GradientPool:
         return pool, norms
 
     def pack_into(self, out: jax.Array, grads: Any, dtype: Any = None, *,
-                  norms_chunk: int = 0,
+                  norms_chunk: int = 0, use_kernels: bool = False,
+                  tile_elems: int = 0,
                   ) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
-        """Donation-aware pack: writes into the staging buffer ``out``
-        (leaves' dtype, initialized with zeros once) and returns (pool,
-        norms, staging) so the caller can thread the staging buffer
-        through a donated jit argument — steady-state packs then allocate
-        no pool-sized buffer and skip the zero-fill entirely."""
-        return self._pack(grads, dtype, norms_chunk, False, out, 0)
+        """Donation-aware pack: writes into the staging buffer ``out`` and
+        returns (pool, norms, staging) so the caller can thread the
+        staging buffer through a donated jit argument — steady-state packs
+        then allocate no pool-sized buffer and skip the zero-fill
+        entirely.
+
+        Two staging contracts, selected by ``out``'s dtype:
+
+        * leaves' (source) dtype — the ref path stages in place and casts
+          to ``dtype`` in one trailing pass (the original contract);
+        * wire dtype with ``use_kernels=True`` — the streaming pack kernel
+          aliases ``out`` to its pool output (``input_output_aliases``),
+          so the returned pool IS the staging for the next step: one
+          wire-dtype buffer, re-written fully in place every pack.
+        """
+        return self._pack(grads, dtype, norms_chunk, use_kernels, out,
+                          tile_elems)
 
     def _pack(self, grads, dtype, norms_chunk, use_kernels, out,
               tile_elems=0):

@@ -1,4 +1,6 @@
 """Pallas TPU kernels for the pool-space hot spots the paper's technique
-stresses (CSC census/pack + fused masked update). ops.py = jit wrappers,
-ref.py = pure-jnp oracles."""
+stresses (CSC census/pack + fused masked update) and for the collective
+itself (ring_reduce.py: the 2(N-1)-step ring allreduce behind the
+``pallas_ring`` algorithm). ops.py = jit wrappers + dispatch, ref.py =
+pure-jnp/ppermute oracles."""
 from repro.kernels import ops, ref

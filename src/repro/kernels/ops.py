@@ -52,6 +52,64 @@ def _needs_ref_fallback(*arrays) -> bool:
     return False
 
 
+def ring_allreduce(x: jax.Array, axes: Sequence[str],
+                   wire_dtype=None, collective_id: int = 0) -> jax.Array:
+    """Ring allreduce of the 1-D ``x`` across the manual ``axes`` —
+    the execution entry point of the ``pallas_ring`` ReduceAlgorithm.
+
+    Multi-axis reductions run one full-payload ring per axis, innermost
+    (fastest) level first; each ring is 2(N-1) neighbor exchanges with
+    wire-dtype segments and f32 accumulation. Per-axis dispatch:
+
+    * compiled TPU — the Pallas RDMA kernel (``kernels.ring_reduce``);
+    * CPU/interpret — the ``lax.ppermute`` twin (``ref.ring_allreduce``),
+      the kernel's correctness oracle;
+    * new-jax shard_map regions with vma tags (``check_vma=True``) — the
+      vma-safe twin (ring reduce-scatter + place-and-psum gather): the
+      checker keeps the varying tag on every ppermute result, so the full
+      ring cannot leave such a region as a replicated value.
+
+    ``wire_dtype=None`` transports segments in ``x.dtype`` — the pool
+    pipeline hands this function an already wire-cast (bf16) bucket, so
+    no extra plumbing is needed for mixed-precision wire traffic.
+
+    ``collective_id`` is this call's Mosaic collective id *base*:
+    per-bucket rings inside one compiled step are data-independent and
+    may run concurrently, so two live kernels must never share an id (or
+    Mosaic's collective bookkeeping). The id must be a value every host
+    derives identically for the same logical ring — GradientFlow passes
+    the bucket index, a pure function of the (host-invariant) bucket
+    layout; NEVER derive it from process-local state like a call counter,
+    whose value depends on what else each host happened to trace. The
+    per-axis rings of a multi-axis reduce fan out below the base.
+    """
+    for i, axis in enumerate(reversed(tuple(axes))):
+        x = _ring_one(x, axis, wire_dtype,
+                      collective_id * _RING_ID_AXES + i)
+    return x
+
+
+# Id headroom for the per-axis rings under one collective_id base (mesh
+# depth is ≤ 3 levels everywhere in this repo; 8 leaves slack).
+_RING_ID_AXES = 8
+
+
+def _ring_one(x: jax.Array, axis: str, wire_dtype,
+              collective_id: int = 0) -> jax.Array:
+    if not _INTERPRET:
+        from repro.kernels import ring_reduce
+        from repro.parallel.collectives import axis_size
+        _count("ring_allreduce", "kernel")
+        return ring_reduce.ring_allreduce(
+            x, axis, axis_size((axis,)), wire_dtype=wire_dtype,
+            collective_id=collective_id)
+    if _needs_ref_fallback(x):
+        _count("ring_allreduce", "ref_invariant")
+        return ref.ring_allreduce_invariant(x, axis, wire_dtype=wire_dtype)
+    _count("ring_allreduce", "ref")
+    return ref.ring_allreduce(x, axis, wire_dtype=wire_dtype)
+
+
 def chunk_l1norm(pool: jax.Array, chunk_elems: int) -> jax.Array:
     if _needs_ref_fallback(pool):
         return ref.chunk_l1norm(pool, chunk_elems)
@@ -76,22 +134,39 @@ def pool_pack(leaves: Sequence[jax.Array], offsets: Tuple[int, ...],
     ref.pool_pack for the staging/donation contract.
 
     Dispatches to the streaming tiled kernel at EVERY pool size (peak
-    VMEM is O(tile); the old 4M-element whole-pool bound is retired). The
-    ref twin runs only as the correctness oracle and where the kernel
-    cannot: donated-staging packs (``out=`` threads a source-dtype buffer
-    the casting kernel never materializes), empty pools, and the
-    shard_map/interpret vma limitation described in the module
+    VMEM is O(tile); the old 4M-element whole-pool bound is retired).
+
+    Donated staging: a **wire-dtype** ``out`` buffer rides through the
+    kernel as an ``input_output_aliases`` operand — the packed pool is
+    written into the donated buffer and returned as the staging for the
+    next step, so steady-state packs allocate nothing pool-sized. A
+    *source*-dtype ``out`` (the legacy ref contract, where staging and
+    wire dtypes differ) still routes to the ref twin, as do empty pools
+    and the shard_map/interpret vma limitation described in the module
     docstring."""
-    if out is not None or not leaves or _needs_ref_fallback(*leaves):
+    wire = jnp.dtype(wire_dtype)
+    src = jnp.result_type(*leaves) if leaves else wire
+    wire_staging = out is not None and out.dtype == wire and out.dtype != src
+    assert out is None or wire_staging or out.dtype == src, (
+        "staging buffer must be wire- or source-dtype",
+        out.dtype, wire, src)
+    if not leaves or _needs_ref_fallback(*leaves) or \
+            (out is not None and out.dtype == src):
         _count("pool_pack", "ref")
-        return ref.pool_pack(leaves, offsets, pool_size, chunk_elems,
-                             wire_dtype, out=out)
+        # The ref twin stages in the source dtype; a wire-dtype staging
+        # buffer (the kernel aliasing contract) cannot seed it — drop the
+        # donation for this (fallback-only) call and hand the pool back
+        # as the next step's wire staging so the threading stays typed.
+        pool, norms, staging = ref.pool_pack(
+            leaves, offsets, pool_size, chunk_elems, wire_dtype,
+            out=None if wire_staging else out)
+        return pool, norms, (pool if wire_staging else staging)
     _count("pool_pack", "kernel")
     pool, norms = _pp.pool_pack(
         tuple(leaves), tuple(offsets), tuple(sizes), pool_size,
-        chunk_elems, jnp.dtype(wire_dtype).name, tile_elems=tile_elems,
-        interpret=_INTERPRET)
-    return pool, norms, None
+        chunk_elems, wire.name, tile_elems=tile_elems,
+        staging=out if wire_staging else None, interpret=_INTERPRET)
+    return pool, norms, (pool if wire_staging else None)
 
 
 def update_unpack(master, grads, momentum_buf, mask,

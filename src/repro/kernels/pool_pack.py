@@ -57,7 +57,12 @@ def _struct(shape, dtype, like):
 
 
 def _kernel(*refs, plan: tiling.TilePlan, n_leaves, chunk_elems, rows,
-            with_norms):
+            with_norms, donated=False):
+    # A donated wire-dtype staging buffer rides as the first operand; it
+    # is aliased to the pool output and never read — every output tile is
+    # fully written from the leaf DMAs (+ zero fills), so aliasing is
+    # safe at any tile order.
+    refs = refs[1:] if donated else refs
     leaf_refs = refs[:n_leaves]
     pool_ref = refs[n_leaves]
     norms_ref = refs[n_leaves + 1] if with_norms else None
@@ -134,13 +139,19 @@ def pool_pack(
     chunk_elems: int,
     wire_dtype,
     tile_elems: int = 0,
+    staging: Optional[jax.Array] = None,
     interpret: bool = True,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """1-D leaves -> (pool[pool_size] in wire dtype, f32 chunk norms).
 
     ``chunk_elems == 0`` skips the norm output (plain ravel+cast);
     ``tile_elems`` overrides the ~512KiB auto tile (tests force tiny tiles
-    to exercise boundary straddling)."""
+    to exercise boundary straddling). ``staging`` optionally donates a
+    wire-dtype pool buffer: it is aliased to the pool output
+    (``input_output_aliases``), so a caller that threads the returned pool
+    back in through a donated jit argument re-packs fully in place —
+    the streaming-kernel form of the ref twin's staging contract (and the
+    close of ROADMAP's "pack staging donation" item)."""
     wire = jnp.dtype(wire_dtype)
     with_norms = chunk_elems > 0
     assert leaves, "empty leaf list takes the ref path (ops.pool_pack)"
@@ -158,17 +169,23 @@ def pool_pack(
         out_shape.append(
             _struct((pool_size // chunk_elems,), jnp.float32, like))
         out_specs.append(pl.BlockSpec((rows,), lambda i: (i,)))
+    donated = staging is not None
+    if donated:
+        assert staging.shape == (pool_size,) and staging.dtype == wire, (
+            staging.shape, staging.dtype, pool_size, wire)
     kern = functools.partial(_kernel, plan=sched, n_leaves=len(leaves),
                              chunk_elems=chunk_elems, rows=rows,
-                             with_norms=with_norms)
+                             with_norms=with_norms, donated=donated)
+    operands = ([staging] if donated else []) + list(leaves)
     out = pl.pallas_call(
         kern,
         grid=(sched.num_tiles,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * len(leaves),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * len(operands),
         out_specs=tuple(out_specs),
         out_shape=tuple(out_shape),
         scratch_shapes=[pltpu.VMEM((2, tile), src),
                         pltpu.SemaphoreType.DMA((2,))],
+        input_output_aliases={0: 0} if donated else {},
         interpret=interpret,
-    )(*leaves)
+    )(*operands)
     return (out[0], out[1]) if with_norms else (out[0], None)

@@ -122,6 +122,117 @@ def pool_unpack_update(
     return leaves, new_mom
 
 
+def _ring_reduce_scatter(acc: jax.Array, axis: str, n: int, seg: int,
+                         wire, accum):
+    """The reduce-scatter half of the ring: N-1 ``ppermute`` neighbor
+    exchanges over the padded (n*seg,) accumulator. Each step sends one
+    segment (cast to the wire dtype for transport) to the next rank and
+    folds the received segment into the local f32 accumulator. Returns
+    (acc, own) where segment ``own = (me+1) % n`` is this rank's fully
+    reduced segment."""
+    from repro.parallel.collectives import ring_perm
+
+    me = jax.lax.axis_index(axis)
+    perm = ring_perm(n)
+
+    def seg_slice(buf, idx):
+        return jax.lax.dynamic_slice(buf, (idx * seg,), (seg,))
+
+    for t in range(n - 1):
+        send_idx = (me - t) % n
+        recv = jax.lax.ppermute(seg_slice(acc, send_idx).astype(wire),
+                                axis, perm)
+        recv_idx = (me - t - 1) % n
+        acc = jax.lax.dynamic_update_slice(
+            acc, seg_slice(acc, recv_idx) + recv.astype(accum),
+            (recv_idx * seg,))
+    own = (me + 1) % n
+    if jnp.dtype(wire) != jnp.dtype(accum):
+        # Round the owned segment through the wire dtype before the gather
+        # phase: every rank then holds bit-identical values (the owner's
+        # extra f32 precision would otherwise make the result device-
+        # varying, which the optimizer's replicated update cannot absorb).
+        acc = jax.lax.dynamic_update_slice(
+            acc, seg_slice(acc, own).astype(wire).astype(accum),
+            (own * seg,))
+    return acc, own
+
+
+def _ring_setup(x: jax.Array, axis: str, accum):
+    """Axis size, padded accumulator, and segment length for one ring."""
+    from repro.parallel.collectives import axis_size, compat_pvary
+
+    n = axis_size((axis,))
+    x = compat_pvary(x, (axis,))
+    seg = -(-x.shape[0] // n)
+    acc = x.astype(accum)
+    pad = seg * n - x.shape[0]
+    if pad:
+        acc = jnp.concatenate([acc, jnp.zeros((pad,), acc.dtype)])
+    return n, acc, seg
+
+
+def ring_allreduce(x: jax.Array, axis: str, *, wire_dtype=None,
+                   accum_dtype=jnp.float32) -> jax.Array:
+    """Pure-jax ring allreduce: the ``lax.ppermute`` twin of the Pallas
+    ring kernel (``repro.kernels.ring_reduce``) and its CPU/interpret
+    execution path.
+
+    Exactly 2(N-1) neighbor exchanges — (N-1)-step reduce-scatter then an
+    (N-1)-step all-gather — over N equal segments of ceil(len/N) elements
+    (the buffer is padded with zeros internally; ragged and smaller-than-N
+    pools just mean a short or empty final logical segment, see
+    ``ring_reduce.ring_segment_bounds``). Segments travel in the wire
+    dtype (default: ``x.dtype``) while accumulation runs in
+    ``accum_dtype`` (f32); the result is returned in ``x.dtype`` like a
+    psum would, bit-identical on every rank.
+    """
+    out_dtype = x.dtype
+    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else x.dtype
+    n, acc, seg = _ring_setup(x, axis, accum_dtype)
+    if n == 1:
+        return x
+    acc, own = _ring_reduce_scatter(acc, axis, n, seg, wire, accum_dtype)
+
+    from repro.parallel.collectives import ring_perm
+    me = jax.lax.axis_index(axis)
+    perm = ring_perm(n)
+    for t in range(n - 1):
+        send_idx = (me + 1 - t) % n
+        chunk = jax.lax.dynamic_slice(acc, (send_idx * seg,), (seg,))
+        recv = jax.lax.ppermute(chunk.astype(wire), axis, perm)
+        recv_idx = (me - t) % n
+        acc = jax.lax.dynamic_update_slice(acc, recv.astype(accum_dtype),
+                                           (recv_idx * seg,))
+    return acc[:x.shape[0]].astype(out_dtype)
+
+
+def ring_allreduce_invariant(x: jax.Array, axis: str, *, wire_dtype=None,
+                             accum_dtype=jnp.float32) -> jax.Array:
+    """vma-safe ring twin: ring reduce-scatter (N-1 ``ppermute`` steps)
+    followed by a place-and-psum all-gather of the owned segment.
+
+    New-jax shard_map regions with ``check_vma=True`` cannot accept the
+    full ppermute ring — the type system keeps the varying tag on every
+    ppermute result even though a completed ring is provably replicated —
+    so this variant finishes with the same place-and-psum gather the
+    two-level/tree reductions use (``collectives._all_gather_invariant``),
+    whose output the checker knows is invariant. Same wire bytes, one
+    psum instead of N-1 gather steps; dispatch lives in ``ops``.
+    """
+    from repro.parallel.collectives import _all_gather_invariant
+
+    out_dtype = x.dtype
+    wire = jnp.dtype(wire_dtype) if wire_dtype is not None else x.dtype
+    n, acc, seg = _ring_setup(x, axis, accum_dtype)
+    if n == 1:
+        return x
+    acc, own = _ring_reduce_scatter(acc, axis, n, seg, wire, accum_dtype)
+    shard = jax.lax.dynamic_slice(acc, (own * seg,), (seg,)).astype(wire)
+    full = _all_gather_invariant(shard, axis, n, idx=own)
+    return full[:x.shape[0]].astype(out_dtype)
+
+
 def fused_update(
     master: jax.Array,        # f32[n]
     grads: jax.Array,         # f32[n] (zero where ~mask)

@@ -17,6 +17,13 @@ Distribution architecture (see DESIGN.md §3.1):
            CSC), and the pool-space optimizer updates the f32 master —
            optimizer + GradientFlow state is thereby sharded over the
            model axis (ZeRO-style) for free.
+
+The reduce step dispatches on ``GradientFlowConfig.collective_algo``
+through the topology registry: ``flat``/``two_level``/``tree`` bottom out
+in psum flavors, while ``pallas_ring`` runs this repo's own 2(N-1)-step
+ring (kernels/ring_reduce.py on TPU, the ppermute twin on CPU) inside the
+same manual region — no trainer-side plumbing beyond the config string
+(tests/test_ring_reduce.py trains end-to-end with it).
 """
 from __future__ import annotations
 

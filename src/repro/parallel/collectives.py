@@ -140,13 +140,28 @@ def _pad_to_multiple(x: jax.Array, m: int) -> Tuple[jax.Array, int]:
     return x, pad
 
 
-def _all_gather_invariant(shard: jax.Array, axis: str, n: int) -> jax.Array:
+def ring_perm(n: int) -> list:
+    """The unidirectional ring permutation for ``lax.ppermute``: rank d
+    sends to (d + 1) % n. One such exchange is one ring *step*; a full
+    ring allreduce is 2(n-1) of them (see ``repro.kernels.ref`` /
+    ``repro.kernels.ring_reduce``)."""
+    return [(d, (d + 1) % n) for d in range(n)]
+
+
+def _all_gather_invariant(shard: jax.Array, axis: str, n: int,
+                          idx: Optional[jax.Array] = None) -> jax.Array:
     """All-gather via place-and-psum: semantically an all-gather with the
     same wire bytes, but the vma system knows a psum result is device-
     invariant (a raw all_gather keeps the varying tag and fails check_vma
-    at the shard_map boundary)."""
+    at the shard_map boundary).
+
+    ``idx`` is the destination row of this device's shard (default: its
+    own axis index). The ring reduce-scatter leaves rank d owning segment
+    (d+1) % n, so its vma-safe all-gather phase passes that rotation here.
+    """
     n_sh = shard.shape[0]
-    idx = jax.lax.axis_index(axis)
+    if idx is None:
+        idx = jax.lax.axis_index(axis)
     buf = jnp.zeros((n, n_sh), shard.dtype)
     buf = jax.lax.dynamic_update_index_in_dim(buf, shard, idx, 0)
     return jax.lax.psum(buf, axis).reshape(-1)
@@ -208,7 +223,10 @@ def reduce_pool(x: jax.Array, axes: Sequence[str],
     ``algo`` is a ``repro.parallel.topology.ReduceAlgorithm`` (or anything
     with a ``reduce(x, axes)`` method); ``None`` means the flat single-ring
     psum. The old ``hierarchical: bool`` flag grew into this object — see
-    docs/collectives.md.
+    docs/collectives.md. Note that algorithms need not bottom out in a
+    psum at all: ``pallas_ring`` executes its own 2(N-1)-step neighbor
+    exchange (``repro.kernels.ring_reduce`` on TPU, the ``lax.ppermute``
+    twin in ``repro.kernels.ref`` elsewhere).
     """
     axes = tuple(axes)
     if algo is None:

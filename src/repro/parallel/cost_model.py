@@ -22,6 +22,7 @@ with ``ring_allreduce_time``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Sequence, Tuple
 
 
@@ -70,6 +71,36 @@ def ring_allreduce_time(msg_bytes: float, n: int, fabric: Fabric) -> float:
     per_step = msg_bytes / n
     steps = 2 * (n - 1)
     return steps * (fabric.alpha + per_step / bw_eff(fabric, per_step))
+
+
+def ring_exchange_steps(n: int) -> int:
+    """Neighbor exchanges in one ring allreduce: (n-1) reduce-scatter +
+    (n-1) all-gather steps. The owned ring implementation
+    (``repro.kernels.ring_reduce`` / the ppermute twin) executes exactly
+    this many — tests and the CI ring gate pin the count."""
+    return 2 * (n - 1) if n > 1 else 0
+
+
+def ring_step_wire_bytes(msg_bytes: float, n: int) -> float:
+    """Bytes each rank puts on the wire per exchange step: one
+    ceil(msg/n) segment (the padded segment of a ragged message). The
+    exact element-level number lives in ``repro.kernels.ring_reduce.plan``
+    — this is the model-level mirror the selector prices with."""
+    if n <= 1:
+        return 0.0
+    return float(math.ceil(msg_bytes / n))
+
+
+def sequential_ring_time(msg_bytes: float,
+                         levels: Sequence[Tuple[int, Fabric]]) -> float:
+    """Predicted time of the ``pallas_ring`` execution model: one
+    full-payload ring per (size, fabric) level, innermost first. On a
+    single level this is *identical* to the flat ring — same schedule,
+    same wire bytes — so the auto-selector's strict-improvement rule
+    keeps the psum-backed flat entry on ties and ``pallas_ring`` remains
+    an explicit opt-in. On hierarchical fabrics each level pays for the
+    whole payload, which two_level/tree undercut by design."""
+    return sum(ring_allreduce_time(msg_bytes, n, f) for n, f in levels)
 
 
 def reduce_scatter_time(msg_bytes: float, n: int, fabric: Fabric) -> float:

@@ -10,9 +10,11 @@ This module generalizes the old ``hierarchical: bool`` flag into:
   reduction with its own calibrated ``Fabric`` (alpha-beta parameters from
   ``repro.parallel.cost_model``).
 * a registry of ``ReduceAlgorithm`` objects — flat ring psum, 2-level
-  reduce-scatter→psum→all-gather, k-level tree — each knowing both how to
-  *execute* inside a shard_map (``reduce``) and what it should *cost* on a
-  given topology (``predicted_time``).
+  reduce-scatter→psum→all-gather, k-level tree, and the *owned*
+  ``pallas_ring`` (the 2(N-1)-step ring executed by this repo's kernels
+  rather than an opaque psum) — each knowing both how to *execute* inside
+  a shard_map (``reduce``) and what it should *cost* on a given topology
+  (``predicted_time``).
 * an auto-selector (``select_algorithm``) that picks the cheapest
   applicable algorithm per message size, and a θ auto-tuner
   (``auto_bucket_boundaries``) that picks the lazy-allreduce bucket size
@@ -38,7 +40,8 @@ from repro.parallel.cost_model import (Fabric, HOST_LOOPBACK, INTRA_NODE,
                                        bucket_release_times,
                                        overlapped_finish_time,
                                        reduce_scatter_time,
-                                       ring_allreduce_time)
+                                       ring_allreduce_time,
+                                       sequential_ring_time)
 
 
 # -- the topology model ------------------------------------------------------
@@ -216,9 +219,57 @@ class TreeReduce(ReduceAlgorithm):
         return t
 
 
+class PallasRing(ReduceAlgorithm):
+    """The ring allreduce, *owned*: the 2(N-1)-step reduce-scatter +
+    all-gather neighbor exchange executed by this repo instead of an
+    opaque ``jax.lax.psum`` — the Pallas RDMA kernel on compiled TPU
+    (``repro.kernels.ring_reduce``), the ``lax.ppermute`` twin in
+    ``repro.kernels.ref`` on CPU/interpret (dispatch and the vma-safe
+    variant live in ``repro.kernels.ops.ring_allreduce``).
+
+    Wire segments travel in the bucket's dtype (bf16 on the pool
+    pipeline) with f32 accumulation in-flight. Multi-axis reductions run
+    one full-payload ring per level, innermost first, so the predicted
+    time on hierarchical fabrics is deliberately honest: two_level/tree
+    shrink the slow-link payload and price better there. On a single
+    level the schedule (and the predicted time) is identical to ``flat``;
+    the auto-selector keeps the psum-backed entry on ties, making
+    ``collective_algo='pallas_ring'`` an explicit opt-in.
+    """
+
+    name = "pallas_ring"
+
+    def __init__(self, collective_id: int = 0):
+        # Mosaic collective-id base for this instance's rings. Two ring
+        # kernels live in the same compiled program (one per bucket)
+        # must not share an id, and every host must derive the same id
+        # for the same logical ring — so GradientFlow stamps one
+        # instance per bucket via ``with_id(bucket_index)``, a pure
+        # function of the host-invariant bucket layout.
+        self.collective_id = int(collective_id)
+
+    def with_id(self, collective_id: int) -> "PallasRing":
+        """A copy bound to a bucket-stable collective id (the registry
+        instance itself stays id-0 for standalone / single-ring use)."""
+        return PallasRing(collective_id)
+
+    def reduce(self, x, axes):
+        axes = tuple(axes)
+        if not axes:
+            return x
+        from repro.kernels import ops as kops
+        return kops.ring_allreduce(x, axes,
+                                   collective_id=self.collective_id)
+
+    def predicted_time(self, msg_bytes, topo):
+        return sequential_ring_time(
+            msg_bytes, [(lv.size, lv.fabric) for lv in topo.levels])
+
+
 FLAT = FlatRing()
 TWO_LEVEL = TwoLevel()
 TREE = TreeReduce()
+PALLAS_RING = PallasRing()
 
 REGISTRY: Dict[str, ReduceAlgorithm] = {}
 
@@ -228,7 +279,7 @@ def register_algorithm(algo: ReduceAlgorithm) -> ReduceAlgorithm:
     return algo
 
 
-for _a in (FLAT, TWO_LEVEL, TREE):
+for _a in (FLAT, TWO_LEVEL, TREE, PALLAS_RING):
     register_algorithm(_a)
 
 

@@ -1,14 +1,9 @@
 """Multi-device correctness (8 placeholder CPU devices via subprocess —
 the main pytest process must keep seeing the single real device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_multi_device
 
 _JAX_VERSION = tuple(int(x) for x in jax.__version__.split(".")[:2])
 
@@ -24,25 +19,6 @@ nested_manual_xfail = pytest.mark.xfail(
     reason="legacy shard_map partitioner rejects nested-manual psum over "
            "outer data axes (needs model_size>1); see ROADMAP",
     strict=True)
-
-
-def run_multi_device(body: str, devices: int = 8, timeout: int = 900):
-    """Execute `body` in a subprocess with N placeholder devices."""
-    script = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-        import sys
-        sys.path.insert(0, {SRC!r})
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.parallel.collectives import (compat_make_mesh,
-            compat_set_mesh, compat_shard_map)
-    """) + textwrap.dedent(body)
-    proc = subprocess.run([sys.executable, "-c", script],
-                          capture_output=True, text=True, timeout=timeout)
-    assert proc.returncode == 0, (
-        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
-    return proc.stdout
 
 
 @pytest.mark.slow

@@ -186,6 +186,76 @@ def test_pool_and_momentum_buffers_are_donated():
     assert mom2.momentum.unsafe_buffer_pointer() == mom_ptr
 
 
+def test_kernel_pack_into_wire_staging_aliases_and_threads():
+    """ROADMAP 'pack staging donation', closed: the streaming pack kernel
+    accepts a donated WIRE-dtype staging buffer via input_output_aliases.
+    The compiled step must alias the POOL output itself to the staging
+    parameter (output {0} <- param 0: the pool IS the next step's
+    staging, unlike the ref path, which aliases only its source-dtype
+    staging output), consume the donated input, dispatch to the kernel,
+    and match a fresh pack exactly while threading across steps."""
+    import re
+
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+
+    def step(staging, grads_tree):
+        p, norms, _ = pool.pack_into(staging, grads_tree,
+                                     dtype=jnp.bfloat16, norms_chunk=CHUNK,
+                                     use_kernels=True)
+        return p, norms  # p is the staging for the next step
+
+    jstep = jax.jit(step, donate_argnums=(0,))
+
+    # (1) the aliasing contract, read off the compiled executable: the
+    # wire staging parameter feeds the pool output buffer. (Pointer
+    # equality at run time is best-effort on the CPU allocator and not
+    # asserted; the alias entry is the compile-level guarantee.)
+    txt = jstep.lower(jnp.zeros((pool.size,), jnp.bfloat16),
+                      make_tree()).compile().as_text()
+    m = re.search(r"input_output_alias=\{ \{0\}: \(0, \{\}", txt)
+    assert m, "pool output is not aliased to the staging parameter"
+
+    # (2) donation consumes the input buffer
+    before = dict(ops.dispatch_counts)
+    staging = jnp.zeros((pool.size,), jnp.bfloat16)
+    first = staging
+    staging, _ = jstep(staging, make_tree(seed=9))
+    assert first.is_deleted()
+
+    # (3) threading: each step's pool (== next staging) matches a fresh
+    # pack bit-for-bit, and the kernel — not the ref twin — ran
+    for seed in (1, 2, 3):
+        staging, norms = jstep(staging, make_tree(seed=seed))
+        fresh, fresh_norms = pool.pack(make_tree(seed=seed),
+                                       dtype=jnp.bfloat16,
+                                       norms_chunk=CHUNK, use_kernels=True)
+        np.testing.assert_array_equal(np.asarray(staging),
+                                      np.asarray(fresh))
+        np.testing.assert_allclose(np.asarray(norms),
+                                   np.asarray(fresh_norms), rtol=2e-5)
+    assert ops.dispatch_counts.get("pool_pack.kernel", 0) > \
+        before.get("pool_pack.kernel", 0)
+    assert ops.dispatch_counts.get("pool_pack.ref", 0) == \
+        before.get("pool_pack.ref", 0)
+
+
+def test_kernel_pack_into_source_dtype_staging_still_routes_to_ref():
+    """The legacy contract is unchanged: a source-dtype staging buffer
+    (staging != wire dtype) keeps the ref twin's stage-then-cast path even
+    when kernels are requested."""
+    pool = GradientPool(make_tree(), pad_to=CHUNK)
+    staging = jnp.zeros((pool.size,), jnp.float32)
+    before = dict(ops.dispatch_counts)
+    tree = make_tree(seed=5)
+    p, _, staging2 = pool.pack_into(staging, tree, dtype=jnp.bfloat16,
+                                    norms_chunk=CHUNK, use_kernels=True)
+    assert staging2.dtype == jnp.float32 and p.dtype == jnp.bfloat16
+    fresh, _ = pool.pack(tree, dtype=jnp.bfloat16, norms_chunk=CHUNK)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(fresh))
+    assert ops.dispatch_counts.get("pool_pack.ref", 0) > \
+        before.get("pool_pack.ref", 0)
+
+
 def test_pack_mixed_dtype_tree_promotes_like_concatenate():
     """Regression: a pytree with mixed leaf dtypes must pack (per-leaf
     promotion to the staging dtype), as the old concatenate-ravel did."""

@@ -125,6 +125,83 @@ def test_hg_reshard_preserves_totals(rows, cols, new_n, seed):
 
 
 @hypothesis.given(
+    n_elems=st.integers(1, 5000),
+    n_ranks=st.integers(1, 64),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_ring_segments_cover_pool_exactly_once(n_elems, n_ranks):
+    """The ring's static segmentation partitions [0, n) exactly — equal
+    ceil(n/N) segments with a ragged (possibly empty) tail, for any pool
+    size and device count, including pools smaller than the ring."""
+    from repro.kernels.ring_reduce import ring_segment_bounds
+    bounds = ring_segment_bounds(n_elems, n_ranks)
+    assert len(bounds) == n_ranks
+    seg = -(-n_elems // n_ranks)
+    cursor = 0
+    for lo, hi in bounds:
+        assert lo == cursor and lo <= hi  # contiguous, in order
+        assert hi - lo <= seg
+        cursor = hi
+    assert cursor == n_elems  # covered exactly once, nothing past the end
+    hits = np.zeros((n_elems,), np.int32)
+    for lo, hi in bounds:
+        hits[lo:hi] += 1
+    np.testing.assert_array_equal(hits, 1)
+
+
+@hypothesis.given(
+    nchunks=st.integers(2, 24),
+    chunk=st.sampled_from([8, 16]),
+    iters=st.integers(1, 3),
+    seed=st.integers(0, 20),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_csc_conservation_with_pallas_ring(nchunks, chunk, iters, seed):
+    """Algorithm-1 conservation with pallas_ring as the reducer: over k
+    iterations, transmitted + momentum-discounted historical gradients
+    account for every gradient — sent + hg/momentum == g + hg_prev
+    pointwise, nothing lost (single shard: the ring degenerates to the
+    identity, which pins the n==1 / empty-axes dispatch too)."""
+    from repro.parallel.topology import get_algorithm
+    momentum = 0.9
+    cfg = GradientFlowConfig(mode="csc", chunk_elems=chunk,
+                             bucket_elems=3 * chunk, momentum=momentum,
+                             wire_dtype="float32", reduce_axes=())
+    ring = get_algorithm("pallas_ring")
+    pool_size = nchunks * chunk
+    k = max(1, nchunks // 2)
+    state = csc.CSCState(
+        hg=jnp.zeros((pool_size,)),
+        chunk_norms=jax.random.uniform(jax.random.PRNGKey(seed),
+                                       (nchunks,)))
+    key = jax.random.PRNGKey(seed + 1)
+    for it in range(iters):
+        key, gk = jax.random.split(key)
+        g = jax.random.normal(gk, (pool_size,))
+        total = np.asarray(g + state.hg)
+        res = csc.csc_reduce(
+            g, state, cfg, num_selected=k,
+            bucket_boundaries=csc.wire_bucket_boundaries(
+                k, chunk, cfg.bucket_elems),
+            num_data_shards=1, algo=ring)
+        mask = np.asarray(res.elem_mask)
+        sent = np.asarray(res.grads)
+        hg = np.asarray(res.state.hg)
+        # transmitted: the (1-shard) mean of g+hg on selected chunks
+        np.testing.assert_allclose(sent[mask], total[mask], rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_array_equal(sent[~mask], 0.0)
+        # retained: hg = momentum * (g + hg_prev) off-mask, cleared on it
+        np.testing.assert_allclose(hg[~mask], momentum * total[~mask],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(hg[mask], 0.0)
+        # the conservation identity itself: sent + hg/momentum covers g
+        np.testing.assert_allclose(sent + hg / momentum, total,
+                                   rtol=1e-5, atol=1e-6)
+        state = res.state
+
+
+@hypothesis.given(
     nchunks=st.integers(1, 32),
     chunk=st.sampled_from([16, 64]),
     k=st.integers(1, 32),

@@ -2,14 +2,11 @@
 θ auto-tuning, and multi-device numerical equivalence of the reduce
 algorithms (subprocess with placeholder CPU devices, like
 test_distributed.py)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import run_multi_device
 
 from repro.core.gradientflow import GradientFlow
 from repro.core.pool import GradientPool
@@ -19,8 +16,6 @@ from repro.parallel.cost_model import (Fabric, INTRA_NODE, NCCL_56G,
                                        bucket_release_times,
                                        overlapped_finish_time,
                                        ring_allreduce_time)
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 # -- cost model / selection (pure Python, no devices) ------------------------
@@ -98,11 +93,28 @@ def test_resolve_algorithm():
     assert T.resolve_algorithm("flat", topo) is T.FLAT
     assert T.resolve_algorithm("two_level", None) is T.TWO_LEVEL
     assert T.resolve_algorithm("tree", None) is T.TREE
+    assert T.resolve_algorithm("pallas_ring", None) is T.PALLAS_RING
     # auto without topology = seed behavior (flat ring)
     assert T.resolve_algorithm("auto", None) is T.FLAT
     assert T.resolve_algorithm("auto", topo, 64 * 2 ** 20) is not T.FLAT
     with pytest.raises(ValueError):
         T.resolve_algorithm("nccl_h", topo)
+
+
+def test_pallas_ring_prices_like_flat_on_single_level_and_ties_to_flat():
+    """On one level the owned ring is the same schedule as the flat psum
+    ring — identical predicted time — and the selector's strict-improvement
+    rule must keep the psum-backed entry, making pallas_ring opt-in."""
+    topo = T.Topology.flat("data", 512, NCCL_56G)
+    for msg in (4 * 2 ** 10, 64 * 2 ** 20):
+        assert T.PALLAS_RING.predicted_time(msg, topo) == pytest.approx(
+            T.FLAT.predicted_time(msg, topo))
+        assert T.select_algorithm(msg, topo)[0] is T.FLAT
+    # multi-level: one full-payload ring per level — honest (worse than
+    # two_level on Cluster-V, where the slow link carries the whole pool)
+    cv = T.Topology.cluster_v()
+    assert T.PALLAS_RING.predicted_time(64 * 2 ** 20, cv) > \
+        T.TWO_LEVEL.predicted_time(64 * 2 ** 20, cv)
 
 
 def test_topology_is_hashable_inside_config():
@@ -174,31 +186,7 @@ def test_gradientflow_defaults_match_seed_when_no_topology():
         pool.bucket_boundaries(cfg.bucket_elems))
 
 
-# -- multi-device numerical equivalence (subprocess) -------------------------
-
-
-def run_multi_device(body: str, devices: int = 8, timeout: int = 900):
-    """Execute `body` with N placeholder CPU devices in a subprocess (the
-    main pytest process must keep seeing the single real device). The
-    prelude shims the shard_map API across jax versions."""
-    script = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-        import sys
-        sys.path.insert(0, {SRC!r})
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P
-        from repro.parallel.collectives import compat_shard_map
-
-        def smap(f, mesh, in_specs, out_specs, axes):
-            return compat_shard_map(f, mesh=mesh, in_specs=in_specs,
-                                    out_specs=out_specs, axis_names=axes)
-    """) + textwrap.dedent(body)
-    proc = subprocess.run([sys.executable, "-c", script],
-                          capture_output=True, text=True, timeout=timeout)
-    assert proc.returncode == 0, (
-        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
-    return proc.stdout
+# -- multi-device numerical equivalence (subprocess harness: conftest) -------
 
 
 @pytest.mark.slow
@@ -263,7 +251,7 @@ def test_gradientflow_reduce_per_algorithm_on_mesh():
         pool = GradientPool(params, pad_to=64)
         topo = Topology.host_mesh(("pod", "data"), (2, 4))
 
-        for algo in ["flat", "two_level", "tree", "auto"]:
+        for algo in ["flat", "two_level", "tree", "pallas_ring", "auto"]:
             cfg = GradientFlowConfig(mode="lazy", bucket_elems=256,
                                      wire_dtype="float32",
                                      reduce_axes=("pod", "data"),
@@ -280,4 +268,4 @@ def test_gradientflow_reduce_per_algorithm_on_mesh():
                                        err_msg=algo)
             print(algo, "OK")
     """)
-    assert out.count("OK") == 4
+    assert out.count("OK") == 5

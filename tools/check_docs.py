@@ -28,9 +28,11 @@ MODULE_RE = re.compile(r"\brepro(?:\.\w+)+\b")
 BASELINE_RE = re.compile(r"\bBENCH_\w+\.json\b")
 
 # CI gate surface that must be documented somewhere in README/docs: each
-# benchmark gate flag and its committed baseline file.
+# benchmark gate flag, its committed baseline file, and — for the ring
+# gate — the registered algorithm name and the bench fields it pins.
 REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
-                   "--kernel-check", "BENCH_kernels.json")
+                   "--kernel-check", "BENCH_kernels.json",
+                   "pallas_ring", "exchange_steps", "wire_bytes_per_step")
 
 
 def module_resolves(dotted: str) -> bool:
