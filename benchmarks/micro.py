@@ -52,21 +52,11 @@ from repro.kernels import ops, ref
 
 CHUNK = 32768
 
-# AlexNet's gradient tensors (merged single-tower variant): 5 conv + 3 fc
-# layers, weights + biases = 16 tensors, ~62.4M parameters — the paper's
-# headline workload (Table 1 fuses its 26 per-tensor collectives; our
-# reduced tensor list keeps the same total footprint and layer skew: two
-# huge fc tensors, a tail of tiny biases).
-ALEXNET_GRAD_SHAPES = [
-    (96, 3, 11, 11), (96,),
-    (256, 96, 5, 5), (256,),
-    (384, 256, 3, 3), (384,),
-    (384, 384, 3, 3), (384,),
-    (256, 384, 3, 3), (256,),
-    (9216, 4096), (4096,),
-    (4096, 4096), (4096,),
-    (4096, 1000), (1000,),
-]
+# AlexNet's gradient tensors — the paper's headline workload; single
+# source of truth in repro.configs.shapes (shared with the dryrun
+# timeline so the gated benchmark and the rendered table can never
+# model different pools).
+from repro.configs.shapes import ALEXNET_GRAD_SHAPES  # noqa: E402
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -405,6 +395,205 @@ def ring_bench() -> Dict:
     }
 
 
+# -- overlap gate (staged pipeline issue order + cost-model timeline) --------
+
+# 4 ranks, UNIQUE per-tensor sizes: dense mode then yields one bucket per
+# tensor whose psum / select_n result shapes are unambiguous in the
+# jaxpr, so the issue-order assertion can anchor on f32[size] alone.
+OVERLAP_DEVICES = 4
+OVERLAP_SHAPES = [(771,), (1285,), (1799,), (2313,)]
+
+_OVERLAP_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+import sys, json, re
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import GradientFlowConfig, OptimizerConfig
+from repro.core.engine import OverlapEngine
+from repro.core.gradientflow import GradientFlow
+from repro.core.pool import GradientPool
+from repro.optim import sgd
+from repro.parallel.collectives import (compat_make_mesh, compat_set_mesh,
+                                        compat_shard_map)
+
+N = {devices}
+params = {{f"t{{i}}": jnp.zeros(s, jnp.float32)
+          for i, s in enumerate({shapes!r})}}
+pool = GradientPool(params)
+cfg = GradientFlowConfig(mode="dense", wire_dtype="float32",
+                         reduce_axes=("data",), collective_algo="flat",
+                         overlap="staged")
+gf = GradientFlow(cfg, pool, num_data_shards=N)
+eng = OverlapEngine(gf, "momentum_sgd",
+                    OptimizerConfig(name="momentum_sgd"))
+plan = eng.plan_for()
+plan.validate()
+mesh = compat_make_mesh((N,), ("data",))
+
+def step(gpool, mom):
+    st = sgd.SGDState(momentum=mom)
+    new_params, opt2, _ = eng.run(plan, gpool, params, st,
+                                  gf.init_state(), 0.1)
+    return jax.tree_util.tree_leaves(new_params)[0], opt2.momentum
+
+sm = compat_shard_map(step, mesh=mesh, in_specs=(P("data"), P(None)),
+                      out_specs=(P(None), P(None)), axis_names={{"data"}},
+                      check_vma=False)
+gpool = jnp.zeros((N * pool.size,), jnp.float32)
+mom = jnp.zeros((pool.size,), jnp.float32)
+with compat_set_mesh(mesh):
+    lines = str(jax.make_jaxpr(sm)(gpool, mom)).splitlines()
+
+# Scan only the shard_map BODY: jaxpr printing may hoist jnp.where into
+# named `_where` closures above the main jaxpr — eqn order is meaningful
+# only from the shard_map call on, where those closures are invoked
+# (`pjit[name=_where ...]` on jax 0.4.x; inline select_n on newer jax).
+body_at = next(i for i, ln in enumerate(lines) if "shard_map[" in ln)
+lines = lines[body_at:]
+
+sizes = [t.size for t in plan.tasks]
+def first_psum(size):
+    for i, ln in enumerate(lines):
+        if "psum[" in ln and f":f32[{{size}}]" in ln:
+            return i
+    return -1
+def last_update_op(size):
+    idx = -1
+    for i, ln in enumerate(lines):
+        if ("select_n" in ln or "_where" in ln) and \
+                f":f32[{{size}}]" in ln:
+            idx = i
+    return idx
+reduce_at = [first_psum(s) for s in sizes]
+update_done_at = [last_update_op(s) for s in sizes]
+ok = all(i >= 0 for i in reduce_at) and all(i >= 0 for i in update_done_at)
+# The staged contract: bucket i's reduce is ISSUED (traced) before bucket
+# i-1's update completes.
+interleaved = ok and all(
+    reduce_at[i] < update_done_at[i - 1] for i in range(1, len(sizes)))
+# And it is a genuine pipeline, not a barrier: the first update starts
+# before the LAST reduce is issued (fails if someone re-serializes it).
+pipelined = ok and update_done_at[0] < reduce_at[-1]
+print(json.dumps({{"sizes": sizes, "reduce_at": reduce_at,
+                  "update_done_at": update_done_at,
+                  "interleaved": bool(interleaved),
+                  "pipelined": bool(pipelined)}}))
+"""
+
+
+def overlap_bench() -> Dict:
+    """The overlap engine's two gated surfaces:
+
+    * jaxpr issue order — a 4-rank subprocess traces the staged pipeline
+      (dense mode: one bucket per tensor, unique sizes) and asserts
+      bucket i's psum appears BEFORE bucket i-1's last update op, i.e.
+      reduce_i is issued while update_{i-1} is still in flight;
+    * the cost-model timeline — the AlexNet-class plan on Cluster-V
+      (pure python, deterministic): per-bucket exposed-comm seconds,
+      overlap efficiency, and staged-vs-monolithic finish.
+    """
+    import subprocess
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    script = _OVERLAP_SCRIPT.format(devices=OVERLAP_DEVICES, src=src,
+                                    shapes=OVERLAP_SHAPES)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"overlap bench subprocess failed:\n{proc.stdout}\n"
+            f"{proc.stderr}")
+    order = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    from repro.configs.base import GradientFlowConfig
+    from repro.core import engine
+    from repro.core.gradientflow import GradientFlow
+    from repro.core.pool import GradientPool
+    from repro.parallel.topology import Topology
+
+    topo = Topology.cluster_v()
+    pool = GradientPool({f"t{i}": jnp.zeros(s, jnp.float32)
+                         for i, s in enumerate(ALEXNET_GRAD_SHAPES)})
+    gf = GradientFlow(
+        GradientFlowConfig(mode="lazy", wire_dtype="float16",
+                           warmup_steps=0, auto_bucket=True, topology=topo,
+                           reduce_axes=("node", "gpu"),
+                           collective_algo="auto", overlap="staged"),
+        pool, num_data_shards=topo.num_devices)
+    plan = gf.plan()
+    plan.validate()
+    sim = engine.simulate_plan(plan, topo)
+    rows, summary = sim["rows"], sim["summary"]
+    rnd = lambda x: round(float(x), 9)
+    return {
+        "jax_version": jax.__version__,
+        "issue_order": order,
+        "timeline": {
+            "workload": "alexnet",
+            "devices": topo.num_devices,
+            "num_buckets": len(plan.tasks),
+            "bucket_elems": [t.size for t in plan.tasks],
+            "algos": [t.algo.name for t in plan.tasks],
+            "per_bucket_exposed_comm_s": [
+                rnd(r.exposed_comm_s(sim["backward_s"])) for r in rows],
+            "backward_s": rnd(sim["backward_s"]),
+            "finish_s": rnd(summary["finish_s"]),
+            "monolithic_finish_s": rnd(sim["monolithic_finish_s"]),
+            "exposed_comm_s": rnd(summary["exposed_comm_s"]),
+            "overlap_efficiency": rnd(summary["overlap_efficiency"]),
+        },
+    }
+
+
+def check_overlap_regression(baseline_path: str) -> int:
+    """CI gate: fail (exit 1) if the staged pipeline loses its interleaved
+    issue order (reduce_i no longer traced before update_{i-1} completes,
+    or the pipeline re-serialized into a barrier), if the staged finish
+    stops beating the monolithic barrier on the modeled AlexNet/Cluster-V
+    timeline, or if the deterministic timeline numbers drift from the
+    committed BENCH_overlap.json without a baseline refresh."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    cur = overlap_bench()
+    failures = []
+    if not cur["issue_order"]["interleaved"]:
+        failures.append(
+            "staged pipeline lost its issue order: some bucket's reduce "
+            "is no longer traced before the previous bucket's update "
+            f"completes ({cur['issue_order']})")
+    if not cur["issue_order"]["pipelined"]:
+        failures.append(
+            "staged pipeline re-serialized into a barrier (first update "
+            f"after the last reduce: {cur['issue_order']})")
+    tl, base_tl = cur["timeline"], base.get("timeline", {})
+    if tl["finish_s"] > tl["monolithic_finish_s"] + 1e-12:
+        failures.append(
+            f"staged finish {tl['finish_s']} no longer beats the "
+            f"monolithic barrier {tl['monolithic_finish_s']}")
+    # The timeline is pure-python cost-model arithmetic — machine
+    # independent — so drift means the model or the plan changed and the
+    # committed baseline must be refreshed alongside.
+    for k in ("devices", "num_buckets", "bucket_elems", "algos",
+              "per_bucket_exposed_comm_s", "backward_s", "finish_s",
+              "monolithic_finish_s", "exposed_comm_s",
+              "overlap_efficiency"):
+        if tl[k] != base_tl.get(k):
+            failures.append(
+                f"timeline.{k} drifted: {tl[k]} != baseline "
+                f"{base_tl.get(k)} (refresh BENCH_overlap.json if "
+                "intentional)")
+    for msg in failures:
+        print(f"OVERLAP BENCH REGRESSION: {msg}")
+    if not failures:
+        print(f"overlap bench OK: issue_order={cur['issue_order']} "
+              f"exposed={tl['exposed_comm_s']}s "
+              f"efficiency={tl['overlap_efficiency']}")
+    return 1 if failures else 0
+
+
 # Peak VMEM the streaming kernels may claim per pallas_call — well under
 # the ~16MiB/core budget so double buffering always has headroom.
 _KERNEL_VMEM_BUDGET = 8 * 1024 * 1024
@@ -551,6 +740,16 @@ def main() -> int:
                          "ref on a >4M pool and compare tile count / peak "
                          "VMEM bytes against the committed "
                          "BENCH_kernels.json; exit 1 on regression")
+    ap.add_argument("--overlap-json", metavar="PATH",
+                    help="run the overlap-engine benchmark (jaxpr issue "
+                         "order + AlexNet/Cluster-V timeline) and write "
+                         "the baseline JSON")
+    ap.add_argument("--overlap-check", action="store_true",
+                    help="overlap gate: assert the staged pipeline's "
+                         "interleaved issue order (reduce_i before "
+                         "update_{i-1} completes) and compare the "
+                         "cost-model timeline against the committed "
+                         "BENCH_overlap.json; exit 1 on regression")
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     if args.pool_check:
@@ -558,6 +757,16 @@ def main() -> int:
     if args.kernel_check:
         return check_kernel_regression(
             os.path.join(root, "BENCH_kernels.json"))
+    if args.overlap_check:
+        return check_overlap_regression(
+            os.path.join(root, "BENCH_overlap.json"))
+    if args.overlap_json:
+        res = overlap_bench()
+        with open(args.overlap_json, "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
+        print(json.dumps(res, indent=2))
+        return 0
     if args.kernel_json:
         res = kernel_bench(measure_time=True)
         with open(args.kernel_json, "w") as f:

@@ -143,6 +143,13 @@ class GradientFlowConfig:
     # Auto-tune the lazy-allreduce θ from the topology's cost model
     # (overrides bucket_elems when a topology is available).
     auto_bucket: bool = False
+    # Execution of the reduce+update phase (repro.core.engine):
+    #   'staged'     — per-bucket software pipeline: bucket i's collective
+    #                  is issued while bucket i-1's fused optimizer update
+    #                  runs (the paper's §3.1 overlap, made explicit).
+    #   'monolithic' — the barrier chain (reduce every bucket, then update
+    #                  the whole pool); kept as the equivalence twin.
+    overlap: str = "staged"
     # Use Pallas fused kernels where available (CPU falls back to ref).
     use_kernels: bool = False
 

@@ -17,6 +17,26 @@ SHAPES: Dict[str, ShapeConfig] = {
 }
 
 
+# AlexNet's gradient tensors (merged single-tower variant): 5 conv + 3 fc
+# layers, weights + biases = 16 tensors, ~62.4M parameters — the paper's
+# headline workload (Table 1 fuses its 26 per-tensor collectives; this
+# reduced tensor list keeps the same total footprint and layer skew: two
+# huge fc tensors, a tail of tiny biases). Single source of truth for the
+# overlap timeline (repro.launch.dryrun --timeline) AND the CI-gated
+# overlap benchmark (benchmarks/micro.py --overlap-check) — edit here and
+# refresh BENCH_overlap.json, never fork the list.
+ALEXNET_GRAD_SHAPES = [
+    (96, 3, 11, 11), (96,),
+    (256, 96, 5, 5), (256,),
+    (384, 256, 3, 3), (384,),
+    (384, 384, 3, 3), (384,),
+    (256, 384, 3, 3), (256,),
+    (9216, 4096), (4096,),
+    (4096, 4096), (4096,),
+    (4096, 1000), (1000,),
+]
+
+
 def shapes_for(cfg) -> List[ShapeConfig]:
     """The shape cells an architecture runs. long_500k needs sub-quadratic
     attention: pure full-attention archs skip it (noted in DESIGN.md

@@ -1,9 +1,9 @@
 """GradientFlow core: the paper's communication backend in JAX."""
 from repro.core.gradientflow import GFState, GradientFlow
-from repro.core.pool import GradientPool, LeafSpec
-from repro.core import csc, lazy_allreduce, schedule
+from repro.core.pool import GradientPool, LeafSpec, PoolView
+from repro.core import csc, engine, lazy_allreduce, schedule
 
 __all__ = [
-    "GradientFlow", "GFState", "GradientPool", "LeafSpec",
-    "csc", "lazy_allreduce", "schedule",
+    "GradientFlow", "GFState", "GradientPool", "LeafSpec", "PoolView",
+    "csc", "engine", "lazy_allreduce", "schedule",
 ]

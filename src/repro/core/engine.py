@@ -1,0 +1,462 @@
+"""Overlap engine: the per-bucket staged pipeline (paper §3.1's
+computation/communication overlap, made explicit).
+
+The paper's speedup rests on three pillars — lazy allreduce, sparse
+communication, and comm/compute overlap. The first two are owned
+subsystems (``lazy_allreduce``, ``csc``, the topology registry); overlap
+used to be implicit: the train step was a barrier chain (pack whole pool →
+reduce every bucket → update whole pool) that left XLA's latency-hiding
+scheduler as the only overlap mechanism. This module makes the pipeline an
+explicit IR plus an executor:
+
+* ``StepPlan`` — the compiled step: one ``BucketTask`` per collective
+  (pack slice → reduce algorithm from the topology registry) and a
+  tensor-aligned partition of the pool into update spans (each span is a
+  ``GradientPool.bucket_view`` — buckets close at tensor boundaries, so
+  the per-bucket optimizer update reuses the whole-pool kernels on the
+  view's sub-table).
+* ``OverlapEngine.run`` — software-pipelined execution: bucket *i*'s
+  collective is ISSUED before bucket *i-1*'s fused optimizer update is
+  emitted, so the lowered module interleaves reduce_i with update_{i-1}
+  instead of fencing the whole pool between them (the
+  ``benchmarks/micro.py --overlap-check`` gate asserts this op order in
+  the jaxpr). CSC pipelines reduce_i with *scatter*_{i-1} — chunk
+  selection is dynamic, so every update span depends on every wire
+  bucket, and the update side runs as its own segmented pass.
+* ``simulate_plan`` / ``render_timeline`` — the analytic twin: the same
+  plan priced on a ``Topology`` by the cost model's two-engine timeline
+  (serial comm engine ∥ serial update engine), yielding per-bucket
+  start/finish, exposed-comm seconds, and overlap efficiency — the
+  numbers the θ auto-tuner and ``launch/dryrun.py --timeline`` report.
+
+The pipelined and monolithic paths bottom out in the same per-bucket
+primitives (``lazy_allreduce.reduce_bucket``, the optimizer view update),
+so they are numerically equivalent by construction — the equivalence
+matrix in ``tests/test_engine.py`` pins it across
+{dense, lazy, csc} × {flat, pallas_ring} × device counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import csc as csc_mod
+from repro.core import lazy_allreduce as lazy_mod
+from repro.core import schedule as schedule_mod
+from repro.parallel import cost_model
+from repro.parallel.collectives import reduce_pool
+
+
+# -- the IR ------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketTask:
+    """One collective of the step: payload span [start, end) of the wire
+    buffer (the pool itself for dense/lazy; the compacted k·chunk buffer
+    for CSC) plus the ReduceAlgorithm that executes it.
+
+    ``update_span`` is the pool range whose optimizer update this task's
+    result unblocks — for dense/lazy it equals the payload span (tensor
+    aligned); for CSC it is None (selection is dynamic, the update side
+    has its own spans in ``StepPlan.update_spans``)."""
+
+    index: int
+    start: int
+    end: int
+    algo: Any                                   # topology.ReduceAlgorithm
+    update_span: Optional[Tuple[int, int]] = None
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """The compiled pipeline of one train step (static, trace-time)."""
+
+    mode: str                                   # 'dense' | 'lazy' | 'csc'
+    pool_size: int
+    payload_elems: int                          # total elems on the wire
+    wire_dtype: str
+    reduce_axes: Tuple[str, ...]
+    num_data_shards: int
+    tasks: Tuple[BucketTask, ...]               # the collectives, in order
+    update_spans: Tuple[Tuple[int, int], ...]   # tensor-aligned pool tiling
+    warmup: bool = False                        # CSC dense warm-up stage
+    num_selected: int = 0                       # CSC k (0 for dense/lazy)
+    chunk_elems: int = 0
+
+    @property
+    def num_collectives(self) -> int:
+        return len(self.tasks)
+
+    def validate(self) -> None:
+        """The partition invariants the hypothesis property pins: tasks
+        tile [0, payload_elems) and update spans tile [0, pool_size),
+        each exactly once, in order, with no overlap or gap."""
+        pos = 0
+        for t in self.tasks:
+            assert t.start == pos and t.end > t.start, (t, pos)
+            pos = t.end
+        assert pos == self.payload_elems, (pos, self.payload_elems)
+        pos = 0
+        for s, e in self.update_spans:
+            assert s == pos and e > s, ((s, e), pos)
+            pos = e
+        assert pos == self.pool_size, (pos, self.pool_size)
+
+
+def compile_step_plan(gf, stage: Optional[schedule_mod.SparsityStage] = None,
+                      ) -> StepPlan:
+    """Compile GradientFlow's implicit pipeline into an explicit StepPlan.
+
+    Reuses the bucket layouts and per-bucket algorithms GradientFlow
+    resolved at build time (θ auto-tuning included), so the plan IS the
+    layout the monolithic path reduces — the IR adds structure, never a
+    different bucketing."""
+    cfg = gf.cfg
+    pool = gf.pool
+    common = dict(pool_size=pool.size, wire_dtype=str(cfg.wire_dtype),
+                  reduce_axes=tuple(cfg.reduce_axes),
+                  num_data_shards=gf.num_data_shards)
+
+    def pool_tasks(bounds, algos):
+        return tuple(BucketTask(index=i, start=s, end=e, algo=a,
+                                update_span=(s, e))
+                     for i, ((s, e), a) in enumerate(zip(bounds, algos)))
+
+    if cfg.mode == "dense":
+        bounds = list(gf._dense_bounds)
+        if bounds and bounds[-1][1] < pool.size:
+            # Per-tensor bounds stop at the last tensor; the plan must
+            # tile the whole pool, so the padding tail gets its own task.
+            bounds.append((bounds[-1][1], pool.size))
+        elif not bounds:
+            bounds = [(0, pool.size)]
+        algos = gf._algos_for(tuple(bounds))
+        tasks = pool_tasks(bounds, algos)
+        return StepPlan(mode="dense", payload_elems=pool.size, tasks=tasks,
+                        update_spans=tuple(bounds), **common)
+
+    if cfg.mode == "lazy":
+        tasks = pool_tasks(gf._lazy_bounds, gf._lazy_algos)
+        return StepPlan(mode="lazy", payload_elems=pool.size, tasks=tasks,
+                        update_spans=tuple(gf._lazy_bounds), **common)
+
+    assert cfg.mode == "csc", cfg.mode
+    stage = stage or gf.stages[-1]
+    k = stage.num_selected
+    if k >= gf.num_chunks:
+        # Dense warm-up: the full pool goes over the wire in lazy buckets,
+        # but the plan is marked so execution refreshes the norm census.
+        tasks = pool_tasks(gf._lazy_bounds, gf._lazy_algos)
+        return StepPlan(mode="csc", payload_elems=pool.size, tasks=tasks,
+                        update_spans=tuple(gf._lazy_bounds), warmup=True,
+                        num_selected=k, chunk_elems=cfg.chunk_elems,
+                        **common)
+    wire_bounds = csc_mod.wire_bucket_boundaries(k, cfg.chunk_elems,
+                                                 gf.bucket_elems)
+    algos = gf._algos_for(wire_bounds)
+    tasks = tuple(BucketTask(index=i, start=s, end=e, algo=a)
+                  for i, ((s, e), a) in enumerate(zip(wire_bounds, algos)))
+    return StepPlan(mode="csc", payload_elems=k * cfg.chunk_elems,
+                    tasks=tasks,
+                    update_spans=tuple(pool.bucket_boundaries(
+                        gf.bucket_elems)),
+                    num_selected=k, chunk_elems=cfg.chunk_elems, **common)
+
+
+# -- the executor ------------------------------------------------------------
+
+
+def _seg(x: jax.Array, start: int, end: int) -> jax.Array:
+    return jax.lax.slice_in_dim(x, start, end)
+
+
+class OverlapEngine:
+    """Executes a StepPlan software-pipelined inside the manual region.
+
+    Holds the same collaborators the monolithic update path uses
+    (GradientFlow, optimizer config, optional LARS scaler) and emits the
+    same math — just per bucket, with bucket *i*'s collective issued
+    before bucket *i-1*'s update ops."""
+
+    def __init__(self, gf, opt_name: str, opt_cfg, lars=None):
+        self.gf = gf
+        self.pool = gf.pool
+        self.opt_name = opt_name
+        self.opt_cfg = opt_cfg
+        self.lars = lars
+
+    def plan_for(self, stage=None) -> StepPlan:
+        return compile_step_plan(self.gf, stage)
+
+    # -- public entry point --------------------------------------------------
+
+    def run(self, plan: StepPlan, gpool, params_tree, opt_state,
+            gfstate, lr):
+        """One pipelined reduce+update phase. ``gpool`` is the local
+        gradient pool, already packed (wire dtype for dense/lazy, f32 for
+        CSC); ``gfstate`` the LOCAL GradientFlow state (hg as a flat
+        [pool] row, as inside the manual region). Returns
+        (new_params_tree, new_opt_state, new_gfstate)."""
+        cfg = self.gf.cfg
+        use_k = cfg.use_kernels
+        prepacked = cfg.mode in ("dense", "lazy")
+        master, _ = self.pool.pack(params_tree, dtype=jnp.float32,
+                                   use_kernels=use_k)
+        if cfg.mode == "csc" and not plan.warmup:
+            return self._run_csc(plan, gpool, master, opt_state, gfstate,
+                                 lr)
+        if cfg.mode == "csc":
+            return self._run_csc_warmup(plan, gpool, master, opt_state,
+                                        gfstate, lr)
+        new_params, opt2 = self._run_pool_pipeline(
+            plan, gpool, master, opt_state, lr, prepacked=prepacked,
+            mask=None)
+        return new_params, opt2, gfstate
+
+    # -- dense / lazy ---------------------------------------------------------
+
+    def _run_pool_pipeline(self, plan, gpool, master, opt_state, lr, *,
+                           prepacked: bool, mask,
+                           reduced_segs: Optional[list] = None):
+        """The staged loop over pool-space tasks: issue reduce_i, then
+        emit update_{i-1} while it is in flight. ``mask`` is an optional
+        pool-sized element mask (CSC); ``reduced_segs`` (when given) is
+        filled with each task's mean segment for callers that need the
+        whole reduced pool afterwards (the warm-up norm census)."""
+        cfg = self.gf.cfg
+        wire = None if prepacked else cfg.wire_dtype
+        outs: List[Any] = [None] * len(plan.tasks)
+        pending = None
+        for task in plan.tasks:
+            red = lazy_mod.reduce_bucket(
+                gpool, task.start, task.end, plan.reduce_axes, wire,
+                algo=task.algo) / plan.num_data_shards
+            if reduced_segs is not None:
+                reduced_segs.append(red)
+            if pending is not None:
+                pt, pr = pending
+                outs[pt.index] = self._update_span(
+                    pt.update_span, pr, master, opt_state, lr, mask)
+            pending = (task, red)
+        pt, pr = pending
+        outs[pt.index] = self._update_span(pt.update_span, pr, master,
+                                           opt_state, lr, mask)
+        return self._assemble(outs)
+
+    # -- CSC ------------------------------------------------------------------
+
+    def _run_csc(self, plan, gpool, master, opt_state, gfstate, lr):
+        """Sparse CSC stage: pipeline reduce_i ∥ scatter_{i-1} over the
+        compacted wire buffer, then the segmented masked update. Same math
+        as ``csc.csc_reduce`` + the monolithic update — Algorithm 1 with
+        the collectives and scatters interleaved."""
+        cfg = self.gf.cfg
+        chunk = plan.chunk_elems
+        g = gpool.astype(jnp.float32) + gfstate.hg
+        idx, chunk_mask = csc_mod.select_chunks(gfstate.chunk_norms,
+                                                plan.num_selected)
+        elem_mask = jnp.repeat(chunk_mask, chunk)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            wire = kops.csc_compact(g, idx, chunk)
+        else:
+            wire = csc_mod.compact_chunks(g, idx, chunk)
+
+        g_out, g_update = g, jnp.zeros(g.shape, g.dtype)
+        pending = None
+        for task in plan.tasks:
+            red = lazy_mod.reduce_bucket(
+                wire, task.start, task.end, plan.reduce_axes,
+                cfg.wire_dtype, algo=task.algo) / plan.num_data_shards
+            if pending is not None:
+                g_out, g_update = self._scatter_task(
+                    g_out, g_update, pending[0], pending[1], idx, chunk)
+            pending = (task, red)
+        g_out, g_update = self._scatter_task(g_out, g_update, pending[0],
+                                             pending[1], idx, chunk)
+
+        # Algorithm 1 lines 8-11 + the Fig 18 census; both collectives are
+        # issued BEFORE the update spans so they overlap the update sweep.
+        hg_new = jnp.where(elem_mask, 0.0,
+                           cfg.momentum * g_out).astype(gfstate.hg.dtype)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            l1 = kops.chunk_l1norm(g_out, chunk)
+        else:
+            l1 = csc_mod.chunk_l1_norms(g_out, chunk)
+        norms_new = reduce_pool(l1, plan.reduce_axes)
+
+        outs = [self._update_span(span, _seg(g_update, *span), master,
+                                  opt_state, lr, elem_mask)
+                for span in plan.update_spans]
+        new_params, opt2 = self._assemble(outs)
+        from repro.core.gradientflow import GFState
+        return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms_new)
+
+    @staticmethod
+    def _scatter_task(g_out, g_update, task, red, idx, chunk):
+        """Retire one wire bucket: write its reduced chunks back into the
+        post-reduce view and the update-ready view (the per-bucket form of
+        ``csc.scatter_chunks`` — compacted positions [start, end) map to
+        the sorted chunk ids idx[start/chunk : end/chunk))."""
+        ids = jax.lax.slice_in_dim(idx, task.start // chunk,
+                                   task.end // chunk)
+        vals = red.reshape((-1, chunk))
+        g_out = g_out.reshape((-1, chunk)).at[ids].set(vals).reshape(-1)
+        g_update = g_update.reshape((-1, chunk)).at[ids].set(
+            vals).reshape(-1)
+        return g_out, g_update
+
+    def _run_csc_warmup(self, plan, gpool, master, opt_state, gfstate, lr):
+        """CSC's dense warm-up stage, staged: the hg-corrected f32 pool is
+        reduced in lazy buckets pipelined against the update, and the norm
+        census runs on the reassembled mean pool (it must keep tracking
+        norms for the sparse handoff — ``GradientFlow.
+        _dense_or_lazy_with_norms`` is the monolithic twin)."""
+        from repro.core.gradientflow import GFState
+        from repro.parallel.sharding import match_vma
+
+        cfg = self.gf.cfg
+        g = gpool.astype(jnp.float32) + gfstate.hg
+        segs: List[jax.Array] = []
+        new_params, opt2 = self._run_pool_pipeline(
+            plan, g, master, opt_state, lr, prepacked=False, mask=None,
+            reduced_segs=segs)
+        mean = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+        l1 = csc_mod.chunk_l1_norms(mean, cfg.chunk_elems)
+        norms = reduce_pool(l1, plan.reduce_axes)
+        hg_new = match_vma(jnp.zeros_like(gfstate.hg), gpool)
+        return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms)
+
+    # -- the per-bucket update -------------------------------------------------
+
+    def _update_span(self, span, red_seg, master, opt_state, lr, mask):
+        """Emit one update span's fused optimizer step: slice the master /
+        optimizer-state pools to the span, compute LARS ratios for the
+        span's tensors (tensors never cross buckets, so per-tensor norms
+        are complete), and run the segment update through the same
+        kernels as the whole-pool path (the streaming TilePlan restricted
+        to the bucket span). Returns (leaves, new_state_seg)."""
+        from repro import optim
+
+        cfg = self.gf.cfg
+        start, end = span
+        view = self.pool.bucket_view(start, end)
+        m_seg = _seg(master, start, end)
+        st_seg = jax.tree_util.tree_map(lambda a: _seg(a, start, end),
+                                        opt_state)
+        mask_seg = jnp.ones((view.size,), jnp.bool_) if mask is None \
+            else _seg(mask, start, end)
+        scale = ratios = None
+        if self.lars is not None:
+            r = self.lars.ratios_view(view, m_seg, red_seg, self.opt_cfg,
+                                      mask_seg)
+            if cfg.use_kernels:
+                ratios = r
+            else:
+                from repro.kernels import ref
+                scale = ref.expand_ratios(r, view.sizes, view.size)
+        leaves, st2 = optim.update_view(
+            self.opt_name, view, m_seg, red_seg, st_seg, mask_seg,
+            self.opt_cfg, lr, scale=scale, ratios=ratios,
+            use_kernels=cfg.use_kernels)
+        return leaves, st2
+
+    def _assemble(self, outs):
+        """Stitch the per-span outputs back together: leaves concatenate
+        across spans into the full segment-table order (then unflatten to
+        the parameter pytree); optimizer-state segments concatenate back
+        into pool form."""
+        all_leaves = [leaf for leaves, _ in outs for leaf in leaves]
+        assert len(all_leaves) == self.pool.num_tensors, (
+            len(all_leaves), self.pool.num_tensors)
+        new_params = self.pool.unflatten(all_leaves)
+        states = [st for _, st in outs]
+        if len(states) == 1:
+            opt2 = states[0]
+        else:
+            opt2 = jax.tree_util.tree_map(
+                lambda *segs: jnp.concatenate(segs), *states)
+        return new_params, opt2
+
+
+# -- the analytic twin (timeline simulation) ---------------------------------
+
+
+def simulate_plan(plan: StepPlan, topo, *,
+                  backward_s: Optional[float] = None,
+                  hbm_bw: float = cost_model.HBM_BW) -> dict:
+    """Price a StepPlan on a Topology with the cost model's two-engine
+    timeline: per-bucket comm times from each task's own ReduceAlgorithm,
+    releases at the uniform backward rate, update times from the HBM
+    sweep model. Returns {rows, summary, backward_s, monolithic_finish_s}
+    — ``monolithic_finish_s`` is the same buckets WITHOUT the staged
+    update (comm finishes, then one barrier update sweep), the number the
+    pipeline must beat."""
+    elt = jnp.dtype(plan.wire_dtype).itemsize
+    sizes = [t.size * elt for t in plan.tasks]
+    if backward_s is None:
+        backward_s = cost_model.ring_allreduce_time(
+            plan.payload_elems * elt, topo.num_devices, topo.slowest_fabric)
+    comm = [t.algo.predicted_time(b, topo) for t, b in zip(plan.tasks,
+                                                           sizes)]
+    rel = cost_model.bucket_release_times(sizes, backward_s)
+    if plan.mode == "csc" and not plan.warmup:
+        # The update side is its own segmented pass (spans ≠ tasks):
+        # charge it as one post-comm sweep of the pool.
+        upd = [0.0] * len(plan.tasks)
+        rows = cost_model.staged_timeline(comm, rel, upd)
+        tail = cost_model.update_time(plan.pool_size, hbm_bw)
+        finish = rows[-1].update_end_s + tail if rows else backward_s
+        summary = cost_model.timeline_summary(rows, backward_s)
+        summary["finish_s"] = finish
+        mono = finish
+    else:
+        upd = [cost_model.update_time(t.size, hbm_bw) for t in plan.tasks]
+        rows = cost_model.staged_timeline(comm, rel, upd)
+        summary = cost_model.timeline_summary(rows, backward_s)
+        mono = cost_model.overlapped_finish_time(comm, rel) + sum(upd)
+    return {"rows": rows, "summary": summary, "backward_s": backward_s,
+            "monolithic_finish_s": mono}
+
+
+def render_timeline(plan: StepPlan, topo, *,
+                    backward_s: Optional[float] = None) -> str:
+    """Human-readable compute/comm timeline of a plan — the dryrun
+    ``--timeline`` table (per-bucket comm/update start+end in ms, the
+    per-bucket exposed comm, and the overlap-efficiency summary)."""
+    sim = simulate_plan(plan, topo, backward_s=backward_s)
+    rows, summary = sim["rows"], sim["summary"]
+    bw = sim["backward_s"]
+    ms = 1e3
+    lines = [
+        f"StepPlan[{plan.mode}{' warmup' if plan.warmup else ''}] "
+        f"{len(plan.tasks)} buckets, payload "
+        f"{plan.payload_elems * jnp.dtype(plan.wire_dtype).itemsize / 2**20:.1f}"
+        f" MiB ({plan.wire_dtype}) over {topo.num_devices} devices",
+        f"{'bkt':>3} {'elems':>10} {'algo':>11} {'rel':>8} "
+        f"{'comm_start':>10} {'comm_end':>9} {'upd_start':>9} "
+        f"{'upd_end':>8} {'exposed':>8}   (ms)",
+    ]
+    for t, r in zip(plan.tasks, rows):
+        lines.append(
+            f"{r.index:>3} {t.size:>10} {t.algo.name:>11} "
+            f"{r.release_s * ms:>8.2f} {r.comm_start_s * ms:>10.2f} "
+            f"{r.comm_end_s * ms:>9.2f} {r.update_start_s * ms:>9.2f} "
+            f"{r.update_end_s * ms:>8.2f} "
+            f"{r.exposed_comm_s(bw) * ms:>8.2f}")
+    lines.append(
+        f"backward {bw * ms:.2f} ms | finish {summary['finish_s'] * ms:.2f}"
+        f" ms (monolithic {sim['monolithic_finish_s'] * ms:.2f} ms) | "
+        f"comm busy {summary['comm_busy_s'] * ms:.2f} ms | exposed comm "
+        f"{summary['exposed_comm_s'] * ms:.2f} ms | overlap efficiency "
+        f"{summary['overlap_efficiency'] * 100:.1f}%")
+    return "\n".join(lines)

@@ -50,6 +50,7 @@ class GradientFlow:
         else:
             self.num_chunks = 0
         self.stages = schedule_mod.build_stages(cfg, max(self.num_chunks, 1))
+        self._stage_firsts = schedule_mod.stage_first_steps(self.stages)
         # Static bucket layouts. θ comes from the config, or — when
         # auto_bucket is on and a topology is known — from the cost-model
         # tuner (docs/collectives.md).
@@ -57,9 +58,14 @@ class GradientFlow:
             (s.offset, s.offset + s.size) for s in pool.specs)
         self.bucket_elems = cfg.bucket_elems
         if cfg.auto_bucket and cfg.topology is not None:
+            # Staged execution prices θ against the overlap engine's full
+            # pipeline (updates overlap in-flight collectives); the
+            # monolithic twin keeps the comm-only objective.
+            from repro.parallel.cost_model import HBM_BW
+            update_bw = HBM_BW if cfg.overlap == "staged" else None
             self.bucket_elems, bounds = topo_mod.auto_bucket_boundaries(
                 pool, cfg.wire_dtype, cfg.topology,
-                collective_algo=cfg.collective_algo)
+                collective_algo=cfg.collective_algo, update_bw=update_bw)
             self._lazy_bounds = tuple(bounds)
         else:
             self._lazy_bounds = tuple(
@@ -107,7 +113,17 @@ class GradientFlow:
                        chunk_norms=jax.ShapeDtypeStruct((0,), jnp.float32))
 
     def stage_for_step(self, step: int) -> schedule_mod.SparsityStage:
-        return schedule_mod.stage_at(self.stages, step)
+        return schedule_mod.stage_at(self.stages, step,
+                                     first_steps=self._stage_firsts)
+
+    def plan(self, stage: Optional[schedule_mod.SparsityStage] = None):
+        """Compile this backend's bucket layout into the overlap engine's
+        ``StepPlan`` IR (``repro.core.engine``): one ``BucketTask`` per
+        collective plus the tensor-aligned update spans. The plan reuses
+        the exact bounds/algorithms ``reduce`` executes monolithically —
+        same layout, explicit structure."""
+        from repro.core import engine
+        return engine.compile_step_plan(self, stage)
 
     # -- the reduction -----------------------------------------------------
 

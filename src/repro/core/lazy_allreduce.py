@@ -39,6 +39,48 @@ def _algo_for(algo: AlgoSpec, i: int):
     return algo[i]
 
 
+def reduce_bucket(
+    pool: jax.Array,
+    start: int,
+    end: int,
+    axes: Sequence[str],
+    wire_dtype,
+    *,
+    algo=None,
+    accum_dtype=jnp.float32,
+) -> jax.Array:
+    """Issue ONE bucket's collective: slice [start, end) off the pool,
+    cast to the wire dtype (``None`` = the pool is already wire-packed),
+    reduce across the data axes with ``algo``, return the summed segment
+    in ``accum_dtype``. This is the per-bucket primitive both the
+    monolithic ``bucketed_reduce`` and the overlap engine's ``StepPlan``
+    execution bottom out in — one definition, so the pipelined and
+    monolithic paths cannot drift."""
+    seg = jax.lax.slice_in_dim(pool, start, end)
+    if wire_dtype is not None:
+        seg = seg.astype(jnp.dtype(wire_dtype))
+    seg = reduce_pool(seg, axes, algo=algo)
+    return seg.astype(accum_dtype)
+
+
+def bucketed_reduce_parts(
+    pool: jax.Array,
+    boundaries: Sequence[Tuple[int, int]],
+    axes: Sequence[str],
+    wire_dtype,
+    *,
+    algo: AlgoSpec = None,
+    accum_dtype=jnp.float32,
+) -> List[jax.Array]:
+    """Per-bucket variant of ``bucketed_reduce``: one summed segment per
+    boundary instead of one concatenated pool — what the overlap engine
+    consumes (bucket i's segment feeds bucket i's update without waiting
+    on the rest of the pool)."""
+    return [reduce_bucket(pool, start, end, axes, wire_dtype,
+                          algo=_algo_for(algo, i), accum_dtype=accum_dtype)
+            for i, (start, end) in enumerate(boundaries)]
+
+
 def bucketed_reduce(
     pool: jax.Array,
     boundaries: Sequence[Tuple[int, int]],
@@ -59,14 +101,8 @@ def bucketed_reduce(
     ``algo`` selects the collective algorithm (None = flat ring psum).
     Returns the *summed* pool in ``accum_dtype`` (caller normalizes).
     """
-    wire_dtype = None if wire_dtype is None else jnp.dtype(wire_dtype)
-    parts: List[jax.Array] = []
-    for i, (start, end) in enumerate(boundaries):
-        seg = jax.lax.slice_in_dim(pool, start, end)
-        if wire_dtype is not None:
-            seg = seg.astype(wire_dtype)
-        seg = reduce_pool(seg, axes, algo=_algo_for(algo, i))
-        parts.append(seg.astype(accum_dtype))
+    parts = bucketed_reduce_parts(pool, boundaries, axes, wire_dtype,
+                                  algo=algo, accum_dtype=accum_dtype)
     if len(parts) == 1:
         return parts[0]
     return jnp.concatenate(parts)

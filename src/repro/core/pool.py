@@ -24,6 +24,7 @@ embedding → layers → head; backward generates head-first), plus metadata
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -41,6 +42,40 @@ class LeafSpec:
     dtype: Any
     size: int
     offset: int  # start offset in the pool, in elements
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolView:
+    """Bucket-aligned view of a pool span: the segment-table rows whose
+    tensors live entirely inside ``[start, end)``, with offsets rebased to
+    the span start.
+
+    This is the update-side contract of the overlap engine
+    (``repro.core.engine``): buckets close at tensor boundaries, so every
+    bucket maps to a *whole* run of segment-table rows plus (for the final
+    bucket) the pool's padding tail — which means the per-bucket optimizer
+    update can reuse the exact same kernels as the whole-pool path, just
+    with the view's sub-table (the streaming ``TilePlan`` restricted to
+    the bucket span falls out of ``tiling.tile_schedule`` on the
+    sub-table).
+    """
+
+    start: int                      # span bounds in pool elements
+    end: int
+    leaf_lo: int                    # segment-table row range [lo, hi)
+    leaf_hi: int
+    specs: Tuple["LeafSpec", ...]   # the rows themselves (absolute offsets)
+    offsets: Tuple[int, ...]        # rebased to ``start``
+    sizes: Tuple[int, ...]
+    padding: int                    # trailing pool-padding elems in span
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+    @property
+    def num_tensors(self) -> int:
+        return self.leaf_hi - self.leaf_lo
 
 
 def _leaf_name(path) -> str:
@@ -228,6 +263,44 @@ class GradientPool:
         if start < self.size:
             bounds.append((start, self.size))
         return bounds
+
+    # -- bucket-aligned views (overlap engine) ------------------------------
+
+    def leaf_range(self, start: int, end: int) -> Tuple[int, int]:
+        """Segment-table row range [lo, hi) of the tensors fully inside
+        ``[start, end)``. Requires tensor-aligned bounds: ``start`` must be
+        a tensor offset (or the padding tail) and ``end`` a tensor end (or
+        the pool end) — exactly what ``bucket_boundaries`` produces.
+        Bisects the precomputed ``offsets`` table: O(log tensors) per
+        bucket, so compiling a StepPlan stays linear in bucket count."""
+        assert 0 <= start <= end <= self.size, (start, end, self.size)
+        lo = bisect.bisect_left(self.offsets, start)
+        if lo == len(self.offsets) or self.offsets[lo] != start:
+            assert start >= self.unpadded_size, (
+                f"bucket start {start} is not a tensor boundary")
+            lo = len(self.specs)
+        # leaves [lo, hi) are those starting before ``end``; the last one
+        # must also END by ``end`` for the bucket to be tensor-aligned.
+        hi = bisect.bisect_left(self.offsets, end, lo)
+        if hi > lo:
+            last = self.specs[hi - 1]
+            assert last.offset + last.size <= end, (
+                f"bucket end {end} is not a tensor boundary")
+        return lo, hi
+
+    def bucket_view(self, start: int, end: int) -> PoolView:
+        """Bucket-aligned segment-table view of ``[start, end)`` — the
+        per-bucket update range of the overlap engine. Offsets come back
+        rebased to ``start`` so the view's sub-table drives the same
+        unpack/update kernels as the whole-pool table."""
+        lo, hi = self.leaf_range(start, end)
+        specs = self.specs[lo:hi]
+        covered = (specs[-1].offset + specs[-1].size) if specs else start
+        return PoolView(
+            start=start, end=end, leaf_lo=lo, leaf_hi=hi, specs=specs,
+            offsets=tuple(s.offset - start for s in specs),
+            sizes=tuple(s.size for s in specs),
+            padding=end - covered)
 
     # -- per-tensor segments (LARS etc.) -----------------------------------
 

@@ -8,6 +8,7 @@ per stage. After warm-up a single steady-state executable runs.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import List
 
@@ -48,10 +49,24 @@ def num_selected_chunks(sparsity: float, num_chunks: int) -> int:
     return min(max(k, 1), num_chunks)
 
 
-def stage_at(stages: List[SparsityStage], step: int) -> SparsityStage:
-    """The stage active at ``step`` (host-side; selects the executable)."""
-    active = stages[0]
-    for s in stages:
-        if step >= s.first_step:
-            active = s
-    return active
+def stage_first_steps(stages: List[SparsityStage]) -> tuple:
+    """The bisect keys for ``stage_at``: build ONCE per stage list and
+    pass to every lookup (GradientFlow caches this at construction) —
+    otherwise the key-list build costs the same O(stages) per call the
+    bisect was meant to remove."""
+    return tuple(s.first_step for s in stages)
+
+
+def stage_at(stages: List[SparsityStage], step: int,
+             first_steps: tuple = None) -> SparsityStage:
+    """The stage active at ``step`` (host-side; selects the executable).
+
+    ``build_stages`` emits ``first_step`` in nondecreasing order, so the
+    active stage is the rightmost one whose ``first_step <= step`` — a
+    ``bisect`` over the keys. Hot loops pass the precomputed
+    ``first_steps`` (see ``stage_first_steps``) for O(log stages) per
+    lookup; without it the key list is rebuilt per call."""
+    firsts = first_steps if first_steps is not None \
+        else stage_first_steps(stages)
+    i = bisect.bisect_right(firsts, step) - 1
+    return stages[max(i, 0)]

@@ -10,11 +10,17 @@ the production mesh (single-pod 16x16 = 256 chips, and multi-pod 2x16x16 =
 collective bytes out of the compiled HLO, and dump a JSON record that the
 roofline benchmark (benchmarks/roofline.py) consumes.
 
+``--timeline`` renders the overlap engine's simulated compute/comm
+timeline (per-bucket comm/update start+end, per-bucket exposed comm,
+overlap efficiency) for the paper's AlexNet-class workload on Cluster-V —
+the Fig-style overlap story from one command, no compile needed.
+
 Usage:
   python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
   python -m repro.launch.dryrun --arch all                 # every cell
   python -m repro.launch.dryrun ... --multi-pod            # 2x16x16 mesh
   python -m repro.launch.dryrun ... --opt                  # optimized profile
+  python -m repro.launch.dryrun --timeline                 # overlap table
 """
 import argparse
 import json
@@ -187,6 +193,40 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     return record
 
 
+def print_timeline(mode: str = "lazy", bucket_elems: int = 0,
+                   nodes: int = 64, gpus: int = 8,
+                   wire_dtype: str = "float16") -> None:
+    """Simulate + print the overlap engine's StepPlan timeline for the
+    AlexNet-class pool on the paper's Cluster-V (pure cost model, no
+    devices): per-bucket comm/update start+end, exposed comm, and the
+    overlap-efficiency summary. ``bucket_elems=0`` auto-tunes θ against
+    the staged pipeline (the production default)."""
+    from repro.configs.shapes import ALEXNET_GRAD_SHAPES
+    from repro.core import engine
+    from repro.core.gradientflow import GradientFlow
+    from repro.core.pool import GradientPool
+    from repro.parallel.topology import Topology
+
+    topo = Topology.cluster_v(nodes=nodes, gpus_per_node=gpus)
+    params = {f"t{i}": jax.ShapeDtypeStruct(s, jnp.float32)
+              for i, s in enumerate(ALEXNET_GRAD_SHAPES)}
+    chunk = 32768  # paper's CSC chunk granularity
+    pool = GradientPool(params, pad_to=chunk if mode == "csc" else 1)
+    gf_cfg = GradientFlowConfig(
+        mode=mode, wire_dtype=wire_dtype, warmup_steps=0,
+        chunk_elems=chunk, sparsity=0.85,
+        bucket_elems=bucket_elems or 16 * 1024 * 1024,
+        auto_bucket=bucket_elems == 0, topology=topo,
+        reduce_axes=("node", "gpu"), collective_algo="auto")
+    gf = GradientFlow(gf_cfg, pool, num_data_shards=topo.num_devices)
+    plan = gf.plan()
+    plan.validate()
+    print(f"[timeline] AlexNet-class pool ({pool.size} grads) on "
+          f"Cluster-V {nodes}x{gpus}, mode={mode}, "
+          f"theta={gf.bucket_elems} elems")
+    print(engine.render_timeline(plan, topo))
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="all",
@@ -196,8 +236,21 @@ def main():
     p.add_argument("--both-meshes", action="store_true")
     p.add_argument("--opt", action="store_true",
                    help="optimized (beyond-paper) profile")
+    p.add_argument("--timeline", action="store_true",
+                   help="print the overlap engine's simulated "
+                        "compute/comm timeline for the AlexNet-class "
+                        "workload on Cluster-V (no compile)")
+    p.add_argument("--timeline-mode", default="lazy",
+                   choices=["dense", "lazy", "csc"])
+    p.add_argument("--timeline-theta", type=int, default=0,
+                   help="bucket elems for the timeline (0 = auto-tune)")
     p.add_argument("--out", default=None)
     args = p.parse_args()
+
+    if args.timeline:
+        print_timeline(mode=args.timeline_mode,
+                       bucket_elems=args.timeline_theta)
+        return
 
     archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

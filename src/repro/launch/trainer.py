@@ -4,19 +4,35 @@ train / serve steps over the production mesh.
 Distribution architecture (see DESIGN.md §3.1):
 
   jit
-  └─ shard_map  — MANUAL over data axes ('pod','data'); AUTO over 'model'
-     ├─ params are pcast-to-varying so jax.grad yields *per-data-shard,
-     │  unsummed* gradients — the DP reduction belongs to GradientFlow,
-     │  not to implicit autodiff collectives (the paper's whole point)
-     ├─ fwd/bwd: model code with with_sharding_constraint TP/EP/SP over
-     │  'model' (GSPMD inserts those collectives)
-     └─ nested shard_map — MANUAL over 'model' too (fully manual)
-        └─ reduce+update in *local pool space*: each model shard ravels its
-           own parameter slices into a contiguous pool (zero gather),
-           GradientFlow reduces it across the data axes (lazy allreduce /
-           CSC), and the pool-space optimizer updates the f32 master —
-           optimizer + GradientFlow state is thereby sharded over the
-           model axis (ZeRO-style) for free.
+  ├─ fwd/bwd shard_map — MANUAL over data axes ('pod','data'); AUTO over
+  │  'model':
+  │    params are pcast-to-varying so jax.grad yields *per-data-shard,
+  │    unsummed* gradients — the DP reduction belongs to GradientFlow,
+  │    not to implicit autodiff collectives (the paper's whole point);
+  │    model code uses with_sharding_constraint TP/EP/SP over 'model'
+  │    (GSPMD inserts those collectives). Gradients exit STACKED along a
+  │    leading data axis (each shard holds its own row — a relabeling,
+  │    not a transfer).
+  └─ update shard_map — fully MANUAL over data AND model axes (a SIBLING
+     region, not a nested one):
+       reduce+update in *local pool space*: each model shard ravels its
+       own parameter slices into a contiguous pool (zero gather), the
+       overlap engine (repro.core.engine) runs the per-bucket staged
+       pipeline — bucket i's collective across the data axes issued while
+       bucket i-1's fused optimizer update runs — and the pool-space
+       optimizer updates the f32 master; optimizer + GradientFlow state
+       is thereby sharded over the model axis (ZeRO-style) for free.
+
+The sibling-region split (previously the update ran in a shard_map NESTED
+inside the fwd/bwd region) is what makes the data-axis collectives legal
+on jax<0.5: the legacy shard_map partitioner rejects any all-reduce over
+outer-manual axes issued from inside a nested manual subgroup ("Manual
+all-reduce across devices that belong to different manual subgroups"),
+and all-gather/ppermute over those axes hard-crash its SPMD partitioner.
+In one flat manual region over (data..., model) the same psums/ppermutes
+are the ordinary subgroup case both jax generations accept — which
+un-xfails the two nested-manual trainer tests (see tests/
+test_distributed.py history).
 
 The reduce step dispatches on ``GradientFlowConfig.collective_algo``
 through the topology registry: ``flat``/``two_level``/``tree`` bottom out
@@ -24,11 +40,13 @@ in psum flavors, while ``pallas_ring`` runs this repo's own 2(N-1)-step
 ring (kernels/ring_reduce.py on TPU, the ppermute twin on CPU) inside the
 same manual region — no trainer-side plumbing beyond the config string
 (tests/test_ring_reduce.py trains end-to-end with it).
+``GradientFlowConfig.overlap`` selects staged (per-bucket pipeline,
+default) vs monolithic (the old barrier chain) execution of the update
+region; both are numerically equivalent (tests/test_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -96,6 +114,9 @@ class Trainer:
         self.gf_cfg = gf_cfg
         self.opt_name = cfg.optimizer.name
         self.lars = LARSScaler(self.pool) if self.opt_name == "lars" else None
+        from repro.core.engine import OverlapEngine
+        self.engine = OverlapEngine(self.gf, self.opt_name, cfg.optimizer,
+                                    lars=self.lars)
 
         self.global_pool = self.pool.size * self.model_size
         self.num_chunks_global = self.gf.num_chunks * self.model_size
@@ -200,24 +221,40 @@ class Trainer:
 
     # -- the train step ---------------------------------------------------
 
-    def _inner_update(self, grads, params, opt, gfstate, lr, stage):
-        """Runs fully manual (data+model). Everything here is local.
-        gfstate.hg arrives as this data shard's (1, local_pool) row.
+    @property
+    def _pack_dtype(self):
+        """Pool dtype of the grad handoff: dense/lazy pack straight to the
+        wire dtype (the reduce then skips its per-bucket cast); CSC packs
+        to f32 because hg accumulation precedes the wire cast."""
+        prepacked = self.gf_cfg.mode in ("dense", "lazy")
+        return jnp.dtype(self.gf_cfg.wire_dtype) if prepacked \
+            else jnp.float32
 
-        Single-pass pool pipeline: gradients stay in pool form end-to-end
-        across pack → reduce → update. Dense/lazy modes pack straight to
-        the wire dtype (the reduce then skips its per-bucket cast); CSC
-        packs to f32 because hg accumulation precedes the wire cast. The
-        update side is the fused unpack: the optimizer reads pool segments
-        and emits the updated parameter pytree directly — no gradient
-        pytree and no intermediate new-master pool on the way out.
+    def _inner_update(self, gpool, params, opt, gfstate, lr, stage):
+        """Runs fully manual (data+model), as the SIBLING region of the
+        fwd/bwd shard_map. Everything here is local; ``gpool`` arrives
+        already packed (the fwd region ravels grads into the local pool
+        before the handoff) and gfstate.hg as this data shard's
+        (1, local_pool) row.
+
+        ``overlap='staged'`` (default) routes through the overlap engine:
+        the StepPlan compiled from GradientFlow's bucket layout executes
+        software-pipelined, bucket i's collective issued while bucket
+        i-1's fused update runs. ``'monolithic'`` keeps the barrier chain
+        below — reduce every bucket, then one fused update+unpack of the
+        whole pool. Both paths bottom out in the same per-bucket
+        primitives and are numerically equivalent (tests/test_engine.py).
         """
         cfg = self.gf_cfg
-        prepacked = cfg.mode in ("dense", "lazy")
-        pack_dtype = jnp.dtype(cfg.wire_dtype) if prepacked else jnp.float32
-        gpool, _ = self.pool.pack(grads, dtype=pack_dtype,
-                                  use_kernels=cfg.use_kernels)
         gf_local = GFState(hg=gfstate.hg[0], chunk_norms=gfstate.chunk_norms)
+        if cfg.overlap == "staged":
+            plan = self.engine.plan_for(stage)
+            new_params, opt2, gf2 = self.engine.run(
+                plan, gpool, params, opt, gf_local, lr)
+            return new_params, opt2, GFState(hg=gf2.hg[None],
+                                             chunk_norms=gf2.chunk_norms)
+        assert cfg.overlap == "monolithic", cfg.overlap
+        prepacked = cfg.mode in ("dense", "lazy")
         reduced, mask, gf2 = self.gf.reduce(gpool, gf_local, stage=stage,
                                             prepacked=prepacked)
         master, _ = self.pool.pack(params, dtype=jnp.float32,
@@ -239,6 +276,12 @@ class Trainer:
         gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms)
         return new_params, opt2, gf2
 
+    def _update_axes(self) -> set:
+        axes = set(self.data_axes)
+        if "model" in self.mesh.axis_names:
+            axes.add("model")
+        return axes
+
     def build_train_step(self, stage: Optional[SparsityStage] = None,
                          donate: bool = True):
         cfg = self.cfg
@@ -251,17 +294,30 @@ class Trainer:
         opt_specs = jax.tree_util.tree_map(lambda _: pool_spec,
                                            opt_abstract_state(self.opt_name,
                                                               1))
-        # Inner-shard_map specs (model axis only): hg's leading data dim is
-        # already local (size 1) inside the outer manual region.
+        # Update-region specs: hg keeps its leading per-data-shard dim
+        # (size 1 per shard once the data axes split it).
+        data_lead = (self.data_axes if len(self.data_axes) > 1 else
+                     self.data_axes[0]) if self.data_axes else None
         if self.gf_cfg.csc_enabled:
-            gf_specs = GFState(hg=P(None, "model") if self.model_size > 1
-                               else P(None, None), chunk_norms=pool_spec)
+            gf_specs = GFState(hg=P(data_lead, "model")
+                               if self.model_size > 1
+                               else P(data_lead, None),
+                               chunk_norms=pool_spec)
         else:
             gf_specs = GFState(hg=P(None, None), chunk_norms=P(None))
 
-        def outer(state: TrainState, batch):
+        def pack_local(grads):
+            """Grad pytree → local 1-D pool (runs where leaf shapes are
+            local: directly in the fwd region when model is unsharded,
+            else inside the nested pack shard_map below — pure local
+            compute, no collectives, so both jax generations accept it)."""
+            gpool, _ = self.pool.pack(grads, dtype=self._pack_dtype,
+                                      use_kernels=self.gf_cfg.use_kernels)
+            return gpool
+
+        def fwd_bwd(params, batch):
             params_v = jax.tree_util.tree_map(
-                lambda x: _pvary(x, self.data_axes), state.params)
+                lambda x: _pvary(x, self.data_axes), params)
 
             def loss_fn(p):
                 cp = jax.tree_util.tree_map(
@@ -280,35 +336,27 @@ class Trainer:
             if self.data_axes:
                 metrics = jax.tree_util.tree_map(
                     lambda m: jax.lax.pmean(m, self.data_axes), metrics)
-
-            lr = lr_at(cfg.optimizer, state.step)
-            update = functools.partial(self._inner_update, stage=stage)
+            # Hand off grads to the sibling update region in POOL form:
+            # the pack runs here (model-local space), so no scanned-layer
+            # gradient ever crosses the region boundary — only a flat 1-D
+            # pool, stacked along a leading data dim (each shard keeps
+            # holding exactly its own row; a relabeling, not a transfer).
             if self.model_size > 1:
-                # check_vma=False: model-replicated params flow through the
-                # (model-sharded) pool, so the static checker tags their
-                # updates as possibly model-varying. They are not: their
-                # grads arrive model-invariant (GSPMD all-reduces them in
-                # the auto region) and the update is deterministic, so all
-                # model shards compute identical values (tested).
-                new_params, opt2, gf2 = compat_shard_map(
-                    update, legacy_mesh=self.mesh,
-                    in_specs=(self.param_pspecs, self.param_pspecs,
-                              opt_specs, gf_specs, P()),
-                    out_specs=(self.param_pspecs, opt_specs, gf_specs),
-                    axis_names={"model"}, check_vma=False,
-                )(grads, state.params, state.opt, state.gf, lr)
+                gpool = compat_shard_map(
+                    pack_local, legacy_mesh=self.mesh,
+                    in_specs=(self.param_pspecs,), out_specs=pool_spec,
+                    axis_names={"model"}, check_vma=False)(grads)
             else:
-                new_params, opt2, gf2 = update(grads, state.params,
-                                               state.opt, state.gf, lr)
-            return TrainState(params=new_params, opt=opt2, gf=gf2,
-                              step=state.step + 1), metrics
+                gpool = pack_local(grads)
+            if self.data_axes:
+                gpool = gpool[None]
+            return gpool, metrics
 
-        abstract = self.abstract_state()
-        state_in = jax.tree_util.tree_map(lambda _: P(), abstract)
-        if self.gf_cfg.csc_enabled and self.data_axes:
-            # hg: one row per data shard, split over the data axes.
-            state_in = state_in._replace(gf=state_in.gf._replace(
-                hg=P(self.data_axes)))
+        def update_body(gpool_st, params, opt, gfstate, lr):
+            gpool = gpool_st[0] if self.data_axes else gpool_st
+            return self._inner_update(gpool, params, opt, gfstate, lr,
+                                      stage)
+
         # The jit-level batch is GLOBAL; in_specs split dim 0 over the data
         # axes so each shard sees its per-shard slice.
         global_batch_tree = model_input_specs(
@@ -317,12 +365,48 @@ class Trainer:
                                    kind="train"), cfg.global_batch)
         batch_in = self.batch_pspec(global_batch_tree)
         metrics_out = {"loss": P(), "aux_loss": P()}
+        params_in = jax.tree_util.tree_map(
+            lambda _: P(), self.param_pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        # fwd/bwd region specs may only mention ITS manual axes (data):
+        # the pool exits split over the leading data dim, its model-dim
+        # layout left to GSPMD (the region is auto over model). The
+        # update region re-declares it with the model split explicit
+        # (model is manual there).
+        if self.data_axes:
+            pool_out_spec = P(data_lead)
+            pool_in_spec = P(data_lead, "model") if self.model_size > 1 \
+                else P(data_lead, None)
+        else:
+            pool_out_spec = P()
+            pool_in_spec = pool_spec
 
-        sm = compat_shard_map(outer, mesh=self.mesh,
-                              in_specs=(state_in, batch_in),
-                              out_specs=(state_in, metrics_out),
-                              axis_names=manual_axes)
-        return jax.jit(sm, donate_argnums=(0,) if donate else ())
+        sm_fwd = compat_shard_map(
+            fwd_bwd, mesh=self.mesh, in_specs=(params_in, batch_in),
+            out_specs=(pool_out_spec, metrics_out),
+            axis_names=manual_axes)
+        # check_vma=False: model-replicated params flow through the
+        # (model-sharded) pool, so the static checker tags their updates
+        # as possibly model-varying. They are not: their grads arrive
+        # model-invariant (GSPMD all-reduces them in the auto region) and
+        # the update is deterministic, so all model shards compute
+        # identical values (tested).
+        sm_update = compat_shard_map(
+            update_body, mesh=self.mesh,
+            in_specs=(pool_in_spec, self.param_pspecs, opt_specs,
+                      gf_specs, P()),
+            out_specs=(self.param_pspecs, opt_specs, gf_specs),
+            axis_names=self._update_axes(), check_vma=False)
+
+        def step(state: TrainState, batch):
+            gpool_st, metrics = sm_fwd(state.params, batch)
+            lr = lr_at(cfg.optimizer, state.step)
+            new_params, opt2, gf2 = sm_update(gpool_st, state.params,
+                                              state.opt, state.gf, lr)
+            return TrainState(params=new_params, opt=opt2, gf=gf2,
+                              step=state.step + 1), metrics
+
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
 
     def _accumulate(self, loss_fn, params_v, batch):
         """Gradient accumulation over microbatches (scan); grads in f32."""

@@ -33,26 +33,51 @@ class LARSScaler:
     def __init__(self, pool: GradientPool):
         self.pool = pool
 
-    def ratios(self, master: jax.Array, grads: jax.Array,
-               cfg: OptimizerConfig,
-               mask: Optional[jax.Array] = None) -> jax.Array:
-        """f32[num_tensors] trust ratios (plus a trailing 1.0 for the pool
-        padding when present), via static spans over the pool layout."""
-        g = grads if mask is None else jnp.where(mask, grads, 0.0)
+    @staticmethod
+    def _span_ratios(master: jax.Array, g: jax.Array, cfg: OptimizerConfig,
+                     offsets, sizes) -> list:
+        """One trust ratio per (offset, size) span of the given buffers —
+        the shared math of the whole-pool and bucket-view variants."""
         parts = []
-        for spec in self.pool.specs:
-            w_seg = jax.lax.slice_in_dim(master, spec.offset,
-                                         spec.offset + spec.size)
-            g_seg = jax.lax.slice_in_dim(g, spec.offset,
-                                         spec.offset + spec.size)
+        for off, size in zip(offsets, sizes):
+            w_seg = jax.lax.slice_in_dim(master, off, off + size)
+            g_seg = jax.lax.slice_in_dim(g, off, off + size)
             w_norm = jnp.sqrt(jnp.sum(jnp.square(w_seg)))
             g_norm = jnp.sqrt(jnp.sum(jnp.square(g_seg)))
             ratio = cfg.lars_eta * w_norm / (
                 g_norm + cfg.weight_decay * w_norm + cfg.lars_eps)
             parts.append(
                 jnp.where((w_norm > 0.0) & (g_norm > 0.0), ratio, 1.0))
+        return parts
+
+    def ratios(self, master: jax.Array, grads: jax.Array,
+               cfg: OptimizerConfig,
+               mask: Optional[jax.Array] = None) -> jax.Array:
+        """f32[num_tensors] trust ratios (plus a trailing 1.0 for the pool
+        padding when present), via static spans over the pool layout."""
+        g = grads if mask is None else jnp.where(mask, grads, 0.0)
+        parts = self._span_ratios(master, g, cfg, self.pool.offsets,
+                                  self.pool.sizes)
         if self.pool.padding:
             parts.append(jnp.ones((), master.dtype))
+        return jnp.stack(parts)
+
+    def ratios_view(self, view, master_seg: jax.Array, grads_seg: jax.Array,
+                    cfg: OptimizerConfig,
+                    mask_seg: Optional[jax.Array] = None) -> jax.Array:
+        """Per-bucket LARS: trust ratios for the tensors of one
+        ``GradientPool.bucket_view``, from span-RELATIVE master/grads
+        segments. Buckets close at tensor boundaries, so every tensor's
+        norms are complete inside its bucket — this is what lets the
+        overlap engine scale bucket i's update while bucket i+1's
+        collective is still in flight. No padding entry is emitted (the
+        segment update's ratio expansion pads with 1.0 itself)."""
+        g = grads_seg if mask_seg is None else jnp.where(mask_seg,
+                                                         grads_seg, 0.0)
+        parts = self._span_ratios(master_seg, g, cfg, view.offsets,
+                                  view.sizes)
+        if not parts:
+            return jnp.zeros((0,), jnp.float32)
         return jnp.stack(parts)
 
     def expand(self, ratios: jax.Array, dtype=jnp.float32) -> jax.Array:

@@ -105,3 +105,42 @@ def update_unpack(
     leaves = [x if x.dtype == spec.dtype else x.astype(spec.dtype)
               for x, spec in zip(leaves, pool.specs)]
     return pool.unflatten(leaves), SGDState(momentum=new_mom)
+
+
+def update_view(
+    view,                    # GradientPool.bucket_view segment sub-range
+    master: jax.Array,       # f32[view.size] master segment
+    grads: jax.Array,        # f32[view.size] mean-reduced segment
+    state: SGDState,         # momentum SEGMENT (f32[view.size])
+    mask: jax.Array,         # bool[view.size]
+    cfg: OptimizerConfig,
+    lr: jax.Array,
+    *,
+    scale: Optional[jax.Array] = None,
+    ratios: Optional[jax.Array] = None,  # f32[view.num_tensors]
+    use_kernels: bool = False,
+    tile_elems: int = 0,
+) -> Tuple[List[jax.Array], SGDState]:
+    """``update_unpack`` on one bucket-aligned segment sub-range: the
+    overlap engine's per-bucket update. The view's rebased segment table
+    drives the exact same kernels as the whole-pool path (the streaming
+    ``TilePlan`` is simply computed on the sub-table, i.e. restricted to
+    the bucket span), so pipelined and monolithic updates share one
+    implementation. ``ratios`` carries the view's per-tensor LARS vector.
+    Returns (1-D leaves in segment-table order, cast to their declared
+    param dtype, plus the updated momentum segment)."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+        leaves, new_mom = kops.update_unpack(
+            master, grads, state.momentum, mask, view.offsets, view.sizes,
+            lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay,
+            scale=scale, ratios=ratios, tile_elems=tile_elems)
+    else:
+        from repro.kernels import ref
+        leaves, new_mom = ref.pool_unpack_update(
+            master, grads, state.momentum, mask, view.offsets, view.sizes,
+            lr=lr, momentum=cfg.momentum, weight_decay=cfg.weight_decay,
+            scale=scale, ratios=ratios)
+    leaves = [x if x.dtype == spec.dtype else x.astype(spec.dtype)
+              for x, spec in zip(leaves, view.specs)]
+    return leaves, SGDState(momentum=new_mom)

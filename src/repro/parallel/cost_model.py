@@ -174,3 +174,106 @@ def bucket_release_times(bucket_bytes: Sequence[float],
         acc += b
         rel.append(backward_s * acc / total)
     return rel
+
+
+# -- staged (reduce_i ∥ update_{i-1}) pipeline timeline ----------------------
+#
+# The overlap engine (repro.core.engine) executes the train step as a
+# per-bucket software pipeline: bucket i's collective is issued while
+# bucket i-1's fused optimizer update runs. These functions are its
+# analytic mirror — the same two-engine model (one serial comm engine, one
+# serial update engine) the θ auto-tuner and the dryrun timeline use.
+
+# HBM bandwidth of the update engine (V100-class HBM2, the paper's
+# Cluster-V part) and the bytes the fused update moves per pool element:
+# read master+grads+momentum f32 + the mask byte, write master+momentum.
+HBM_BW = 900e9
+UPDATE_BYTES_PER_ELEM = 5 * 4 + 1
+
+
+def update_time(elems: float, hbm_bw: float = HBM_BW) -> float:
+    """Modeled wall time of the fused optimizer update on ``elems`` pool
+    elements: one read+write sweep of the pool-sized operands at HBM
+    bandwidth (the kernel is memory-bound by construction)."""
+    return elems * UPDATE_BYTES_PER_ELEM / hbm_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketTimeline:
+    """One bucket's simulated schedule inside the staged pipeline."""
+
+    index: int
+    release_s: float       # backward finishes producing this bucket
+    comm_start_s: float    # collective issued (serial comm engine)
+    comm_end_s: float
+    update_start_s: float  # fused update starts (serial update engine)
+    update_end_s: float
+
+    def exposed_comm_s(self, backward_s: float) -> float:
+        """The part of this bucket's collective that runs after backward
+        has fully finished — wire time nothing can hide anymore."""
+        return max(0.0, self.comm_end_s - max(backward_s,
+                                              self.comm_start_s))
+
+
+
+def staged_timeline(bucket_comm_s: Sequence[float],
+                    release_s: Sequence[float],
+                    bucket_update_s: Sequence[float],
+                    ) -> List[BucketTimeline]:
+    """Simulate the staged pipeline: a serial comm engine (one in-flight
+    collective, §3.1's model) chained into a serial update engine — bucket
+    i's update may start once its collective lands AND update i-1 retired.
+    Returns one row per bucket; the last row's ``update_end_s`` is the
+    step's finish time."""
+    rows: List[BucketTimeline] = []
+    comm_t = upd_t = 0.0
+    for i, (ct, rel, ut) in enumerate(zip(bucket_comm_s, release_s,
+                                          bucket_update_s)):
+        start = max(comm_t, rel)
+        comm_t = start + ct
+        u_start = max(comm_t, upd_t)
+        upd_t = u_start + ut
+        rows.append(BucketTimeline(index=i, release_s=rel,
+                                   comm_start_s=start, comm_end_s=comm_t,
+                                   update_start_s=u_start,
+                                   update_end_s=upd_t))
+    return rows
+
+
+def timeline_summary(rows: Sequence[BucketTimeline],
+                     backward_s: float) -> dict:
+    """Aggregate overlap metrics of a staged timeline.
+
+    ``exposed_comm_s`` is the comm time the step actually waits for —
+    finish of the last collective minus the backward it hid behind,
+    clamped at 0 (the same definition ``overlapped_finish_time`` documents)
+    — and ``overlap_efficiency`` the fraction of total wire time hidden
+    under backward compute."""
+    if not rows:
+        return {"finish_s": backward_s, "comm_busy_s": 0.0,
+                "update_busy_s": 0.0, "exposed_comm_s": 0.0,
+                "overlap_efficiency": 1.0}
+    comm_busy = sum(r.comm_end_s - r.comm_start_s for r in rows)
+    upd_busy = sum(r.update_end_s - r.update_start_s for r in rows)
+    comm_finish = rows[-1].comm_end_s
+    exposed = max(0.0, comm_finish - backward_s)
+    return {
+        "finish_s": rows[-1].update_end_s,
+        "comm_busy_s": comm_busy,
+        "update_busy_s": upd_busy,
+        "exposed_comm_s": exposed,
+        "overlap_efficiency": (1.0 - exposed / comm_busy) if comm_busy
+        else 1.0,
+    }
+
+
+def staged_finish_time(bucket_comm_s: Sequence[float],
+                       release_s: Sequence[float],
+                       bucket_update_s: Sequence[float]) -> float:
+    """Finish time of the staged pipeline (last bucket's update retires).
+    With all-zero update times this degenerates to
+    ``overlapped_finish_time`` — the comm-only model the θ tuner used
+    before the update engine existed."""
+    rows = staged_timeline(bucket_comm_s, release_s, bucket_update_s)
+    return rows[-1].update_end_s if rows else 0.0

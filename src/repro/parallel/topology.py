@@ -41,7 +41,8 @@ from repro.parallel.cost_model import (Fabric, HOST_LOOPBACK, INTRA_NODE,
                                        overlapped_finish_time,
                                        reduce_scatter_time,
                                        ring_allreduce_time,
-                                       sequential_ring_time)
+                                       sequential_ring_time,
+                                       staged_finish_time, update_time)
 
 
 # -- the topology model ------------------------------------------------------
@@ -345,6 +346,7 @@ def auto_bucket_boundaries(
     collective_algo: str = "auto",
     backward_s: Optional[float] = None,
     min_bucket_elems: int = 256 * 1024,
+    update_bw: Optional[float] = None,
 ) -> Tuple[int, List[Tuple[int, int]]]:
     """Pick the lazy-allreduce threshold θ for this pool and topology.
 
@@ -356,8 +358,16 @@ def auto_bucket_boundaries(
     (``collective_algo`` resolved exactly as GradientFlow resolves it, so
     a pinned 'flat' is tuned against flat-ring costs, not the auto pick),
     release buckets at the uniform backward rate, and keep the θ whose
-    last collective finishes earliest
-    (``cost_model.overlapped_finish_time``).
+    step finishes earliest.
+
+    ``update_bw`` (HBM bytes/s) switches the objective from comm-only
+    (``cost_model.overlapped_finish_time`` — the last collective lands)
+    to the overlap engine's full staged pipeline
+    (``cost_model.staged_finish_time`` — the last per-bucket fused update
+    retires, with updates overlapping in-flight collectives), so θ is
+    tuned against what the engine actually executes, not wire time alone.
+    GradientFlow passes ``cost_model.HBM_BW`` when the staged pipeline is
+    enabled; ``None`` keeps the comm-only objective.
 
     ``backward_s`` defaults to the flat-ring time of the whole pool — the
     paper's comm-bound regime where compute and wire are comparable.
@@ -379,8 +389,12 @@ def auto_bucket_boundaries(
         bounds = pool.bucket_boundaries(theta)
         sizes = [(e - s) * elt for s, e in bounds]
         times = [_bucket_time(b) for b in sizes]
-        finish = overlapped_finish_time(
-            times, bucket_release_times(sizes, backward_s))
+        rel = bucket_release_times(sizes, backward_s)
+        if update_bw is not None:
+            upd = [update_time(e - s, update_bw) for s, e in bounds]
+            finish = staged_finish_time(times, rel, upd)
+        else:
+            finish = overlapped_finish_time(times, rel)
         if finish < best_finish - 1e-12:
             best_theta, best_finish, best_bounds = theta, finish, bounds
     return best_theta, best_bounds

@@ -28,11 +28,14 @@ MODULE_RE = re.compile(r"\brepro(?:\.\w+)+\b")
 BASELINE_RE = re.compile(r"\bBENCH_\w+\.json\b")
 
 # CI gate surface that must be documented somewhere in README/docs: each
-# benchmark gate flag, its committed baseline file, and — for the ring
-# gate — the registered algorithm name and the bench fields it pins.
+# benchmark gate flag, its committed baseline file, the ring gate's
+# registered algorithm name and pinned bench fields, and the overlap
+# engine's IR/config/metric vocabulary.
 REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
                    "--kernel-check", "BENCH_kernels.json",
-                   "pallas_ring", "exchange_steps", "wire_bytes_per_step")
+                   "pallas_ring", "exchange_steps", "wire_bytes_per_step",
+                   "--overlap-check", "BENCH_overlap.json",
+                   "StepPlan", "overlap", "exposed-comm")
 
 
 def module_resolves(dotted: str) -> bool:
