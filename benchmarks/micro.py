@@ -594,6 +594,96 @@ def check_overlap_regression(baseline_path: str) -> int:
     return 1 if failures else 0
 
 
+# -- elastic soak gate (fault-injected churn + StepPlan replan) --------------
+
+
+def soak_bench() -> Dict:
+    """One deterministic run of the simulated elastic soak
+    (``repro.runtime.soak``): 64 hosts × 8 GPUs, seeded fault schedule
+    (hard failures, a persistent straggler, a preemption notice), the
+    supervisor checkpoint-resharding onto each proposed mesh and
+    ``GradientFlow.replan``-ing the StepPlan for the new topology.
+
+    The returned trace is integers + cost-model floats rounded to 9 dp —
+    machine-independent, so CI compares it verbatim against the committed
+    ``BENCH_soak.json``. Checkpoints go to a throwaway tempdir."""
+    import tempfile
+
+    # Lazy import keeps the bench module import-clean and device-free
+    # until the soak actually runs.
+    from repro.runtime.soak import SoakConfig, SoakHarness
+
+    with tempfile.TemporaryDirectory() as d:
+        trace = SoakHarness(SoakConfig(),
+                            os.path.join(d, "ckpt")).run()
+    trace["jax_version"] = jax.__version__
+    return trace
+
+
+def check_soak_regression(baseline_path: str) -> int:
+    """CI gate: re-run the seeded soak and fail (exit 1) if
+
+    * the run no longer completes (abort / restart-budget exhaustion),
+    * any event type goes missing (the schedule must keep exercising
+      straggler remesh AND preemption AND hard failure),
+    * any elastic event stops recompiling the StepPlan for the new
+      topology (plan_key unchanged, plan invalid, or the staged finish
+      losing to the monolithic barrier on the shrunken mesh), or
+    * the deterministic trace (events + final summary) drifts from the
+      committed BENCH_soak.json without a baseline refresh.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    cur = soak_bench()
+    failures = []
+    fin = cur["final"]
+    if fin["aborted"] is not None:
+        failures.append(f"soak aborted: {fin['aborted']}")
+    if fin["completed_steps"] != cur["config"]["num_steps"]:
+        failures.append(
+            f"soak completed {fin['completed_steps']} of "
+            f"{cur['config']['num_steps']} steps")
+    required_kinds = {"straggler_remesh", "preemption", "hard_failure"}
+    missing = required_kinds - set(fin["event_kinds"])
+    if missing:
+        failures.append(f"event kinds missing from the soak: "
+                        f"{sorted(missing)} (have {fin['event_kinds']})")
+    elastic = [e for e in cur["events"] if e.get("mesh_changed")]
+    if not elastic:
+        failures.append("no elastic event changed the mesh")
+    for e in elastic:
+        where = f"{e['kind']} @ step {e['step']}"
+        if not e.get("replanned") or not e.get("plan_valid"):
+            failures.append(f"{where}: StepPlan not recompiled/validated "
+                            "for the new topology")
+        if e.get("plan_key_after") == e.get("plan_key_before"):
+            failures.append(f"{where}: plan cache key unchanged across "
+                            "the remesh")
+        if not e.get("staged_beats_monolithic"):
+            failures.append(
+                f"{where}: staged finish {e['predicted_step_after_s']} "
+                f"lost to monolithic {e['monolithic_after_s']} on the "
+                "shrunken mesh")
+    # The trace is pure-python control flow + cost-model arithmetic —
+    # machine independent — so any drift means the schedule, the
+    # controller, or the model changed and the committed baseline must be
+    # refreshed alongside.
+    for section in ("config", "schedule", "events", "final"):
+        if cur[section] != base.get(section):
+            failures.append(
+                f"soak trace section {section!r} drifted from baseline "
+                "(refresh BENCH_soak.json if intentional): "
+                f"{cur[section]} != {base.get(section)}")
+    for msg in failures:
+        print(f"SOAK BENCH REGRESSION: {msg}")
+    if not failures:
+        print(f"soak bench OK: {fin['completed_steps']} steps, "
+              f"{fin['elastic_events']} elastic events "
+              f"({fin['event_kinds']}), {fin['restarts_consumed']} "
+              f"restarts, final plan {fin['final_plan_key']}")
+    return 1 if failures else 0
+
+
 # Peak VMEM the streaming kernels may claim per pallas_call — well under
 # the ~16MiB/core budget so double buffering always has headroom.
 _KERNEL_VMEM_BUDGET = 8 * 1024 * 1024
@@ -750,6 +840,17 @@ def main() -> int:
                          "update_{i-1} completes) and compare the "
                          "cost-model timeline against the committed "
                          "BENCH_overlap.json; exit 1 on regression")
+    ap.add_argument("--soak-json", metavar="PATH",
+                    help="run the simulated elastic soak (seeded fault "
+                         "schedule + StepPlan replan) and write the "
+                         "baseline trace JSON")
+    ap.add_argument("--soak-check", action="store_true",
+                    help="soak gate: re-run the seeded soak and assert "
+                         "every elastic event recompiled the StepPlan "
+                         "for the new topology, all three event types "
+                         "fired, and the deterministic trace matches the "
+                         "committed BENCH_soak.json; exit 1 on "
+                         "regression")
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     if args.pool_check:
@@ -760,6 +861,16 @@ def main() -> int:
     if args.overlap_check:
         return check_overlap_regression(
             os.path.join(root, "BENCH_overlap.json"))
+    if args.soak_check:
+        return check_soak_regression(
+            os.path.join(root, "BENCH_soak.json"))
+    if args.soak_json:
+        res = soak_bench()
+        with open(args.soak_json, "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
+        print(json.dumps(res["final"], indent=2))
+        return 0
     if args.overlap_json:
         res = overlap_bench()
         with open(args.overlap_json, "w") as f:

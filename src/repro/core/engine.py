@@ -90,6 +90,11 @@ class StepPlan:
     warmup: bool = False                        # CSC dense warm-up stage
     num_selected: int = 0                       # CSC k (0 for dense/lazy)
     chunk_elems: int = 0
+    # The mesh-shape key the plan was compiled under
+    # (GradientFlow.plan_cache_key()). After an elastic event the soak
+    # harness asserts the active plan's key matches the NEW topology —
+    # i.e. nobody kept executing a plan compiled for the retired mesh.
+    plan_key: Tuple = ()
 
     @property
     def num_collectives(self) -> int:
@@ -123,7 +128,8 @@ def compile_step_plan(gf, stage: Optional[schedule_mod.SparsityStage] = None,
     pool = gf.pool
     common = dict(pool_size=pool.size, wire_dtype=str(cfg.wire_dtype),
                   reduce_axes=tuple(cfg.reduce_axes),
-                  num_data_shards=gf.num_data_shards)
+                  num_data_shards=gf.num_data_shards,
+                  plan_key=gf.plan_cache_key())
 
     def pool_tasks(bounds, algos):
         return tuple(BucketTask(index=i, start=s, end=e, algo=a,
@@ -194,7 +200,19 @@ class OverlapEngine:
         self.lars = lars
 
     def plan_for(self, stage=None) -> StepPlan:
-        return compile_step_plan(self.gf, stage)
+        # Routed through GradientFlow's plan cache (keyed on the mesh
+        # shape + stage), so repeated traces reuse the compiled plan and
+        # an elastic replan invalidates it.
+        return self.gf.plan(stage)
+
+    def replan(self, topology=None, *, num_data_shards=None,
+               reduce_axes=None) -> None:
+        """Recompile the backend's layout for a new topology (delegates to
+        ``GradientFlow.replan``): θ re-tuned, per-bucket algorithms
+        re-selected, plan cache invalidated. The next ``plan_for`` returns
+        a plan stamped with the new mesh-shape key."""
+        self.gf.replan(topology, num_data_shards=num_data_shards,
+                       reduce_axes=reduce_axes)
 
     # -- public entry point --------------------------------------------------
 

@@ -17,6 +17,7 @@ mixed-precision communication) and return an f32 mean-reduced pool.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -51,6 +52,15 @@ class GradientFlow:
             self.num_chunks = 0
         self.stages = schedule_mod.build_stages(cfg, max(self.num_chunks, 1))
         self._stage_firsts = schedule_mod.stage_first_steps(self.stages)
+        self._resolve_layout()
+
+    def _resolve_layout(self) -> None:
+        """Resolve the topology-dependent layout: bucket boundaries (θ
+        re-tuned when auto_bucket), per-bucket algorithms, and the plan
+        cache. Called at build time and again by ``replan`` — everything
+        that depends on the mesh shape must be derived here, nowhere
+        else."""
+        cfg, pool = self.cfg, self.pool
         # Static bucket layouts. θ comes from the config, or — when
         # auto_bucket is on and a topology is known — from the cost-model
         # tuner (docs/collectives.md).
@@ -70,9 +80,50 @@ class GradientFlow:
         else:
             self._lazy_bounds = tuple(
                 pool.bucket_boundaries(self.bucket_elems))
-        # Per-bucket collective algorithms, resolved once at build time.
+        # Per-bucket collective algorithms, resolved once per layout.
         self._dense_algos = self._algos_for(self._dense_bounds)
         self._lazy_algos = self._algos_for(self._lazy_bounds)
+        # Compiled StepPlans are layout-derived: drop them with the layout.
+        self._plan_cache: dict = {}
+
+    def plan_cache_key(self) -> Tuple:
+        """The mesh-shape key the plan cache (and every compiled StepPlan)
+        is stamped with. Any elastic event that changes the topology, the
+        data degree, or the tuned θ changes this key — the soak harness
+        asserts exactly that after each remesh."""
+        topo = self.cfg.topology
+        topo_key = tuple((lv.axis, lv.size) for lv in topo.levels) \
+            if topo is not None else None
+        return (self.cfg.mode, self.cfg.collective_algo,
+                str(self.cfg.wire_dtype), self.num_data_shards,
+                self.bucket_elems, topo_key)
+
+    def replan(self, topology: Optional[topo_mod.Topology] = None, *,
+               num_data_shards: Optional[int] = None,
+               reduce_axes: Optional[Tuple[str, ...]] = None
+               ) -> "GradientFlow":
+        """Recompile the collective layout for a new mesh (elastic event).
+
+        Swaps the (frozen) config's topology / reduce_axes, updates the
+        data degree, and re-resolves everything layout-derived: θ is
+        re-tuned, per-bucket algorithms re-selected, and the StepPlan
+        cache invalidated — the next ``plan()`` compiles for the new
+        topology. ``reduce_axes`` defaults to the new topology's axes
+        (pure-simulation callers); execution callers (Trainer) pass the
+        live mesh axis names explicitly. Returns self for chaining."""
+        cfg = self.cfg
+        if topology is not None:
+            if reduce_axes is None:
+                reduce_axes = topology.axes
+            cfg = dataclasses.replace(cfg, topology=topology,
+                                      reduce_axes=tuple(reduce_axes))
+        elif reduce_axes is not None:
+            cfg = dataclasses.replace(cfg, reduce_axes=tuple(reduce_axes))
+        self.cfg = cfg
+        if num_data_shards is not None:
+            self.num_data_shards = int(num_data_shards)
+        self._resolve_layout()
+        return self
 
     def _algos_for(self, bounds) -> tuple:
         """One ReduceAlgorithm per bucket (auto-selected by byte size).
@@ -121,9 +172,21 @@ class GradientFlow:
         ``StepPlan`` IR (``repro.core.engine``): one ``BucketTask`` per
         collective plus the tensor-aligned update spans. The plan reuses
         the exact bounds/algorithms ``reduce`` executes monolithically —
-        same layout, explicit structure."""
-        from repro.core import engine
-        return engine.compile_step_plan(self, stage)
+        same layout, explicit structure.
+
+        Plans are cached per (mesh-shape key, stage); ``replan`` clears
+        the cache, so a plan compiled for a retired topology can never be
+        served after an elastic event."""
+        # Keyed on the full (frozen) stage, not stage.index: synthetic
+        # stages (e.g. the dense warm-up twin) share an index with real
+        # schedule entries but compile to a different plan.
+        key = (self.plan_cache_key(), stage)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            from repro.core import engine
+            plan = engine.compile_step_plan(self, stage)
+            self._plan_cache[key] = plan
+        return plan
 
     # -- the reduction -----------------------------------------------------
 

@@ -21,6 +21,7 @@ Usage:
   python -m repro.launch.dryrun ... --multi-pod            # 2x16x16 mesh
   python -m repro.launch.dryrun ... --opt                  # optimized profile
   python -m repro.launch.dryrun --timeline                 # overlap table
+  python -m repro.launch.dryrun --soak                     # elastic soak
 """
 import argparse
 import json
@@ -227,6 +228,23 @@ def print_timeline(mode: str = "lazy", bucket_elems: int = 0,
     print(engine.render_timeline(plan, topo))
 
 
+def print_soak(num_steps: int = 300, seed: int = 0) -> None:
+    """Run the simulated elastic soak (repro.runtime.soak) and print the
+    per-event table: fault schedule → checkpoint → reshard →
+    GradientFlow.replan, with predicted step time before/after each
+    elastic event. Pure control-plane + cost model — no devices, no
+    compile; the CI-gated twin is ``benchmarks/micro.py --soak-check``."""
+    import dataclasses
+    import tempfile
+
+    from repro.runtime.soak import SoakConfig, SoakHarness, render_trace
+
+    cfg = dataclasses.replace(SoakConfig(), num_steps=num_steps, seed=seed)
+    with tempfile.TemporaryDirectory() as d:
+        trace = SoakHarness(cfg, os.path.join(d, "ckpt")).run()
+    print(render_trace(trace))
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="all",
@@ -244,9 +262,18 @@ def main():
                    choices=["dense", "lazy", "csc"])
     p.add_argument("--timeline-theta", type=int, default=0,
                    help="bucket elems for the timeline (0 = auto-tune)")
+    p.add_argument("--soak", action="store_true",
+                   help="run the simulated elastic soak (fault-injected "
+                        "512-way churn with StepPlan replan) and print "
+                        "the per-event table (no compile)")
+    p.add_argument("--soak-steps", type=int, default=300)
+    p.add_argument("--soak-seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args()
 
+    if args.soak:
+        print_soak(num_steps=args.soak_steps, seed=args.soak_seed)
+        return
     if args.timeline:
         print_timeline(mode=args.timeline_mode,
                        bucket_elems=args.timeline_theta)

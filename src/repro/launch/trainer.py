@@ -125,6 +125,43 @@ class Trainer:
         self.param_shardings = sh.param_shardings(self.specs, mesh,
                                                   self.rules)
 
+    # -- elastic replan -------------------------------------------------------
+
+    def replan(self, mesh: Optional[Mesh] = None, topology=None) -> None:
+        """Recompile the collective layer after an elastic event.
+
+        An elastic remesh keeps the model axis fixed (per-layer sharding
+        and the local pool are unchanged) but changes the data degree and
+        the fabric levels — everything θ tuning, per-bucket algorithm
+        selection, and the staged timeline were priced against. This
+        re-derives the data axes / degree / topology from the new mesh
+        (or takes an explicit ``topology``) and routes through
+        ``OverlapEngine.replan`` → ``GradientFlow.replan``, invalidating
+        the StepPlan cache. Callers must rebuild their jitted step
+        (``build_train_step``) afterwards — the old trace embeds the old
+        plan."""
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            assert sizes.get("model", 1) == self.model_size, (
+                "elastic events keep the model-parallel degree fixed",
+                sizes, self.model_size)
+            self.mesh = mesh
+            self.data_axes = tuple(a for a in mesh.axis_names
+                                   if a in ("pod", "data"))
+            self.num_data = int(np.prod([sizes[a]
+                                         for a in self.data_axes])) \
+                if self.data_axes else 1
+            if topology is None and self.data_axes:
+                from repro.launch.mesh import mesh_topology
+                topology = mesh_topology(mesh, self.data_axes)
+            self.param_shardings = sh.param_shardings(self.specs, mesh,
+                                                      self.rules)
+        # reduce_axes stay the LIVE mesh axis names (execution), even when
+        # the topology models different level names (simulation).
+        self.engine.replan(topology, num_data_shards=self.num_data,
+                           reduce_axes=self.data_axes)
+        self.gf_cfg = self.gf.cfg
+
     # -- state construction ---------------------------------------------------
 
     def _pool_sharding(self) -> NamedSharding:

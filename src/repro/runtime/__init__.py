@@ -2,3 +2,6 @@ from repro.runtime.elastic import ElasticController, candidates_for
 from repro.runtime.fault_tolerance import (Preempted, SupervisorConfig,
                                            TrainSupervisor)
 from repro.runtime.stragglers import StragglerDetector, StragglerReport
+from repro.runtime.soak import (RemeshSignal, SoakConfig, SoakEvent,
+                                SoakHarness, default_schedule,
+                                render_trace)

@@ -50,7 +50,14 @@ class ElasticController:
                 ) -> Optional[MeshCandidate]:
         """Largest mesh that (a) fits the healthy devices, (b) keeps TP
         degree, (c) divides the global batch."""
-        cand = candidates_for(healthy_devices, self.model_parallel, pods)
+        # Healthy-device counts arrive raw (e.g. 250 after evictions) and
+        # rarely divide model_parallel*pods exactly; a mesh only needs to
+        # FIT, so round down to the largest usable multiple before the
+        # step-down search. Without this, propose(250, mp=16) returned
+        # None even though a viable 240-device mesh exists.
+        unit = self.model_parallel * pods
+        cand = candidates_for((healthy_devices // unit) * unit,
+                              self.model_parallel, pods)
         while cand is not None:
             data_total = cand.num_devices // self.model_parallel
             if self.global_batch % data_total == 0:

@@ -44,6 +44,12 @@ class TrainSupervisor:
         """Hook for SIGTERM / maintenance-event handlers."""
         self._preempt = True
 
+    def clear_preemption(self):
+        """Acknowledge a handled preemption (notice consumed, the host
+        evicted/replaced) so a subsequent ``run`` doesn't immediately
+        re-raise. The elastic soak loop calls this after resharding."""
+        self._preempt = False
+
     def run(
         self,
         state: Any,
@@ -57,6 +63,10 @@ class TrainSupervisor:
         final state. ``fault_injector`` raising at a step simulates a node
         failure (tests use this to exercise the restart path)."""
         step = start_step
+        # Snapshot for faults that land before any checkpoint exists: the
+        # loop variable ``state`` has already absorbed updates by then,
+        # and replaying on top of evolved state double-applies steps.
+        initial_state = state
         while step < num_steps:
             try:
                 if self._preempt:
@@ -78,7 +88,7 @@ class TrainSupervisor:
                 latest = self.ckpt.latest_step()
                 if latest is None:
                     # no checkpoint yet: restart from the initial state
-                    step = start_step
+                    step, state = start_step, initial_state
                 else:
                     step, state = self.ckpt.restore(state, latest)
                 if on_restore is not None:

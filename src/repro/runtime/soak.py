@@ -1,0 +1,459 @@
+"""Simulated multi-host soak: fault-injected churn with overlap-aware replan.
+
+The paper's 1.5-minute ImageNet run needs 512 GPUs in lockstep for the
+whole job; at that scale stragglers, preemption notices, and hard node
+failures are the norm. This harness drives the full control plane —
+``StragglerDetector`` → ``ElasticController`` → checkpoint/reshard →
+``GradientFlow.replan`` — through a few hundred simulated steps with a
+deterministic, seeded fault schedule, on a modeled 64-node × 8-GPU
+cluster (no devices: step times come from the overlap engine's analytic
+timeline, ``engine.simulate_plan``).
+
+The elastic contract the harness asserts after EVERY remesh/preemption:
+
+  event → blocking checkpoint (TrainSupervisor's Preempted path)
+        → evict hosts, ``ElasticController.propose`` a smaller mesh
+        → ``reshard.plan`` feasibility on the abstract candidate mesh
+        → ``GradientFlow.replan(topology)``: θ re-tuned, per-bucket
+          algorithms re-selected, StepPlan cache invalidated
+        → the active plan's ``plan_key`` matches the NEW topology,
+          ``plan.validate()`` holds, and the staged finish still beats
+          the monolithic barrier on the shrunken mesh
+        → per-shard hg resharded column-total-preserving
+          (``reshard.reshard_hg``), batch re-split, detector reset.
+
+Everything recorded in the trace is pure-python cost-model arithmetic
+(floats rounded to 9 dp) or integers, so the seeded schedule yields a
+bit-identical trace on any machine — ``benchmarks/micro.py --soak-check``
+gates it against the committed ``BENCH_soak.json``.
+
+Entry points: ``SoakHarness(cfg, ckpt_dir).run()`` (tests, the bench) and
+``python -m repro.launch.dryrun --soak`` (rendered per-event table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import reshard
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import GradientFlowConfig
+from repro.configs.shapes import ALEXNET_GRAD_SHAPES
+from repro.core.gradientflow import GradientFlow
+from repro.core.pool import GradientPool
+from repro.parallel.collectives import compat_abstract_mesh
+from repro.parallel.cost_model import INTRA_NODE, NCCL_56G
+from repro.parallel.topology import Topology
+from repro.runtime.elastic import ElasticController, MeshCandidate
+from repro.runtime.fault_tolerance import (Preempted, SupervisorConfig,
+                                           TrainSupervisor)
+from repro.runtime.stragglers import StragglerDetector
+
+
+def _rnd(x: float) -> float:
+    return round(float(x), 9)
+
+
+class RemeshSignal(Preempted):
+    """Raised from the step function when the detector escalates to
+    'remesh'. Subclasses ``Preempted`` so ``TrainSupervisor`` takes its
+    blocking-checkpoint-then-reraise path — a remesh IS a planned exit,
+    not a failure, and must not burn a restart."""
+
+    def __init__(self, hosts: Sequence[int]):
+        super().__init__(f"straggler remesh: evict hosts {list(hosts)}")
+        self.hosts = list(hosts)
+
+
+@dataclasses.dataclass(frozen=True)
+class SoakEvent:
+    """One scheduled fault. ``kind``: 'straggler' (host slows down by
+    ``factor`` until evicted), 'preempt' (preemption notice for ``host``),
+    'fail' (hard failure — raises at ``step``, consumes a restart)."""
+
+    step: int
+    kind: str
+    host: int
+    factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SoakConfig:
+    num_hosts: int = 64            # 64 nodes x 8 GPUs = the paper's 512
+    gpus_per_node: int = 8
+    model_parallel: int = 2        # data degree 4 per node
+    global_batch: int = 16128      # 2^8*3^2*7: rich divisor set for churn
+    num_steps: int = 300
+    checkpoint_every: int = 25
+    max_restarts: int = 4
+    seed: int = 0
+    hg_cols: int = 128             # simulated per-shard state width
+    mode: str = "lazy"
+    wire_dtype: str = "float16"
+    # Detector policy: escalate quickly enough that a step-60 straggler
+    # remeshes within ~10 steps.
+    alpha: float = 0.3
+    threshold: float = 1.5
+    patience: int = 3
+    remesh_after: int = 8
+    jitter: float = 0.02           # +/- fractional per-host step noise
+
+
+def default_schedule(cfg: SoakConfig) -> Tuple[SoakEvent, ...]:
+    """The committed-baseline schedule: two hard failures (restart path),
+    one persistent straggler (detector-escalated remesh), one preemption
+    notice — >= 3 distinct event kinds, both elastic events shrink the
+    mesh (256 → 252 → 224 data shards at the default global batch)."""
+    s = cfg.num_steps
+    return (
+        SoakEvent(step=int(s * 0.13), kind="fail", host=7),
+        SoakEvent(step=int(s * 0.20), kind="straggler", host=12,
+                  factor=4.0),
+        SoakEvent(step=int(s * 0.50), kind="preempt", host=3),
+        SoakEvent(step=int(s * 0.70), kind="fail", host=1),
+    )
+
+
+class SoakHarness:
+    """Drives ``TrainSupervisor`` through the seeded fault schedule and
+    checks the replan contract after every elastic event. ``run()``
+    returns the deterministic trace dict (see module docstring)."""
+
+    def __init__(self, cfg: SoakConfig, ckpt_dir: str,
+                 schedule: Optional[Sequence[SoakEvent]] = None):
+        assert cfg.gpus_per_node % cfg.model_parallel == 0, cfg
+        self.cfg = cfg
+        self.schedule = tuple(schedule if schedule is not None
+                              else default_schedule(cfg))
+        self.hosts: List[int] = list(range(cfg.num_hosts))
+        self.slow: Dict[int, float] = {}      # node id -> slowdown factor
+        self._consumed: set = set()
+        self._pending_leave: Optional[int] = None
+        self._last_fail: Optional[SoakEvent] = None
+        self.rng = np.random.default_rng(cfg.seed)
+
+        self.elastic = ElasticController(model_parallel=cfg.model_parallel,
+                                         global_batch=cfg.global_batch)
+        self.detector = StragglerDetector(
+            len(self.hosts), alpha=cfg.alpha, threshold=cfg.threshold,
+            patience=cfg.patience, remesh_after=cfg.remesh_after)
+        self.ckpt = CheckpointManager(ckpt_dir, keep=3)
+        self.sup = TrainSupervisor(self.ckpt, SupervisorConfig(
+            checkpoint_every=cfg.checkpoint_every,
+            max_restarts=cfg.max_restarts))
+
+        cand = self.elastic.propose(len(self.hosts) * cfg.gpus_per_node)
+        assert cand is not None, "initial cluster must be viable"
+        self.num_data = cand.num_devices // cfg.model_parallel
+        self.topo = self._topology_for(self.num_data)
+        params = {f"t{i}": jax.ShapeDtypeStruct(s, jnp.float32)
+                  for i, s in enumerate(ALEXNET_GRAD_SHAPES)}
+        self.pool = GradientPool(params)
+        self.gf = GradientFlow(
+            GradientFlowConfig(mode=cfg.mode, wire_dtype=cfg.wire_dtype,
+                               warmup_steps=0, auto_bucket=True,
+                               topology=self.topo,
+                               reduce_axes=self.topo.axes,
+                               collective_algo="auto", overlap="staged"),
+            self.pool, num_data_shards=self.num_data)
+        self._base_step_s = self._predicted_step_s()
+        self.events: List[Dict] = []
+        self._last_event_step = 0
+
+    # -- modeled cluster -----------------------------------------------------
+
+    def _topology_for(self, data_total: int) -> Topology:
+        """Data-reduction topology of a candidate mesh. When the data
+        shards fill whole nodes the fabric is two-level (inter-node 56G
+        ring over an intra-node level); a candidate that doesn't factor
+        into whole nodes degrades to one flat inter-node level — a
+        genuine level-structure change the replan must absorb."""
+        per_node = self.cfg.gpus_per_node // self.cfg.model_parallel
+        if per_node > 1 and data_total % per_node == 0:
+            return Topology.from_axis_sizes(
+                ("node", "gpu"), (data_total // per_node, per_node),
+                fabrics=(NCCL_56G, INTRA_NODE))
+        return Topology.from_axis_sizes(("data",), (data_total,),
+                                        fabrics=(NCCL_56G,))
+
+    def _predicted_step_s(self) -> float:
+        from repro.core import engine
+        plan = self.gf.plan()
+        return float(engine.simulate_plan(plan, self.topo)
+                     ["summary"]["finish_s"])
+
+    def _init_state(self) -> Dict:
+        # Tiny stand-in train state: a replicated scalar pool, the
+        # per-data-shard hg rows (the one leaf whose SHAPE depends on the
+        # mesh — what reshard_hg redistributes), and the step counter.
+        hg = np.zeros((self.num_data, self.cfg.hg_cols), np.float32)
+        return {"x": np.zeros((4,), np.float32), "hg": hg,
+                "step_val": np.asarray(0, np.int32)}
+
+    # -- supervisor hooks ----------------------------------------------------
+
+    def _fault_injector(self, step: int) -> None:
+        for ev in self.schedule:
+            if ev.step != step or ev in self._consumed:
+                continue
+            if ev.kind == "straggler":
+                self._consumed.add(ev)
+                self.slow[ev.host] = ev.factor
+            elif ev.kind == "preempt":
+                self._consumed.add(ev)
+                self._pending_leave = ev.host
+                self.sup.request_preemption()
+            elif ev.kind == "fail":
+                self._consumed.add(ev)
+                self._last_fail = ev
+                raise RuntimeError(
+                    f"injected hard failure on host {ev.host} @ {step}")
+            else:
+                raise ValueError(f"unknown event kind {ev.kind!r}")
+
+    def _host_step_times(self, step: int) -> List[float]:
+        # Integer draws only: PCG64's raw stream is stable across
+        # platforms/numpy versions, unlike float distributions — the
+        # detector's decisions (and thus the trace) stay bit-identical.
+        j = self.rng.integers(0, 1001, size=len(self.hosts))
+        out = []
+        for node, ji in zip(self.hosts, j):
+            noise = 1.0 + self.cfg.jitter * (ji / 1000.0 - 0.5) * 2.0
+            out.append(self._base_step_s * noise
+                       * self.slow.get(node, 1.0))
+        return out
+
+    def _step_fn(self, step: int, state: Dict) -> Dict:
+        rep = self.detector.observe(self._host_step_times(step))
+        if rep.action == "remesh":
+            # Map detector indices (positions) back to node ids.
+            raise RemeshSignal([self.hosts[i] for i in rep.slow_hosts])
+        if rep.action == "rebatch" and not any(
+                e.get("kind") == "rebatch_advisory"
+                and e.get("episode_start", -1) == self._last_event_step
+                for e in self.events):
+            self.events.append({
+                "kind": "rebatch_advisory", "step": int(step),
+                "episode_start": int(self._last_event_step),
+                "slow_hosts": [int(self.hosts[i]) for i in rep.slow_hosts],
+                "lr_rescale": _rnd(rep.lr_rescale)})
+        hg = np.array(state["hg"])
+        hg[:, step % self.cfg.hg_cols] += 1.0 / hg.shape[0]
+        return {"x": state["x"] + 1.0, "hg": hg,
+                "step_val": np.asarray(step + 1, np.int32)}
+
+    def _on_restore(self, step: int) -> None:
+        ev = self._last_fail
+        self.events.append({
+            "kind": "hard_failure",
+            "step": int(ev.step) if ev else int(step),
+            "host": int(ev.host) if ev else -1,
+            "restored_to_step": int(step),
+            "restarts_consumed": int(self.sup.restarts),
+            "mesh_changed": False,
+            "plan_key_after": repr(self.gf.plan_cache_key())})
+        self._last_fail = None
+
+    # -- the elastic transition ----------------------------------------------
+
+    def _elastic_event(self, kind: str, leaving: List[int],
+                       ev_step: int) -> Optional[MeshCandidate]:
+        """Evict ``leaving``, propose + validate the new mesh, replan, and
+        record the before/after trace entry. Returns the accepted
+        candidate, or None when no viable mesh remains (abort)."""
+        from repro.core import engine
+        cfg = self.cfg
+        plan_before = self.gf.plan()
+        key_before = plan_before.plan_key
+        sim_before = engine.simulate_plan(plan_before, self.topo)
+        wire_before = self.gf.wire_bytes_per_step()
+        old_data = self.num_data
+
+        for h in leaving:
+            self.hosts.remove(h)
+            self.slow.pop(h, None)
+        cand = self.elastic.propose(len(self.hosts) * cfg.gpus_per_node)
+        if cand is None:
+            self.events.append({
+                "kind": kind, "step": int(ev_step),
+                "hosts_evicted": [int(h) for h in leaving],
+                "aborted": "no viable mesh"})
+            return None
+        new_data = cand.num_devices // cfg.model_parallel
+        new_topo = self._topology_for(new_data)
+
+        # Feasibility before bytes move: the mesh may not physically
+        # exist yet, so the plan runs on an abstract candidate mesh.
+        amesh = compat_abstract_mesh(cand.shape, cand.axis_names)
+        problems = reshard.plan(
+            {"x": jax.ShapeDtypeStruct((4,), jnp.float32),
+             "hg": jax.ShapeDtypeStruct((new_data, cfg.hg_cols),
+                                        jnp.float32)},
+            {"x": P(), "hg": P("data", None)}, amesh)
+        assert problems == [], problems
+
+        # THE tentpole contract: replan recompiles the StepPlan for the
+        # new topology — fresh key, valid partition, staged still wins.
+        self.gf.replan(new_topo, num_data_shards=new_data)
+        self.topo = new_topo
+        plan_after = self.gf.plan()
+        plan_after.validate()
+        assert plan_after.plan_key == self.gf.plan_cache_key()
+        assert plan_after.plan_key != key_before, (
+            "elastic event did not invalidate the StepPlan",
+            key_before)
+        sim_after = engine.simulate_plan(plan_after, new_topo)
+        staged = float(sim_after["summary"]["finish_s"])
+        mono = float(sim_after["monolithic_finish_s"])
+        assert staged <= mono + 1e-12, (staged, mono)
+        self._base_step_s = staged
+
+        self.detector.reset(len(self.hosts))
+        old_ps, new_ps = reshard.reshard_batch_split(
+            cfg.global_batch, old_data, new_data)
+        self.events.append({
+            "kind": kind, "step": int(ev_step),
+            "hosts_evicted": [int(h) for h in leaving],
+            "healthy_hosts": len(self.hosts),
+            "steps_survived": int(ev_step - self._last_event_step),
+            "restarts_consumed": int(self.sup.restarts),
+            "mesh_before": [old_data, cfg.model_parallel],
+            "mesh_after": list(cand.shape),
+            "devices_before": old_data * cfg.model_parallel,
+            "devices_after": cand.num_devices,
+            "data_shards_before": old_data,
+            "data_shards_after": new_data,
+            "per_shard_batch_before": old_ps,
+            "per_shard_batch_after": new_ps,
+            "topology_after": [[lv.axis, lv.size]
+                               for lv in new_topo.levels],
+            "mesh_changed": True, "replanned": True, "plan_valid": True,
+            "plan_key_before": repr(key_before),
+            "plan_key_after": repr(plan_after.plan_key),
+            "theta_after": int(self.gf.bucket_elems),
+            "num_buckets_before": len(plan_before.tasks),
+            "num_buckets_after": len(plan_after.tasks),
+            "algos_after": [t.algo.name for t in plan_after.tasks],
+            "wire_bytes_before": int(wire_before),
+            "wire_bytes_after": int(self.gf.wire_bytes_per_step()),
+            "predicted_step_before_s":
+                _rnd(sim_before["summary"]["finish_s"]),
+            "predicted_step_after_s": _rnd(staged),
+            "monolithic_after_s": _rnd(mono),
+            "staged_beats_monolithic": bool(staged <= mono + 1e-12)})
+        self._last_event_step = ev_step
+        self.num_data = new_data
+        return cand
+
+    def _reshard_state(self, state: Dict) -> Dict:
+        old = np.asarray(state["hg"])
+        new_hg = reshard.reshard_hg(old, self.num_data)
+        # Column-total conservation is the reshard's correctness contract.
+        np.testing.assert_allclose(new_hg.sum(axis=0), old.sum(axis=0),
+                                   rtol=1e-5)
+        return {"x": state["x"], "hg": new_hg.astype(np.float32),
+                "step_val": state["step_val"]}
+
+    # -- the soak loop -------------------------------------------------------
+
+    def run(self) -> Dict:
+        cfg = self.cfg
+        state = self._init_state()
+        step = 0
+        aborted = None
+        while step < cfg.num_steps:
+            try:
+                state = self.sup.run(state, step, cfg.num_steps,
+                                     self._step_fn,
+                                     on_restore=self._on_restore,
+                                     fault_injector=self._fault_injector)
+                step = cfg.num_steps
+            except (RemeshSignal, Preempted) as e:
+                if isinstance(e, RemeshSignal):
+                    kind, leaving = "straggler_remesh", e.hosts
+                else:
+                    kind = "preemption"
+                    leaving = [self._pending_leave]
+                    self._pending_leave = None
+                self.sup.clear_preemption()
+                # The supervisor saved a blocking checkpoint (old mesh
+                # shape) before re-raising; resume from it.
+                ev_step, state = self.ckpt.restore(state)
+                if self._elastic_event(kind, leaving, ev_step) is None:
+                    aborted = f"{kind}: no viable mesh"
+                    break
+                state = self._reshard_state(state)
+                # Re-checkpoint the resharded state at the same step so a
+                # later hard failure restores shape-consistent arrays.
+                self.ckpt.save(ev_step, state, blocking=True)
+                step = ev_step
+            except RuntimeError as e:
+                aborted = f"restart budget exhausted: {e}"
+                break
+        completed = int(state["step_val"]) if aborted is None else step
+        kinds = sorted({e["kind"] for e in self.events})
+        trace = {
+            "config": {f.name: getattr(cfg, f.name)
+                       for f in dataclasses.fields(cfg)},
+            "schedule": [dataclasses.asdict(e) for e in self.schedule],
+            "events": self.events,
+            "final": {
+                "completed_steps": completed,
+                "aborted": aborted,
+                "restarts_consumed": int(self.sup.restarts),
+                "final_hosts": len(self.hosts),
+                "final_data_shards": int(self.num_data),
+                "final_plan_key": repr(self.gf.plan_cache_key()),
+                "final_predicted_step_s": _rnd(self._base_step_s),
+                "elastic_events": sum(1 for e in self.events
+                                      if e.get("mesh_changed")),
+                "event_kinds": kinds,
+            },
+        }
+        return trace
+
+
+def render_trace(trace: Dict) -> str:
+    """Human-readable per-event soak table (``dryrun --soak``)."""
+    ms = 1e3
+    cfg = trace["config"]
+    lines = [
+        f"soak: {cfg['num_hosts']} hosts x {cfg['gpus_per_node']} GPUs "
+        f"(mp={cfg['model_parallel']}), {cfg['num_steps']} steps, "
+        f"seed {cfg['seed']}",
+        f"{'step':>5} {'event':>18} {'mesh':>10} {'theta':>9} "
+        f"{'step_ms':>16} {'wire_MiB':>9}",
+    ]
+    for e in trace["events"]:
+        if e.get("mesh_changed"):
+            mesh = "x".join(str(s) for s in e["mesh_after"])
+            lines.append(
+                f"{e['step']:>5} {e['kind']:>18} {mesh:>10} "
+                f"{e['theta_after']:>9} "
+                f"{e['predicted_step_before_s'] * ms:>7.2f}"
+                f"->{e['predicted_step_after_s'] * ms:<7.2f} "
+                f"{e['wire_bytes_after'] / 2**20:>9.1f}")
+        elif e["kind"] == "hard_failure":
+            lines.append(
+                f"{e['step']:>5} {e['kind']:>18} {'-':>10} {'-':>9} "
+                f"restored to {e['restored_to_step']} "
+                f"(restart {e['restarts_consumed']})")
+        else:
+            lines.append(
+                f"{e['step']:>5} {e['kind']:>18} {'-':>10} {'-':>9} "
+                f"lr_rescale {e.get('lr_rescale', 1.0)}")
+    f = trace["final"]
+    lines.append(
+        f"final: {f['completed_steps']} steps, "
+        f"{f['elastic_events']} elastic events, "
+        f"{f['restarts_consumed']} restarts, "
+        f"{f['final_hosts']} hosts, {f['final_data_shards']} data shards, "
+        f"step {f['final_predicted_step_s'] * ms:.2f} ms"
+        + (f" | ABORTED: {f['aborted']}" if f["aborted"] else ""))
+    return "\n".join(lines)

@@ -37,6 +37,21 @@ class StragglerDetector:
         self.ewma: List[Optional[float]] = [None] * num_hosts
         self.flags: List[int] = [0] * num_hosts
 
+    def reset(self, num_hosts: Optional[int] = None) -> None:
+        """Re-initialize after a membership change (remesh / host join).
+
+        Host indices are positions in the supervisor's current host list,
+        so after an elastic event old EWMAs describe the wrong hosts —
+        carrying them over would let a stale flag evict an innocent host,
+        and a grown list would hit the ``observe`` length assert. Every
+        host restarts cold: its next observation seeds the EWMA directly
+        (the cold-start path), flags at zero."""
+        if num_hosts is not None:
+            assert num_hosts >= 1, num_hosts
+            self.num_hosts = int(num_hosts)
+        self.ewma = [None] * self.num_hosts
+        self.flags = [0] * self.num_hosts
+
     def observe(self, step_times: Sequence[float]) -> StragglerReport:
         assert len(step_times) == self.num_hosts
         for i, t in enumerate(step_times):

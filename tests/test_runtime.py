@@ -9,6 +9,18 @@ from repro.runtime import (ElasticController, Preempted, StragglerDetector,
                            SupervisorConfig, TrainSupervisor)
 from repro.runtime.elastic import candidates_for
 
+# hypothesis is a dev-only dependency (pip install -e .[dev]); only the
+# propose property tests skip without it — the rest of the module runs.
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # pragma: no cover - CI installs dev extras
+    hypothesis = None
+    st = None
+
+needs_hypothesis = pytest.mark.skipif(
+    hypothesis is None, reason="hypothesis not installed (dev extra)")
+
 
 # -- stragglers ---------------------------------------------------------------
 
@@ -45,6 +57,47 @@ def test_straggler_recovery_resets_flags():
     assert det.flags[3] == 0
 
 
+def test_straggler_reset_shrinks_host_count():
+    """Post-remesh the evicted host is gone and indices shift; reset must
+    re-dimension the detector and drop every stale flag/EWMA."""
+    det = StragglerDetector(num_hosts=4, patience=1, alpha=1.0)
+    det.observe([1.0, 1.0, 1.0, 9.0])
+    assert det.flags[3] == 1
+    det.reset(num_hosts=3)
+    assert det.num_hosts == 3
+    assert det.ewma == [None] * 3 and det.flags == [0] * 3
+    rep = det.observe([1.0, 1.0, 1.0])        # old len-4 would assert
+    assert rep.action == "none"
+    # cold start: first observation seeds the EWMA directly
+    assert det.ewma == [1.0, 1.0, 1.0]
+
+
+def test_straggler_reset_grows_host_count():
+    det = StragglerDetector(num_hosts=2, patience=1)
+    det.observe([1.0, 1.0])
+    det.reset(num_hosts=5)
+    rep = det.observe([1.0] * 5)
+    assert rep.action == "none" and det.num_hosts == 5
+
+
+def test_straggler_reset_clears_stale_flags_same_count():
+    """reset() without a new count keeps the dimension but restarts every
+    host cold — a host one window from eviction gets a clean slate."""
+    det = StragglerDetector(num_hosts=4, patience=2, alpha=1.0)
+    det.observe([1.0, 1.0, 1.0, 9.0])         # host 3 at flags=1
+    det.reset()
+    assert det.num_hosts == 4
+    rep = det.observe([1.0, 1.0, 1.0, 9.0])
+    assert rep.action == "none"               # patience restarted from 0
+    assert det.flags[3] == 1
+
+
+def test_straggler_reset_rejects_empty():
+    det = StragglerDetector(num_hosts=4)
+    with pytest.raises(AssertionError):
+        det.reset(num_hosts=0)
+
+
 # -- elastic ------------------------------------------------------------------
 
 def test_elastic_candidates():
@@ -65,6 +118,74 @@ def test_elastic_controller_respects_batch():
     assert c is not None
     data_total = c.num_devices // 16
     assert 256 % data_total == 0
+
+
+def test_elastic_propose_rounds_down_ragged_counts():
+    """Healthy counts arrive raw (250 after evictions); the mesh only
+    needs to FIT, so 250 must yield the 240-device mesh, not None —
+    candidates_for itself still rejects non-divisible counts."""
+    ctl = ElasticController(model_parallel=16, global_batch=240)
+    c = ctl.propose(healthy_devices=250)
+    assert c is not None and c.num_devices == 240
+    assert candidates_for(250, model_parallel=16) is None
+
+
+def _viable_data_totals(healthy, mp, pods, gb):
+    """Brute-force oracle: per-pod data degrees that fit and divide."""
+    unit = mp * pods
+    return [d for d in range(1, healthy // unit + 1) if gb % (d * pods) == 0]
+
+
+if hypothesis is None:       # pragma: no cover - CI installs dev extras
+    @needs_hypothesis
+    def test_elastic_propose_matches_oracle():
+        pass
+
+    @needs_hypothesis
+    def test_elastic_propose_monotone_in_healthy():
+        pass
+else:
+    @hypothesis.given(
+        healthy=st.integers(min_value=0, max_value=2048),
+        mp=st.integers(min_value=1, max_value=64),
+        pods=st.integers(min_value=1, max_value=4),
+        gb=st.integers(min_value=1, max_value=65536))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_elastic_propose_matches_oracle(healthy, mp, pods, gb):
+        """propose returns the LARGEST viable mesh: TP degree kept,
+        global batch divided, device count fits — and None exactly when
+        the oracle finds no viable data degree."""
+        cand = ElasticController(model_parallel=mp, global_batch=gb) \
+            .propose(healthy, pods=pods)
+        viable = _viable_data_totals(healthy, mp, pods, gb)
+        if not viable:
+            assert cand is None
+        else:
+            assert cand is not None
+            assert cand.num_devices == max(viable) * mp * pods
+            assert cand.num_devices <= healthy
+            assert cand.shape[-1] == mp               # TP axis fixed
+            data_total = cand.num_devices // mp
+            assert gb % data_total == 0               # batch divides
+            if pods > 1:
+                assert cand.shape[0] == pods
+                assert cand.axis_names == ("pod", "data", "model")
+            else:
+                assert cand.axis_names == ("data", "model")
+
+    @hypothesis.given(
+        healthy=st.integers(min_value=0, max_value=1024),
+        delta=st.integers(min_value=0, max_value=512),
+        mp=st.integers(min_value=1, max_value=32),
+        gb=st.sampled_from([1, 96, 256, 3 * 5 * 7, 16128, 65536]))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_elastic_propose_monotone_in_healthy(healthy, delta, mp, gb):
+        """More healthy devices never yields a smaller mesh."""
+        ctl = ElasticController(model_parallel=mp, global_batch=gb)
+        lo, hi = ctl.propose(healthy), ctl.propose(healthy + delta)
+        lo_n = 0 if lo is None else lo.num_devices
+        hi_n = 0 if hi is None else hi.num_devices
+        assert hi_n >= lo_n
 
 
 # -- supervisor ---------------------------------------------------------------
@@ -145,3 +266,111 @@ def test_supervisor_on_restore_skips_data(tmp_path):
     sup.run(_mini_state(), 0, 8, step_fn,
             on_restore=restored_steps.append, fault_injector=fault)
     assert restored_steps == [4]
+
+
+# -- supervisor edge cases (elastic soak hardening) ---------------------------
+
+
+def _count_step(calls):
+    def step_fn(step, state):
+        calls["n"] += 1
+        return {"x": state["x"] + 1.0,
+                "step_val": jnp.asarray(step + 1, jnp.int32)}
+    return step_fn
+
+
+def test_supervisor_fault_on_step_zero_before_any_checkpoint(tmp_path):
+    """A fault before the first step ever runs: nothing on disk, restart
+    must come from the TRUE initial state and replay everything."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=100,
+                                                 max_restarts=2))
+    calls = {"n": 0}
+    faulted = {"done": False}
+    restored = []
+
+    def fault(step):
+        if step == 0 and not faulted["done"]:
+            faulted["done"] = True
+            raise RuntimeError("dead on arrival")
+
+    final = sup.run(_mini_state(), 0, 6, _count_step(calls),
+                    on_restore=restored.append, fault_injector=fault)
+    assert sup.restarts == 1
+    assert restored == [0]
+    assert calls["n"] == 6
+    assert float(final["x"][0]) == 6.0
+
+
+def test_supervisor_no_checkpoint_restart_does_not_replay_on_evolved_state(
+        tmp_path):
+    """Fault AFTER some steps but before the first checkpoint: the loop
+    state has already absorbed updates, so replaying on top of it would
+    double-apply steps 0..2 — restart must rewind to the initial state."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=100,
+                                                 max_restarts=2))
+    calls = {"n": 0}
+    faulted = {"done": False}
+
+    def fault(step):
+        if step == 3 and not faulted["done"]:
+            faulted["done"] = True
+            raise RuntimeError("pre-checkpoint failure")
+
+    final = sup.run(_mini_state(), 0, 6, _count_step(calls),
+                    fault_injector=fault)
+    assert calls["n"] == 6 + 3               # steps 0..2 replayed once
+    assert float(final["x"][0]) == 6.0       # NOT 9.0
+    assert int(final["step_val"]) == 6
+
+
+def test_supervisor_budget_exhausted_with_save_in_flight(tmp_path):
+    """Restart budget runs out while an async checkpoint may still be in
+    flight: the error must propagate, and the step-5 checkpoint must be
+    complete and restorable afterwards (save joined, atomic rename done)."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=5,
+                                                 max_restarts=2))
+    restored = []
+
+    def step_fn(step, state):
+        return {"x": state["x"] + 1.0,
+                "step_val": jnp.asarray(step + 1, jnp.int32)}
+
+    def fault(step):
+        if step == 6:                        # persistent: fails every retry
+            raise RuntimeError("node keeps dying")
+
+    with pytest.raises(RuntimeError, match="node keeps dying"):
+        sup.run(_mini_state(), 0, 10, step_fn,
+                on_restore=restored.append, fault_injector=fault)
+    assert sup.restarts == 3                 # budget (2) + the fatal one
+    assert restored == [5, 5]                # each retry rewound to 5
+    assert ckpt.latest_step() == 5
+    step, state = ckpt.restore(_mini_state())
+    assert step == 5 and float(state["x"][0]) == 5.0
+
+
+def test_supervisor_preemption_during_final_step(tmp_path):
+    """A preemption notice that lands during the last step must not eat
+    the run: the loop exits before the next preempt check, the FINAL
+    blocking checkpoint is written, and run returns normally."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=100))
+
+    def step_fn(step, state):
+        if step == 9:                        # the final step
+            sup.request_preemption()
+        return {"x": state["x"] + 1.0,
+                "step_val": jnp.asarray(step + 1, jnp.int32)}
+
+    final = sup.run(_mini_state(), 0, 10, step_fn)   # no Preempted raised
+    assert float(final["x"][0]) == 10.0
+    assert ckpt.latest_step() == 10
+    # the notice is still pending for the NEXT run until acknowledged
+    with pytest.raises(Preempted):
+        sup.run(final, 10, 20, step_fn)
+    sup.clear_preemption()
+    final = sup.run(final, 10, 20, step_fn)
+    assert int(final["step_val"]) == 20

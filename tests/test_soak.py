@@ -1,0 +1,339 @@
+"""Elastic soak harness + StepPlan replan: the control plane end-to-end.
+
+The harness itself asserts the replan contract inline (plan-cache key
+changed, plan.validate(), staged <= monolithic on the shrunken mesh);
+these tests drive it through seeded schedules and pin the surrounding
+semantics — determinism, abort behavior, the plan cache, and that a
+replanned plan still executes correctly on a real (placeholder) mesh.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GradientFlowConfig
+from repro.core.gradientflow import GradientFlow
+from repro.core.pool import GradientPool
+from repro.parallel.topology import Topology
+from repro.runtime.soak import (SoakConfig, SoakEvent, SoakHarness,
+                                render_trace)
+
+from conftest import run_multi_device
+
+
+SHORT = SoakConfig(num_steps=120, checkpoint_every=10, max_restarts=3)
+SHORT_SCHEDULE = (
+    SoakEvent(step=15, kind="fail", host=7),
+    SoakEvent(step=30, kind="straggler", host=12, factor=4.0),
+    SoakEvent(step=70, kind="preempt", host=3),
+    SoakEvent(step=95, kind="fail", host=1),
+)
+
+
+def run_soak(tmp_path, cfg=SHORT, schedule=SHORT_SCHEDULE, name="ckpt"):
+    return SoakHarness(cfg, str(tmp_path / name), schedule=schedule).run()
+
+
+# -- the soak contract --------------------------------------------------------
+
+
+def test_soak_completes_with_three_event_types(tmp_path):
+    trace = run_soak(tmp_path)
+    fin = trace["final"]
+    assert fin["aborted"] is None
+    assert fin["completed_steps"] == SHORT.num_steps
+    assert {"straggler_remesh", "preemption", "hard_failure"} <= \
+        set(fin["event_kinds"])
+    assert fin["restarts_consumed"] == 2      # the two hard failures
+    assert fin["elastic_events"] == 2         # remesh + preemption
+
+
+def test_soak_every_elastic_event_replans(tmp_path):
+    trace = run_soak(tmp_path)
+    elastic = [e for e in trace["events"] if e.get("mesh_changed")]
+    assert len(elastic) == 2
+    for e in elastic:
+        assert e["replanned"] and e["plan_valid"]
+        assert e["plan_key_after"] != e["plan_key_before"]
+        assert e["staged_beats_monolithic"]
+        assert e["predicted_step_after_s"] > 0
+        assert e["data_shards_after"] < e["data_shards_before"]
+        # the proposed mesh keeps TP and divides the global batch
+        assert e["mesh_after"][-1] == SHORT.model_parallel
+        assert SHORT.global_batch % e["data_shards_after"] == 0
+        assert SHORT.global_batch // e["data_shards_after"] == \
+            e["per_shard_batch_after"]
+    # plan keys chain: each event starts from the previous event's key
+    assert elastic[1]["plan_key_before"] == elastic[0]["plan_key_after"]
+    assert trace["final"]["final_plan_key"] == elastic[1]["plan_key_after"]
+
+
+def test_soak_is_deterministic(tmp_path):
+    a = run_soak(tmp_path, name="a")
+    b = run_soak(tmp_path, name="b")
+    assert a["events"] == b["events"]
+    assert a["final"] == b["final"]
+
+
+def test_soak_hard_failure_restores_from_checkpoint(tmp_path):
+    trace = run_soak(tmp_path)
+    fails = [e for e in trace["events"] if e["kind"] == "hard_failure"]
+    assert len(fails) == 2
+    for e in fails:
+        # restored to the latest checkpoint at or before the fault step
+        assert e["restored_to_step"] <= e["step"]
+        assert e["restored_to_step"] % SHORT.checkpoint_every == 0 or \
+            e["restored_to_step"] > SHORT.checkpoint_every
+        assert not e["mesh_changed"]
+
+
+def test_soak_aborts_when_no_viable_mesh(tmp_path):
+    cfg = SoakConfig(num_hosts=2, gpus_per_node=4, model_parallel=2,
+                     global_batch=8, num_steps=40, checkpoint_every=5)
+    schedule = (SoakEvent(step=5, kind="preempt", host=0),
+                SoakEvent(step=15, kind="preempt", host=1))
+    trace = run_soak(tmp_path, cfg=cfg, schedule=schedule)
+    fin = trace["final"]
+    assert fin["aborted"] is not None and "no viable mesh" in fin["aborted"]
+    assert fin["final_hosts"] == 0
+    # the first preemption still went through the full replan path
+    elastic = [e for e in trace["events"] if e.get("mesh_changed")]
+    assert len(elastic) == 1 and elastic[0]["kind"] == "preemption"
+
+
+def test_render_trace_mentions_every_event(tmp_path):
+    trace = run_soak(tmp_path)
+    text = render_trace(trace)
+    for e in trace["events"]:
+        assert e["kind"] in text
+    assert "final:" in text
+
+
+@pytest.mark.slow
+def test_soak_long_default_run(tmp_path):
+    """The full committed-baseline soak (300 steps, default schedule) —
+    the same run `benchmarks/micro.py --soak-check` gates."""
+    trace = SoakHarness(SoakConfig(), str(tmp_path / "ckpt")).run()
+    fin = trace["final"]
+    assert fin["aborted"] is None
+    assert fin["completed_steps"] == 300
+    assert fin["elastic_events"] == 2
+    assert {"straggler_remesh", "preemption", "hard_failure"} <= \
+        set(fin["event_kinds"])
+    for e in trace["events"]:
+        if e.get("mesh_changed"):
+            assert e["replanned"] and e["plan_valid"]
+            assert e["plan_key_after"] != e["plan_key_before"]
+
+
+# -- the plan cache / replan --------------------------------------------------
+
+
+def _gf(topo, num_data):
+    pool = GradientPool({"a": jnp.zeros((3000,)), "b": jnp.zeros((500,)),
+                         "c": jnp.zeros((80,))})
+    cfg = GradientFlowConfig(mode="lazy", wire_dtype="float16",
+                             warmup_steps=0, bucket_elems=1024,
+                             auto_bucket=True, topology=topo,
+                             reduce_axes=topo.axes,
+                             collective_algo="auto", overlap="staged")
+    return GradientFlow(cfg, pool, num_data_shards=num_data)
+
+
+def test_plan_is_cached_until_replan():
+    gf = _gf(Topology.cluster_v(nodes=8, gpus_per_node=4), 32)
+    p1 = gf.plan()
+    assert gf.plan() is p1                    # cache hit: same object
+    assert p1.plan_key == gf.plan_cache_key()
+    p1.validate()
+    gf.replan(Topology.cluster_v(nodes=4, gpus_per_node=4),
+              num_data_shards=16)
+    p2 = gf.plan()
+    assert p2 is not p1
+    assert p2.plan_key != p1.plan_key
+    assert p2.plan_key == gf.plan_cache_key()
+    assert p2.num_data_shards == 16
+    p2.validate()
+
+
+def test_replan_changes_level_structure():
+    """A candidate that doesn't factor into whole nodes degrades to a
+    single flat level — replan must absorb the depth change (algorithm
+    selection differs across depths)."""
+    gf = _gf(Topology.cluster_v(nodes=8, gpus_per_node=4), 32)
+    two_level_algos = {t.algo.name for t in gf.plan().tasks}
+    gf.replan(Topology.from_axis_sizes(("data",), (30,)),
+              num_data_shards=30)
+    plan = gf.plan()
+    plan.validate()
+    assert gf.cfg.reduce_axes == ("data",)    # defaulted to topology.axes
+    assert len(gf.cfg.topology.levels) == 1
+    # flat topologies can't run hierarchical algorithms
+    assert {t.algo.name for t in plan.tasks} == {"flat"}
+    assert two_level_algos != {"flat"} or True  # informational
+
+
+def test_replan_keeps_explicit_reduce_axes():
+    gf = _gf(Topology.cluster_v(nodes=8, gpus_per_node=4), 32)
+    gf.replan(Topology.from_axis_sizes(("node", "gpu"), (4, 4)),
+              num_data_shards=16, reduce_axes=("pod", "data"))
+    assert gf.cfg.reduce_axes == ("pod", "data")
+    assert gf.plan().reduce_axes == ("pod", "data")
+
+
+def test_replan_retunes_theta():
+    """θ is topology-dependent (auto_bucket prices buckets against the
+    fabric); a drastic shrink must be allowed to pick a new θ, and the
+    lazy bounds must retile the pool exactly either way."""
+    gf = _gf(Topology.cluster_v(nodes=64, gpus_per_node=8), 512)
+    gf.replan(Topology.from_axis_sizes(("data",), (2,)),
+              num_data_shards=2)
+    plan = gf.plan()
+    plan.validate()
+    assert plan.tasks[-1].end == gf.pool.size
+
+
+def test_engine_plan_for_routes_through_cache():
+    from repro.configs.base import OptimizerConfig
+    from repro.core.engine import OverlapEngine
+
+    gf = _gf(Topology.cluster_v(nodes=8, gpus_per_node=4), 32)
+    eng = OverlapEngine(gf, "momentum_sgd",
+                        OptimizerConfig(name="momentum_sgd"))
+    p1 = eng.plan_for()
+    assert p1 is gf.plan()
+    eng.replan(Topology.cluster_v(nodes=4, gpus_per_node=4),
+               num_data_shards=16)
+    p2 = eng.plan_for()
+    assert p2.plan_key != p1.plan_key
+    assert p2.num_data_shards == 16
+
+
+# -- trainer wiring -----------------------------------------------------------
+
+
+def test_trainer_replan_recompiles_step_plan():
+    """Trainer.replan rewires the engine for a new topology and the
+    rebuilt step still trains (single-device smoke)."""
+    from repro.configs import get_smoke
+    from repro.configs.base import (OptimizerConfig, TrainConfig)
+    from repro.data.synthetic import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.trainer import Trainer
+    from repro.parallel.collectives import compat_set_mesh
+
+    model_cfg, rules = get_smoke("smollm-135m")
+    cfg = TrainConfig(
+        model=model_cfg,
+        gradientflow=GradientFlowConfig(mode="lazy", bucket_elems=4096,
+                                        wire_dtype="float32",
+                                        warmup_steps=0),
+        optimizer=OptimizerConfig(name="momentum_sgd", learning_rate=0.1,
+                                  momentum=0.9, total_steps=4),
+        seq_len=32, global_batch=2, attn_chunk=0, seed=0)
+    mesh = make_host_mesh()
+    trainer = Trainer(cfg, mesh, rules)
+    data = SyntheticLM(model_cfg.vocab_size, seed=0)
+    key_before = trainer.gf.plan_cache_key()
+    with compat_set_mesh(mesh):
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        step = trainer.build_train_step()
+        state, m1 = step(state, jax.device_put(data.batch(0, 2, 32)))
+        # Elastic event: same live mesh, new modeled topology (the mesh
+        # shrank elsewhere; this process keeps its single device).
+        trainer.replan(topology=Topology.from_axis_sizes(("data",), (4,)))
+        key_after = trainer.gf.plan_cache_key()
+        assert key_after != key_before
+        plan = trainer.engine.plan_for()
+        plan.validate()
+        assert plan.plan_key == key_after
+        # reduce_axes must remain the LIVE mesh axis names
+        assert trainer.gf.cfg.reduce_axes == trainer.data_axes
+        step = trainer.build_train_step()   # old trace embeds old plan
+        state, m2 = step(state, jax.device_put(data.batch(1, 2, 32)))
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+
+
+def test_trainer_replan_with_new_mesh_updates_data_axes():
+    """Handing replan an actual Mesh re-derives data axes, shard count,
+    topology, and param shardings from it."""
+    from jax.sharding import Mesh
+
+    from repro.configs import get_smoke
+    from repro.configs.base import OptimizerConfig, TrainConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.trainer import Trainer
+
+    model_cfg, rules = get_smoke("smollm-135m")
+    cfg = TrainConfig(
+        model=model_cfg,
+        gradientflow=GradientFlowConfig(mode="lazy", warmup_steps=0,
+                                        wire_dtype="float32"),
+        optimizer=OptimizerConfig(name="momentum_sgd"),
+        seq_len=32, global_batch=2, attn_chunk=0)
+    trainer = Trainer(cfg, make_host_mesh(), rules)
+    key_before = trainer.gf.plan_cache_key()
+    devs = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    new = Mesh(devs, ("pod", "data", "model"))
+    trainer.replan(mesh=new)
+    assert trainer.mesh is new
+    assert trainer.data_axes == ("pod", "data")
+    assert trainer.num_data == 1
+    assert trainer.gf.cfg.reduce_axes == ("pod", "data")
+    # key reflects the new two-level (pod, data) topology
+    assert trainer.gf.plan_cache_key() != key_before
+    trainer.engine.plan_for().validate()
+
+
+# -- replanned plan executes on a real (placeholder) mesh ---------------------
+
+
+@pytest.mark.slow
+def test_replanned_plan_executes_on_shrunken_mesh():
+    """Build the backend for a 8-shard topology, replan onto the 4-shard
+    mesh that actually exists, and execute the recompiled plan's bucket
+    collectives: the staged concat must equal the flat psum — the plan
+    compiled by replan is the one that runs, and it is correct."""
+    run_multi_device("""
+        from repro.configs.base import GradientFlowConfig
+        from repro.core.gradientflow import GradientFlow
+        from repro.core.pool import GradientPool
+        from repro.core import lazy_allreduce as lazy_mod
+        from repro.parallel.topology import Topology
+
+        pool = GradientPool({"a": jnp.zeros((3000,)),
+                             "b": jnp.zeros((500,))})
+        cfg = GradientFlowConfig(mode="lazy", wire_dtype="float32",
+                                 warmup_steps=0, bucket_elems=1024,
+                                 auto_bucket=True,
+                                 topology=Topology.flat("data", 8),
+                                 reduce_axes=("data",),
+                                 collective_algo="auto")
+        gf = GradientFlow(cfg, pool, num_data_shards=8)
+        old_key = gf.plan().plan_key
+        gf.replan(Topology.flat("data", N), num_data_shards=N)
+        plan = gf.plan()
+        plan.validate()
+        assert plan.plan_key != old_key
+        assert plan.num_data_shards == N
+
+        mesh = compat_make_mesh((N,), ("data",))
+        def f(g):
+            outs = [lazy_mod.reduce_bucket(g, t.start, t.end,
+                                           plan.reduce_axes, None,
+                                           algo=t.algo)
+                    for t in plan.tasks]
+            staged = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+            flat = jax.lax.psum(g, "data")
+            return staged, flat
+        sm = smap(f, mesh, P("data"), (P(None), P(None)), {"data"})
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=N * pool.size), jnp.float32)
+        with compat_set_mesh(mesh):
+            staged, flat = jax.jit(sm)(g)
+        np.testing.assert_allclose(np.asarray(staged), np.asarray(flat),
+                                   rtol=1e-6, atol=1e-6)
+        print("replanned-plan-exec-ok")
+    """, devices=4)

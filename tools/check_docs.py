@@ -35,7 +35,8 @@ REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
                    "--kernel-check", "BENCH_kernels.json",
                    "pallas_ring", "exchange_steps", "wire_bytes_per_step",
                    "--overlap-check", "BENCH_overlap.json",
-                   "StepPlan", "overlap", "exposed-comm")
+                   "StepPlan", "overlap", "exposed-comm",
+                   "replan", "--soak", "BENCH_soak.json")
 
 
 def module_resolves(dotted: str) -> bool:
