@@ -664,11 +664,27 @@ def check_soak_regression(baseline_path: str) -> int:
                 f"{where}: staged finish {e['predicted_step_after_s']} "
                 f"lost to monolithic {e['monolithic_after_s']} on the "
                 "shrunken mesh")
+    guard = cur.get("guard")
+    if not guard:
+        failures.append("soak trace has no guard section (guard lane "
+                        "not run)")
+    else:
+        for mode in ("lazy", "csc"):
+            tt = guard[mode]["truth_table"]
+            for kind, row in tt["classes"].items():
+                if row["caught"] != row["injected"]:
+                    failures.append(
+                        f"soak guard[{mode}]: {kind} caught "
+                        f"{row['caught']}/{row['injected']}")
+            if tt["false_trips"]:
+                failures.append(f"soak guard[{mode}]: "
+                                f"{tt['false_trips']} false trip(s)")
     # The trace is pure-python control flow + cost-model arithmetic —
-    # machine independent — so any drift means the schedule, the
+    # machine independent (the guard lane records only ints/bools/
+    # power-of-two floats) — so any drift means the schedule, the
     # controller, or the model changed and the committed baseline must be
     # refreshed alongside.
-    for section in ("config", "schedule", "events", "final"):
+    for section in ("config", "schedule", "events", "guard", "final"):
         if cur[section] != base.get(section):
             failures.append(
                 f"soak trace section {section!r} drifted from baseline "
@@ -681,6 +697,269 @@ def check_soak_regression(baseline_path: str) -> int:
               f"{fin['elastic_events']} elastic events "
               f"({fin['event_kinds']}), {fin['restarts_consumed']} "
               f"restarts, final plan {fin['final_plan_key']}")
+    return 1 if failures else 0
+
+
+# -- numeric guard gate (detection truth table + zero-extra-collectives) -----
+
+# 4 ranks, a few odd-sized tensors (pool padded to the CSC chunk); both
+# wire modes are traced guarded AND unguarded and their collective
+# primitive counts must match exactly.
+GUARD_DEVICES = 4
+GUARD_SHAPES = [(777,), (1281,), (2049,)]
+
+_GUARD_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+import sys, json, re
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import (GradientFlowConfig, GuardConfig,
+                                OptimizerConfig)
+from repro.core.engine import OverlapEngine
+from repro.core.gradientflow import GradientFlow
+from repro.core.pool import GradientPool
+from repro.optim import scaler as scaler_mod
+from repro.optim import sgd
+from repro.parallel.collectives import (compat_make_mesh, compat_set_mesh,
+                                        compat_shard_map)
+
+N = {devices}
+COLL = re.compile(
+    r"(psum|ppermute|all_gather|all_to_all|reduce_scatter)\\[")
+out = {{}}
+for mode in ("lazy", "csc"):
+    params = {{f"t{{i}}": jnp.zeros(s, jnp.float32)
+              for i, s in enumerate({shapes!r})}}
+    pool = GradientPool(params, pad_to=64 if mode == "csc" else 1)
+    cfg = GradientFlowConfig(mode=mode, bucket_elems=2048, chunk_elems=64,
+                             sparsity=0.5, warmup_steps=0,
+                             wire_dtype="bfloat16", reduce_axes=("data",),
+                             collective_algo="flat", overlap="staged",
+                             guard=GuardConfig())
+    gf = GradientFlow(cfg, pool, num_data_shards=N)
+    eng = OverlapEngine(gf, "momentum_sgd",
+                        OptimizerConfig(name="momentum_sgd"))
+    plan = eng.plan_for()
+    mesh = compat_make_mesh((N,), ("data",))
+    gdtype = jnp.float32 if mode == "csc" else jnp.bfloat16
+
+    def unguarded(gpool, mom):
+        st = sgd.SGDState(momentum=mom)
+        p2, o2, g2 = eng.run(plan, gpool, params, st, gf.init_state(),
+                             0.1)
+        return jax.tree_util.tree_leaves(p2)[0], o2.momentum
+
+    def guarded(gpool, mom, sc):
+        st = sgd.SGDState(momentum=mom)
+        p2, o2, g2, sc2, flags = eng.run_guarded(
+            plan, gpool, params, st, gf.init_state(), sc, 0.1)
+        return jax.tree_util.tree_leaves(p2)[0], o2.momentum, sc2
+
+    gpool = jnp.zeros((N * pool.size,), gdtype)
+    mom = jnp.zeros((pool.size,), jnp.float32)
+    sc = scaler_mod.init(cfg.guard)
+    with compat_set_mesh(mesh):
+        sm_u = compat_shard_map(unguarded, mesh=mesh,
+                                in_specs=(P("data"), P(None)),
+                                out_specs=(P(None), P(None)),
+                                axis_names={{"data"}}, check_vma=False)
+        sm_g = compat_shard_map(guarded, mesh=mesh,
+                                in_specs=(P("data"), P(None), P()),
+                                out_specs=(P(None), P(None), P()),
+                                axis_names={{"data"}}, check_vma=False)
+        ju = str(jax.make_jaxpr(sm_u)(gpool, mom))
+        jg = str(jax.make_jaxpr(sm_g)(gpool, mom, sc))
+    cu, cg = {{}}, {{}}
+    for m in COLL.finditer(ju):
+        cu[m.group(1)] = cu.get(m.group(1), 0) + 1
+    for m in COLL.finditer(jg):
+        cg[m.group(1)] = cg.get(m.group(1), 0) + 1
+    out[mode] = {{"unguarded": cu, "guarded": cg,
+                 "extra": sum(cg.values()) - sum(cu.values())}}
+print(json.dumps(out))
+"""
+
+
+def _guard_collectives() -> Dict:
+    """Subprocess (placeholder multi-device mesh) tracing the guarded and
+    unguarded engine steps and counting collective primitives in each
+    jaxpr — the proof the in-band health flags ride the collectives
+    already issued: the counts must be IDENTICAL."""
+    import subprocess
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    script = _GUARD_SCRIPT.format(devices=GUARD_DEVICES, src=src,
+                                  shapes=GUARD_SHAPES)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"guard bench subprocess failed:\n{proc.stdout}\n"
+            f"{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _census_flags_overhead(measure_time: bool) -> Dict:
+    """Deriving HealthFlags from the census the PR-3 single-pass pack
+    already emits, vs that pack alone, on the AlexNet pool: the HLO op
+    delta (a handful of scalar reductions/compares — no pool-sized pass,
+    no collective) and optionally wall time."""
+    from repro.configs.base import GuardConfig
+    from repro.core import guard as guard_mod
+
+    grads = {f"t{i}": jnp.ones(s, jnp.float32)
+             for i, s in enumerate(ALEXNET_GRAD_SHAPES)}
+    pool = GradientPool(grads, pad_to=CHUNK)
+    staging0 = jnp.zeros((pool.size,), jnp.float32)
+    limit = guard_mod.overflow_limit(GuardConfig(), "bfloat16")
+
+    def pack_only(staging, g):
+        return pool.pack_into(staging, g, dtype=jnp.bfloat16,
+                              norms_chunk=CHUNK)
+
+    def pack_flags(staging, g):
+        p, norms, staging = pool.pack_into(staging, g, dtype=jnp.bfloat16,
+                                           norms_chunk=CHUNK)
+        flags = guard_mod.flags_from_census(norms, limit)
+        return p, norms, staging, flags.nonfinite, flags.overflow
+
+    base_ops = hlo_op_counts(pack_only, staging0, grads, donate=(0,))
+    flag_ops = hlo_op_counts(pack_flags, staging0, grads, donate=(0,))
+    out = {
+        "pool_elems": pool.size,
+        "pack_total_ops": base_ops["total_ops"],
+        "pack_plus_flags_total_ops": flag_ops["total_ops"],
+        "extra_ops": flag_ops["total_ops"] - base_ops["total_ops"],
+    }
+    if measure_time:
+        out["pack_wall_us"] = timeit(
+            jax.jit(lambda g: pool.pack_into(staging0, g,
+                                             dtype=jnp.bfloat16,
+                                             norms_chunk=CHUNK)[:2]),
+            grads, warmup=1, iters=5)
+        out["pack_plus_flags_wall_us"] = timeit(
+            jax.jit(lambda g: pack_flags(staging0, g)[3:]), grads,
+            warmup=1, iters=5)
+    return out
+
+
+def guard_bench(measure_time: bool = True) -> Dict:
+    """The numeric guard rail's gated surfaces:
+
+    * detection truth table — the real-numeric ``GuardLane`` (both wire
+      modes) against one injected fault of each data-plane class: every
+      fault must trip the in-band verdict AND leave the state
+      bit-identical (the atomic skip);
+    * zero false trips — a clean 100-step lane run: no rejection, no
+      skip, only the scheduled loss-scale growth;
+    * zero extra collectives — guarded vs unguarded engine jaxprs on a
+      4-rank mesh must contain identical collective primitive counts;
+    * census overhead — flags-from-census vs the PR-3 pack baseline on
+      the AlexNet pool (HLO op delta; wall time informational).
+    """
+    from repro.runtime.faults import FaultEvent, GuardLane, truth_table
+
+    faults = (FaultEvent(step=4, kind="nan", offset=8, width=4),
+              FaultEvent(step=9, kind="overflow", offset=40, width=4),
+              FaultEvent(step=14, kind="bitflip", offset=100, width=6))
+    tt = {}
+    for mode in ("lazy", "csc"):
+        recs = GuardLane(mode=mode).run(20, faults)
+        tt[mode] = truth_table(recs)
+    clean = GuardLane().run(100, ())
+    clean_tt = truth_table(clean)
+    scales = [r["scale"] for r in clean]
+    return {
+        "jax_version": jax.__version__,
+        "fault_schedule": [
+            {"step": f.step, "kind": f.kind, "offset": f.offset,
+             "width": f.width} for f in faults],
+        "truth_table": tt,
+        "clean_run": {
+            "steps": len(clean),
+            "false_trips": clean_tt["false_trips"],
+            "skipped": clean[-1]["skipped"],
+            "final_scale": scales[-1],
+            "growth_events": sum(1 for a, b in zip(scales, scales[1:])
+                                 if b > a),
+        },
+        "collectives": _guard_collectives(),
+        "census_overhead": _census_flags_overhead(measure_time),
+    }
+
+
+def check_guard_regression(baseline_path: str) -> int:
+    """CI gate: fail (exit 1) if any injected fault class escapes
+    detection (or a rejected step mutates state), a clean 100-step run
+    false-trips, the guarded step launches even one collective more than
+    the unguarded step, or the machine-independent sections drift from
+    the committed BENCH_guard.json without a refresh."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    cur = guard_bench(measure_time=False)
+    failures = []
+    for mode in ("lazy", "csc"):
+        classes = cur["truth_table"][mode]["classes"]
+        for kind in ("nan", "overflow", "bitflip"):
+            row = classes.get(kind)
+            if row is None:
+                failures.append(f"{mode}: fault class {kind!r} not "
+                                "exercised")
+            elif row["caught"] != row["injected"]:
+                failures.append(
+                    f"{mode}: {kind} caught {row['caught']}/"
+                    f"{row['injected']} (undetected fault or "
+                    "non-atomic skip)")
+        if cur["truth_table"][mode]["false_trips"]:
+            failures.append(
+                f"{mode}: {cur['truth_table'][mode]['false_trips']} "
+                "false trip(s) on clean steps of the faulted run")
+    cr = cur["clean_run"]
+    if cr["false_trips"] or cr["skipped"]:
+        failures.append(
+            f"clean 100-step run tripped: false_trips="
+            f"{cr['false_trips']} skipped={cr['skipped']}")
+    for mode in ("lazy", "csc"):
+        col = cur["collectives"][mode]
+        if col["extra"] != 0:
+            failures.append(
+                f"{mode}: guarded step launches {col['extra']} extra "
+                f"collective(s): {col['guarded']} vs {col['unguarded']}")
+    # Truth table + clean run are ints/bools/power-of-two floats —
+    # machine-independent — so drift always means a behavior change.
+    for section in ("fault_schedule", "truth_table", "clean_run"):
+        if cur[section] != base.get(section):
+            failures.append(
+                f"guard section {section!r} drifted from baseline "
+                "(refresh BENCH_guard.json if intentional): "
+                f"{cur[section]} != {base.get(section)}")
+    same_jax = base.get("jax_version") == jax.__version__
+    if same_jax:
+        if cur["collectives"] != base.get("collectives"):
+            failures.append(
+                f"collective counts drifted: {cur['collectives']} != "
+                f"baseline {base.get('collectives')} (refresh "
+                "BENCH_guard.json if intentional)")
+        cur_extra = cur["census_overhead"]["extra_ops"]
+        base_extra = base.get("census_overhead", {}).get("extra_ops")
+        if cur_extra != base_extra:
+            failures.append(
+                f"census flag op delta drifted: {cur_extra} != baseline "
+                f"{base_extra} (refresh BENCH_guard.json if intentional)")
+    else:
+        print(f"guard bench: baseline from jax "
+              f"{base.get('jax_version', '<unrecorded>')}, running "
+              f"{jax.__version__} — HLO/jaxpr-count drift comparison "
+              "skipped (structural gates still enforced)")
+    for msg in failures:
+        print(f"GUARD BENCH REGRESSION: {msg}")
+    if not failures:
+        print(f"guard bench OK: truth_table={cur['truth_table']} "
+              f"clean={cr} collectives_extra=0 "
+              f"census_extra_ops={cur['census_overhead']['extra_ops']}")
     return 1 if failures else 0
 
 
@@ -851,8 +1130,30 @@ def main() -> int:
                          "fired, and the deterministic trace matches the "
                          "committed BENCH_soak.json; exit 1 on "
                          "regression")
+    ap.add_argument("--guard-json", metavar="PATH",
+                    help="run the numeric-guard benchmark (fault "
+                         "detection truth table, clean-run false-trip "
+                         "scan, guarded-vs-unguarded collective counts, "
+                         "census overhead) and write the baseline JSON")
+    ap.add_argument("--guard-check", action="store_true",
+                    help="guard gate: assert every injected fault class "
+                         "is caught with a bit-identical skip, a clean "
+                         "100-step run never trips, the guarded step "
+                         "adds ZERO collectives (jaxpr-counted), and the "
+                         "truth table matches the committed "
+                         "BENCH_guard.json; exit 1 on regression")
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if args.guard_check:
+        return check_guard_regression(
+            os.path.join(root, "BENCH_guard.json"))
+    if args.guard_json:
+        res = guard_bench(measure_time=True)
+        with open(args.guard_json, "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
+        print(json.dumps(res, indent=2))
+        return 0
     if args.pool_check:
         return check_pool_regression(os.path.join(root, "BENCH_pool.json"))
     if args.kernel_check:

@@ -14,9 +14,16 @@ Design choices for scale:
 * **Atomic**: write into ``.tmp`` then ``os.rename`` — a crash mid-write
   never corrupts the latest checkpoint; restore picks the newest complete.
 * **Retention**: keeps the last ``keep`` checkpoints.
+* **Integrity**: the manifest stores a per-leaf SHA-256; ``restore``
+  verifies every leaf and, when no explicit step is requested, walks
+  back to the newest checkpoint that is both readable and
+  checksum-clean (``CheckpointCorrupt`` names the first mismatch) —
+  a truncated/bit-rotted ``arrays.npz`` is skipped, never loaded as
+  garbage state.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -25,6 +32,15 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(Exception):
+    """A checkpoint directory exists but fails integrity verification
+    (unreadable archive, missing leaves, or a SHA-256 mismatch)."""
+
+
+def _sha256(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
 
 
 def _leaf_names(tree: Any) -> List[str]:
@@ -63,7 +79,7 @@ class CheckpointManager:
         manifest = {
             "step": int(step),
             "leaves": [{"name": n, "shape": list(a.shape),
-                        "dtype": str(a.dtype)}
+                        "dtype": str(a.dtype), "sha256": _sha256(a)}
                        for n, a in zip(names, host)],
         }
 
@@ -124,18 +140,59 @@ class CheckpointManager:
         steps = self.available_steps()
         return steps[-1] if steps else None
 
+    def _load_verified(self, step: int) -> Tuple[Dict, List[np.ndarray]]:
+        """Read one checkpoint and verify every leaf against its manifest
+        SHA-256. Any read failure or checksum mismatch raises
+        ``CheckpointCorrupt`` (manifests predating the checksum field
+        skip verification for that leaf)."""
+        path = os.path.join(self.directory, f"step_{step}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(path, "arrays.npz"))
+            leaves = [data[f"leaf_{i}"]
+                      for i in range(len(manifest["leaves"]))]
+        except CheckpointCorrupt:
+            raise
+        except Exception as e:
+            raise CheckpointCorrupt(
+                f"step {step}: unreadable ({type(e).__name__}: {e})") from e
+        for a, meta in zip(leaves, manifest["leaves"]):
+            want = meta.get("sha256")
+            if want is not None and _sha256(a) != want:
+                raise CheckpointCorrupt(
+                    f"step {step}: leaf {meta['name']} SHA-256 mismatch")
+        return manifest, leaves
+
     def restore(self, like: Any, step: Optional[int] = None
                 ) -> Tuple[int, Any]:
-        """Restore into the structure of ``like`` (values replaced)."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        path = os.path.join(self.directory, f"step_{step}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(path, "arrays.npz"))
-        leaves = [data[f"leaf_{i}"] for i in range(len(manifest["leaves"]))]
+        """Restore into the structure of ``like`` (values replaced).
+
+        ``step=None`` walks the available checkpoints newest-first and
+        loads the first one that verifies — a corrupt latest checkpoint
+        (truncated archive, flipped bits) is skipped, not loaded. An
+        explicit ``step`` is strict: corruption raises
+        ``CheckpointCorrupt``."""
+        if step is not None:
+            manifest, leaves = self._load_verified(step)
+        else:
+            steps = self.available_steps()
+            if not steps:
+                raise FileNotFoundError(
+                    f"no checkpoints in {self.directory}")
+            last_err: Optional[CheckpointCorrupt] = None
+            manifest = None
+            for cand in reversed(steps):
+                try:
+                    manifest, leaves = self._load_verified(cand)
+                    step = cand
+                    break
+                except CheckpointCorrupt as e:
+                    last_err = e
+            if manifest is None:
+                raise CheckpointCorrupt(
+                    f"no valid checkpoint in {self.directory} "
+                    f"(last error: {last_err})")
         treedef = jax.tree_util.tree_structure(like)
         want = jax.tree_util.tree_leaves(like)
         assert len(want) == len(leaves), (

@@ -97,6 +97,36 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Numeric guard rail: in-band gradient health detection + dynamic
+    loss scaling with a guarded (all-or-nothing) step commit.
+
+    Detection derives from the chunk-L1 census the reduce path already
+    produces: a NaN/Inf census entry means a poisoned chunk; a finite
+    census magnitude at ``overflow_fraction`` of the wire dtype's max
+    means the mixed-precision wire is about to saturate. Either verdict
+    rejects the whole step atomically (params, momentum, and the CSC hg
+    residual stay bit-identical) and backs the loss scale off; a clean
+    streak of ``growth_interval`` steps grows it back.
+    """
+
+    # Initial loss scale. 1.0 makes a guarded run bit-identical to the
+    # unguarded one until something trips (the equivalence tests pin
+    # this); mixed-precision production runs start high (e.g. 2**15).
+    init_scale: float = 2.0 ** 15
+    growth_interval: int = 2000
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+    # Overflow-risk threshold as a fraction of finfo(wire_dtype).max.
+    # 2^-9 sits far above any legitimate census sum yet low enough to
+    # catch an exponent-MSB bit flip of a wire word in [2^-8, 2) —
+    # the detectable envelope runtime/faults.py injects into.
+    overflow_fraction: float = 1.0 / 512.0
+
+
+@dataclasses.dataclass(frozen=True)
 class GradientFlowConfig:
     """Configuration of the paper's communication backend.
 
@@ -152,10 +182,18 @@ class GradientFlowConfig:
     overlap: str = "staged"
     # Use Pallas fused kernels where available (CPU falls back to ref).
     use_kernels: bool = False
+    # Numeric guard rail (None => unguarded, the pre-guard behavior):
+    # in-band health flags from the chunk-L1 census, dynamic loss
+    # scaling, and the atomic lax.cond step commit (repro.core.guard).
+    guard: Optional[GuardConfig] = None
 
     @property
     def csc_enabled(self) -> bool:
         return self.mode == "csc"
+
+    @property
+    def guarded(self) -> bool:
+        return self.guard is not None
 
 
 @dataclasses.dataclass(frozen=True)

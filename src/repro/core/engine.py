@@ -239,6 +239,174 @@ class OverlapEngine:
             mask=None)
         return new_params, opt2, gfstate
 
+    def run_guarded(self, plan: StepPlan, gpool, params_tree, opt_state,
+                    gfstate, scaler_state, lr):
+        """Guard-railed twin of ``run``: the same collectives, in the same
+        order, plus the census-derived health verdict and ONE atomic
+        commit. Every bucket's reduce is issued first (they still overlap
+        each other and the backward release schedule); the combined
+        per-bucket health words then gate the whole update stage through a
+        single ``lax.cond`` — so no bucket's update can commit when any
+        other bucket (earlier OR later) trips, and a rejected step leaves
+        params, momentum, and the CSC hg residual bit-identical while only
+        the scaler state advances.
+
+        ``gpool`` arrives scaled by ``scaler_state.scale`` (the fwd region
+        scaled the loss): dense/lazy keep the scaled values on the wire
+        (that is the point — small gradients survive the bf16 cast) and
+        unscale the reduced mean before the update; CSC unscales at entry
+        so the hg residual stays scale-invariant across backoffs.
+
+        Returns (new_params_tree, new_opt_state, new_gfstate,
+        new_scaler_state, HealthFlags)."""
+        from repro.core import guard as guard_mod
+        from repro.optim import scaler as scaler_mod
+
+        cfg = self.gf.cfg
+        gcfg = cfg.guard
+        assert gcfg is not None, "run_guarded needs GradientFlowConfig.guard"
+        limit = guard_mod.overflow_limit(gcfg, cfg.wire_dtype)
+        master, _ = self.pool.pack(params_tree, dtype=jnp.float32,
+                                   use_kernels=cfg.use_kernels)
+        if cfg.mode == "csc" and not plan.warmup:
+            out = self._guarded_csc(plan, gpool, master, params_tree,
+                                    opt_state, gfstate, scaler_state, lr,
+                                    limit)
+        elif cfg.mode == "csc":
+            out = self._guarded_csc_warmup(plan, gpool, master, params_tree,
+                                           opt_state, gfstate, scaler_state,
+                                           lr, limit)
+        else:
+            out = self._guarded_pool(plan, gpool, master, params_tree,
+                                     opt_state, gfstate, scaler_state, lr,
+                                     limit)
+        new_params, opt2, gf2, flags = out
+        new_scaler = scaler_mod.update(scaler_state,
+                                       ~guard_mod.tripped(flags), gcfg)
+        return new_params, opt2, gf2, new_scaler, flags
+
+    def _guarded_pool(self, plan, gpool, master, params_tree, opt_state,
+                      gfstate, scaler_state, lr, limit):
+        """Dense/lazy guarded stage: reduce every bucket (the pool is
+        prepacked in the wire dtype, scaled), derive each bucket's in-band
+        health word from its reduced segment — the allreduce already mixed
+        every shard, so the verdict is globally consistent with zero extra
+        collectives — then commit or skip the whole update sweep."""
+        from repro.core import guard as guard_mod
+
+        segs = []
+        for task in plan.tasks:
+            segs.append(lazy_mod.reduce_bucket(
+                gpool, task.start, task.end, plan.reduce_axes, None,
+                algo=task.algo) / plan.num_data_shards)
+        flags = guard_mod.flags_from_words(
+            [guard_mod.health_word(s) for s in segs], limit)
+        scale = scaler_state.scale
+
+        def commit():
+            outs = [self._update_span(t.update_span, segs[t.index] / scale,
+                                      master, opt_state, lr, None)
+                    for t in plan.tasks]
+            return self._assemble(outs)
+
+        new_params, opt2 = guard_mod.guarded_commit(
+            ~guard_mod.tripped(flags), commit, (params_tree, opt_state))
+        return new_params, opt2, gfstate, flags
+
+    def _guarded_csc(self, plan, gpool, master, params_tree, opt_state,
+                     gfstate, scaler_state, lr, limit):
+        """Sparse CSC guarded stage: same reduce_i ∥ scatter_{i-1}
+        pipeline and the same two census collectives as ``_run_csc``; the
+        chunk-selection census doubles as the health channel (NaN/Inf
+        anywhere in the post-reduce pool — wire-reduced chunks and the
+        locally-kept hg side alike — taints its chunk's allreduced L1).
+        On a trip the hg residual and the norm census keep their pre-step
+        values, so Algorithm 1 conservation holds across the skip."""
+        from repro.core import guard as guard_mod
+        from repro.core.gradientflow import GFState
+
+        cfg = self.gf.cfg
+        chunk = plan.chunk_elems
+        g = gpool.astype(jnp.float32) / scaler_state.scale + gfstate.hg
+        idx, chunk_mask = csc_mod.select_chunks(gfstate.chunk_norms,
+                                                plan.num_selected)
+        elem_mask = jnp.repeat(chunk_mask, chunk)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            wire = kops.csc_compact(g, idx, chunk)
+        else:
+            wire = csc_mod.compact_chunks(g, idx, chunk)
+
+        g_out, g_update = g, jnp.zeros(g.shape, g.dtype)
+        pending = None
+        for task in plan.tasks:
+            red = lazy_mod.reduce_bucket(
+                wire, task.start, task.end, plan.reduce_axes,
+                cfg.wire_dtype, algo=task.algo) / plan.num_data_shards
+            if pending is not None:
+                g_out, g_update = self._scatter_task(
+                    g_out, g_update, pending[0], pending[1], idx, chunk)
+            pending = (task, red)
+        g_out, g_update = self._scatter_task(g_out, g_update, pending[0],
+                                             pending[1], idx, chunk)
+
+        hg_new = jnp.where(elem_mask, 0.0,
+                           cfg.momentum * g_out).astype(gfstate.hg.dtype)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            l1 = kops.chunk_l1norm(g_out, chunk)
+        else:
+            l1 = csc_mod.chunk_l1_norms(g_out, chunk)
+        norms_new = reduce_pool(l1, plan.reduce_axes)
+        flags = guard_mod.flags_from_census(norms_new, limit)
+
+        def commit():
+            outs = [self._update_span(span, _seg(g_update, *span), master,
+                                      opt_state, lr, elem_mask)
+                    for span in plan.update_spans]
+            new_params, opt2 = self._assemble(outs)
+            return new_params, opt2, GFState(hg=hg_new,
+                                             chunk_norms=norms_new)
+
+        new_params, opt2, gf2 = guard_mod.guarded_commit(
+            ~guard_mod.tripped(flags), commit,
+            (params_tree, opt_state, gfstate))
+        return new_params, opt2, gf2, flags
+
+    def _guarded_csc_warmup(self, plan, gpool, master, params_tree,
+                            opt_state, gfstate, scaler_state, lr, limit):
+        """CSC dense warm-up, guarded: lazy-bucket reduces of the
+        hg-corrected (unscaled) pool, the norm-census refresh as the
+        health channel, one atomic commit of update + census + hg."""
+        from repro.core import guard as guard_mod
+        from repro.core.gradientflow import GFState
+        from repro.parallel.sharding import match_vma
+
+        cfg = self.gf.cfg
+        g = gpool.astype(jnp.float32) / scaler_state.scale + gfstate.hg
+        segs = []
+        for task in plan.tasks:
+            segs.append(lazy_mod.reduce_bucket(
+                g, task.start, task.end, plan.reduce_axes, cfg.wire_dtype,
+                algo=task.algo) / plan.num_data_shards)
+        mean = segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+        l1 = csc_mod.chunk_l1_norms(mean, cfg.chunk_elems)
+        norms = reduce_pool(l1, plan.reduce_axes)
+        flags = guard_mod.flags_from_census(norms, limit)
+        hg_new = match_vma(jnp.zeros_like(gfstate.hg), gpool)
+
+        def commit():
+            outs = [self._update_span(t.update_span, segs[t.index], master,
+                                      opt_state, lr, None)
+                    for t in plan.tasks]
+            new_params, opt2 = self._assemble(outs)
+            return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms)
+
+        new_params, opt2, gf2 = guard_mod.guarded_commit(
+            ~guard_mod.tripped(flags), commit,
+            (params_tree, opt_state, gfstate))
+        return new_params, opt2, gf2, flags
+
     # -- dense / lazy ---------------------------------------------------------
 
     def _run_pool_pipeline(self, plan, gpool, master, opt_state, lr, *,

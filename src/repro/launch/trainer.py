@@ -62,6 +62,7 @@ from repro.models.registry import input_specs as model_input_specs
 from repro.optim import abstract_state as opt_abstract_state
 from repro.optim import init_state as opt_init_state
 from repro.optim import update_unpack as opt_update_unpack
+from repro.optim import scaler as scaler_mod
 from repro.optim.lars import LARSScaler
 from repro.optim.schedules import lr_at
 from repro.parallel import sharding as sh
@@ -74,6 +75,11 @@ class TrainState(NamedTuple):
     opt: Any      # pool-space optimizer state; P('model')
     gf: GFState   # GradientFlow state; P('model')
     step: jax.Array
+    # Loss-scaler state (repro.optim.scaler.ScalerState) when the numeric
+    # guard is enabled (GradientFlowConfig.guard); the empty tuple — zero
+    # pytree leaves — otherwise, so unguarded states, their checkpoints,
+    # and positional construction all predate-compatibly ignore it.
+    guard: Any = ()
 
 
 _pvary = compat_pvary
@@ -201,11 +207,15 @@ class Trainer:
             lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                            sharding=self._pool_sharding()),
             opt_abstract_state(self.opt_name, self.global_pool))
+        rep = NamedSharding(self.mesh, P())
+        guard = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
+            scaler_mod.abstract(self.gf_cfg.guard)) \
+            if self.gf_cfg.guarded else ()
         return TrainState(
             params=params, opt=opt, gf=self._gf_abstract(),
-            step=jax.ShapeDtypeStruct((), jnp.int32,
-                                      sharding=NamedSharding(self.mesh,
-                                                             P())))
+            step=jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+            guard=guard)
 
     def init_state(self, key: jax.Array) -> TrainState:
         with compat_set_mesh(self.mesh):
@@ -233,8 +243,10 @@ class Trainer:
             else:
                 gf = GFState(hg=jnp.zeros((1, 0), jnp.float32),
                              chunk_norms=jnp.zeros((0,), jnp.float32))
+            guard = scaler_mod.init(self.gf_cfg.guard) \
+                if self.gf_cfg.guarded else ()
             return TrainState(params=params, opt=opt, gf=gf,
-                              step=jnp.zeros((), jnp.int32))
+                              step=jnp.zeros((), jnp.int32), guard=guard)
 
     # -- batch specs ----------------------------------------------------------
 
@@ -267,7 +279,8 @@ class Trainer:
         return jnp.dtype(self.gf_cfg.wire_dtype) if prepacked \
             else jnp.float32
 
-    def _inner_update(self, gpool, params, opt, gfstate, lr, stage):
+    def _inner_update(self, gpool, params, opt, gfstate, lr, stage,
+                      scaler=None):
         """Runs fully manual (data+model), as the SIBLING region of the
         fwd/bwd shard_map. Everything here is local; ``gpool`` arrives
         already packed (the fwd region ravels grads into the local pool
@@ -284,6 +297,9 @@ class Trainer:
         """
         cfg = self.gf_cfg
         gf_local = GFState(hg=gfstate.hg[0], chunk_norms=gfstate.chunk_norms)
+        if scaler is not None:
+            return self._inner_update_guarded(gpool, params, opt, gf_local,
+                                              scaler, lr, stage)
         if cfg.overlap == "staged":
             plan = self.engine.plan_for(stage)
             new_params, opt2, gf2 = self.engine.run(
@@ -313,6 +329,68 @@ class Trainer:
         gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms)
         return new_params, opt2, gf2
 
+    def _inner_update_guarded(self, gpool, params, opt, gf_local, scaler,
+                              lr, stage):
+        """Guard-railed reduce+update: the SAME collectives as the
+        unguarded paths (the `--guard-check` jaxpr gate pins this), plus
+        the census-derived health verdict and one atomic ``lax.cond``
+        commit. ``gpool`` arrives scaled by ``scaler.scale`` (the fwd
+        region scaled the loss); dense/lazy unscale the reduced mean
+        while CSC unscales at entry so the hg residual stays
+        scale-invariant across backoffs. A tripped verdict rejects the
+        step — params, momentum, and hg bit-identical — and only the
+        scaler state advances."""
+        from repro.core import guard as guard_mod
+
+        cfg = self.gf_cfg
+        gcfg = cfg.guard
+        if cfg.overlap == "staged":
+            plan = self.engine.plan_for(stage)
+            new_params, opt2, gf2, sc2, _ = self.engine.run_guarded(
+                plan, gpool, params, opt, gf_local, scaler, lr)
+            return new_params, opt2, GFState(
+                hg=gf2.hg[None], chunk_norms=gf2.chunk_norms), sc2
+        assert cfg.overlap == "monolithic", cfg.overlap
+        limit = guard_mod.overflow_limit(gcfg, cfg.wire_dtype)
+        prepacked = cfg.mode in ("dense", "lazy")
+        gin = gpool if prepacked \
+            else gpool.astype(jnp.float32) / scaler.scale
+        reduced, mask, gf2 = self.gf.reduce(gin, gf_local, stage=stage,
+                                            prepacked=prepacked)
+        if cfg.csc_enabled:
+            # The allreduced chunk census (already issued for selection /
+            # warm-up tracking) IS the health channel; `reduced` is
+            # already unscaled since `gin` was.
+            flags = guard_mod.flags_from_census(gf2.chunk_norms, limit)
+            red = reduced
+        else:
+            flags = guard_mod.flags_from_words(
+                [guard_mod.health_word(reduced)], limit)
+            red = reduced / scaler.scale
+        master, _ = self.pool.pack(params, dtype=jnp.float32,
+                                   use_kernels=cfg.use_kernels)
+
+        def commit():
+            scale = ratios = None
+            if self.lars is not None:
+                r = self.lars.ratios(master, red, self.cfg.optimizer, mask)
+                if cfg.use_kernels:
+                    ratios = r
+                else:
+                    scale = self.lars.expand(r)
+            new_params, opt2 = opt_update_unpack(
+                self.opt_name, self.pool, master, red, opt, mask,
+                self.cfg.optimizer, lr, scale=scale, ratios=ratios,
+                use_kernels=cfg.use_kernels)
+            return new_params, opt2, gf2
+
+        ok = ~guard_mod.tripped(flags)
+        new_params, opt2, gf3 = guard_mod.guarded_commit(
+            ok, commit, (params, opt, gf_local))
+        sc2 = scaler_mod.update(scaler, ok, gcfg)
+        return new_params, opt2, GFState(
+            hg=gf3.hg[None], chunk_norms=gf3.chunk_norms), sc2
+
     def _update_axes(self) -> set:
         axes = set(self.data_axes)
         if "model" in self.mesh.axis_names:
@@ -320,12 +398,18 @@ class Trainer:
         return axes
 
     def build_train_step(self, stage: Optional[SparsityStage] = None,
-                         donate: bool = True):
+                         donate: bool = True, fault_hook=None):
+        """``fault_hook(gpool, step) -> gpool`` (optional) is traced into
+        the update region on the LOCAL packed pool before the reduce —
+        the data-plane fault-injection point (repro.runtime.faults): one
+        compiled program, corruption gated on the step counter, hitting
+        the real wire path rather than the analytic timeline."""
         cfg = self.cfg
         rules = self.rules
         stage = stage or self.gf.stages[-1]
         compute_dtype = jnp.dtype(cfg.model.compute_dtype)
         manual_axes = set(self.data_axes)
+        guarded = self.gf_cfg.guarded
 
         pool_spec = P("model") if self.model_size > 1 else P(None)
         opt_specs = jax.tree_util.tree_map(lambda _: pool_spec,
@@ -352,21 +436,30 @@ class Trainer:
                                       use_kernels=self.gf_cfg.use_kernels)
             return gpool
 
-        def fwd_bwd(params, batch):
+        def fwd_bwd(params, batch, *scale_arg):
+            # When guarded, the loss is multiplied by the live scaler
+            # scale BEFORE autodiff, so every gradient (and the bf16 pool
+            # pack below) carries it — small gradients survive the wire
+            # cast; the update region divides it back out.
+            loss_scale = scale_arg[0] if scale_arg else None
             params_v = jax.tree_util.tree_map(
                 lambda x: _pvary(x, self.data_axes), params)
 
             def loss_fn(p):
                 cp = jax.tree_util.tree_map(
                     lambda x: x.astype(compute_dtype), p)
-                return self.model.loss_fn(
+                loss, metrics = self.model.loss_fn(
                     cp, batch, rules=rules, remat=cfg.remat,
                     scan_layers=cfg.scan_layers, attn_chunk=cfg.attn_chunk,
                     causal_skip=cfg.causal_skip,
                     compute_dtype=compute_dtype)
+                if loss_scale is not None:
+                    loss = loss * loss_scale
+                return loss, metrics
 
             if cfg.microbatches > 1:
-                grads, metrics = self._accumulate(loss_fn, params_v, batch)
+                grads, metrics = self._accumulate(loss_fn, params_v, batch,
+                                                  loss_scale=loss_scale)
             else:
                 (_, metrics), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params_v)
@@ -389,10 +482,18 @@ class Trainer:
                 gpool = gpool[None]
             return gpool, metrics
 
-        def update_body(gpool_st, params, opt, gfstate, lr):
+        def update_body(gpool_st, params, opt, gfstate, lr, *extra):
+            # extra = (scaler?, step?) depending on guarded / fault_hook.
             gpool = gpool_st[0] if self.data_axes else gpool_st
+            i = 0
+            scaler = None
+            if guarded:
+                scaler = extra[i]
+                i += 1
+            if fault_hook is not None:
+                gpool = fault_hook(gpool, extra[i])
             return self._inner_update(gpool, params, opt, gfstate, lr,
-                                      stage)
+                                      stage, scaler=scaler)
 
         # The jit-level batch is GLOBAL; in_specs split dim 0 over the data
         # axes so each shard sees its per-shard slice.
@@ -418,8 +519,9 @@ class Trainer:
             pool_out_spec = P()
             pool_in_spec = pool_spec
 
+        fwd_in_specs = (params_in, batch_in) + ((P(),) if guarded else ())
         sm_fwd = compat_shard_map(
-            fwd_bwd, mesh=self.mesh, in_specs=(params_in, batch_in),
+            fwd_bwd, mesh=self.mesh, in_specs=fwd_in_specs,
             out_specs=(pool_out_spec, metrics_out),
             axis_names=manual_axes)
         # check_vma=False: model-replicated params flow through the
@@ -428,25 +530,47 @@ class Trainer:
         # model-invariant (GSPMD all-reduces them in the auto region) and
         # the update is deterministic, so all model shards compute
         # identical values (tested).
+        scaler_specs = jax.tree_util.tree_map(
+            lambda _: P(), scaler_mod.abstract(self.gf_cfg.guard)) \
+            if guarded else None
+        upd_in_specs = (pool_in_spec, self.param_pspecs, opt_specs,
+                        gf_specs, P())
+        upd_out_specs = (self.param_pspecs, opt_specs, gf_specs)
+        if guarded:
+            upd_in_specs = upd_in_specs + (scaler_specs,)
+            upd_out_specs = upd_out_specs + (scaler_specs,)
+        if fault_hook is not None:
+            upd_in_specs = upd_in_specs + (P(),)
         sm_update = compat_shard_map(
             update_body, mesh=self.mesh,
-            in_specs=(pool_in_spec, self.param_pspecs, opt_specs,
-                      gf_specs, P()),
-            out_specs=(self.param_pspecs, opt_specs, gf_specs),
+            in_specs=upd_in_specs, out_specs=upd_out_specs,
             axis_names=self._update_axes(), check_vma=False)
 
         def step(state: TrainState, batch):
-            gpool_st, metrics = sm_fwd(state.params, batch)
+            fwd_args = (state.params, batch)
+            if guarded:
+                fwd_args = fwd_args + (state.guard.scale,)
+            gpool_st, metrics = sm_fwd(*fwd_args)
             lr = lr_at(cfg.optimizer, state.step)
-            new_params, opt2, gf2 = sm_update(gpool_st, state.params,
-                                              state.opt, state.gf, lr)
+            upd_args = (gpool_st, state.params, state.opt, state.gf, lr)
+            if guarded:
+                upd_args = upd_args + (state.guard,)
+            if fault_hook is not None:
+                upd_args = upd_args + (state.step,)
+            out = sm_update(*upd_args)
+            if guarded:
+                new_params, opt2, gf2, sc2 = out
+            else:
+                (new_params, opt2, gf2), sc2 = out, state.guard
             return TrainState(params=new_params, opt=opt2, gf=gf2,
-                              step=state.step + 1), metrics
+                              step=state.step + 1, guard=sc2), metrics
 
         return jax.jit(step, donate_argnums=(0,) if donate else ())
 
-    def _accumulate(self, loss_fn, params_v, batch):
-        """Gradient accumulation over microbatches (scan); grads in f32."""
+    def _accumulate(self, loss_fn, params_v, batch, loss_scale=None):
+        """Gradient accumulation over microbatches (scan); grads in f32.
+        ``loss_scale`` (guarded runs) multiplies each microbatch loss
+        before autodiff; metrics stay unscaled."""
         n = self.cfg.microbatches
         split = jax.tree_util.tree_map(
             lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
@@ -469,12 +593,15 @@ class Trainer:
             cp = jax.tree_util.tree_map(
                 lambda x: x.astype(jnp.dtype(self.cfg.model.compute_dtype)),
                 p)
-            return self.model.loss_fn(
+            loss, metrics = self.model.loss_fn(
                 cp, mb, rules=self.rules, remat=self.cfg.remat,
                 scan_layers=self.cfg.scan_layers,
                 attn_chunk=self.cfg.attn_chunk,
                 causal_skip=self.cfg.causal_skip,
                 compute_dtype=jnp.dtype(self.cfg.model.compute_dtype))
+            if loss_scale is not None:
+                loss = loss * loss_scale
+            return loss, metrics
 
         (grads, metrics), _ = jax.lax.scan(body, (g0, m0), split)
         grads = jax.tree_util.tree_map(lambda g: g / n, grads)

@@ -1,0 +1,77 @@
+"""Dynamic loss scaling: the grow/backoff state machine of the numeric
+guard rail.
+
+Mixed-precision wires (bf16 ring segments, CSC's compacted chunks) trade
+dynamic range for bandwidth: small gradients flush to zero unless the
+loss is pre-scaled, and a scale pushed too high overflows the wire. The
+classic fix is a feedback loop — scale the loss by ``scale``, watch the
+reduced gradients for overflow/NaN, halve on a trip, double after a
+clean streak — and that loop must run entirely under jit (the verdict is
+a traced bool, not host data).
+
+``ScalerState`` is a 3-leaf pytree of replicated scalars so it rides in
+``TrainState`` (and through checkpoints) like any other state. ``update``
+is pure arithmetic on the traced ``ok`` verdict; every scale value it can
+produce is a power of two times ``init_scale``, so traces stay exact and
+machine-independent (the soak trace records them verbatim).
+
+The SKIP semantics live elsewhere (``repro.core.guard``): a tripped step
+must leave params, momentum, and the CSC hg residual bit-identical —
+only this state advances.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GuardConfig
+
+
+class ScalerState(NamedTuple):
+    """Replicated scalars; the only state a rejected step may change."""
+
+    scale: jax.Array         # f32[] current loss scale
+    growth_count: jax.Array  # i32[] consecutive clean steps since a change
+    skipped: jax.Array       # i32[] total guard-rejected steps (stats)
+
+
+def init(cfg: GuardConfig) -> ScalerState:
+    return ScalerState(scale=jnp.asarray(cfg.init_scale, jnp.float32),
+                       growth_count=jnp.zeros((), jnp.int32),
+                       skipped=jnp.zeros((), jnp.int32))
+
+
+def abstract(cfg: GuardConfig) -> ScalerState:
+    del cfg
+    return ScalerState(scale=jax.ShapeDtypeStruct((), jnp.float32),
+                       growth_count=jax.ShapeDtypeStruct((), jnp.int32),
+                       skipped=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def update(state: ScalerState, ok: jax.Array,
+           cfg: GuardConfig) -> ScalerState:
+    """One transition: ``ok`` is the step's combined health verdict.
+
+    ok    → growth_count += 1; after ``growth_interval`` consecutive
+            clean steps the scale grows by ``growth_factor`` (clamped to
+            ``max_scale``) and the streak resets.
+    ¬ok   → scale backs off by ``backoff_factor`` (clamped to
+            ``min_scale``), the streak resets, ``skipped`` increments.
+    """
+    ok = jnp.asarray(ok, jnp.bool_)
+    count = state.growth_count + 1
+    grew = count >= cfg.growth_interval
+    scale_ok = jnp.where(
+        grew,
+        jnp.minimum(state.scale * cfg.growth_factor,
+                    jnp.float32(cfg.max_scale)),
+        state.scale)
+    count_ok = jnp.where(grew, 0, count).astype(jnp.int32)
+    scale_bad = jnp.maximum(state.scale * cfg.backoff_factor,
+                            jnp.float32(cfg.min_scale))
+    return ScalerState(
+        scale=jnp.where(ok, scale_ok, scale_bad),
+        growth_count=jnp.where(ok, count_ok, 0).astype(jnp.int32),
+        skipped=state.skipped + jnp.where(ok, 0, 1).astype(jnp.int32))

@@ -17,9 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
-from repro.checkpoint.manager import CheckpointManager
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointCorrupt, CheckpointManager
 
 
 @dataclasses.dataclass
@@ -27,6 +29,17 @@ class SupervisorConfig:
     checkpoint_every: int = 50
     max_restarts: int = 3
     keep: int = 3
+    # Exponential backoff between restarts: the n-th restart sleeps
+    # min(base * factor^(n-1), max) * (1 +/- jitter), with the jitter
+    # drawn from a seeded integer stream (deterministic, injectable
+    # clock). base 0.0 disables the sleep (the default keeps tests and
+    # the soak instant); real clusters want seconds here so a crash loop
+    # doesn't hammer the checkpoint store.
+    backoff_base_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 30.0
+    backoff_jitter: float = 0.1
+    seed: int = 0
 
 
 class Preempted(Exception):
@@ -34,11 +47,39 @@ class Preempted(Exception):
 
 
 class TrainSupervisor:
-    def __init__(self, ckpt: CheckpointManager, cfg: SupervisorConfig):
+    def __init__(self, ckpt: CheckpointManager, cfg: SupervisorConfig,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         self.ckpt = ckpt
         self.cfg = cfg
         self.restarts = 0
+        self.restart_causes: List[str] = []   # one entry per restart
+        self.backoffs: List[float] = []       # seconds slept per restart
         self._preempt = False
+        self._sleep = sleep_fn
+        self._rng = np.random.default_rng(cfg.seed)
+
+    def run_stats(self) -> Dict[str, Any]:
+        """Restart accounting for run reports / soak traces."""
+        return {"restarts": self.restarts,
+                "restart_causes": list(self.restart_causes),
+                "backoffs_s": list(self.backoffs)}
+
+    def _backoff(self) -> None:
+        """Sleep before the n-th restart (n = self.restarts, already
+        incremented). Jitter comes from integer draws so the delay
+        sequence is deterministic for a given seed; the injectable
+        ``sleep_fn`` keeps tests instant."""
+        cfg = self.cfg
+        if cfg.backoff_base_s <= 0:
+            self.backoffs.append(0.0)
+            return
+        delay = min(cfg.backoff_base_s *
+                    cfg.backoff_factor ** (self.restarts - 1),
+                    cfg.backoff_max_s)
+        j = int(self._rng.integers(0, 1001)) / 1000.0
+        delay *= 1.0 + cfg.backoff_jitter * (2.0 * j - 1.0)
+        self.backoffs.append(delay)
+        self._sleep(delay)
 
     def request_preemption(self):
         """Hook for SIGTERM / maintenance-event handlers."""
@@ -80,17 +121,22 @@ class TrainSupervisor:
             except Preempted:
                 self.ckpt.save(step, state, blocking=True)
                 raise
-            except Exception:
+            except Exception as e:
                 self.restarts += 1
+                self.restart_causes.append(
+                    f"{type(e).__name__}: {e}")
                 if self.restarts > self.cfg.max_restarts:
                     raise
+                self._backoff()
                 self.ckpt.wait()
-                latest = self.ckpt.latest_step()
-                if latest is None:
-                    # no checkpoint yet: restart from the initial state
+                try:
+                    # Newest VALID checkpoint: restore() verifies the
+                    # manifest checksums and walks back past corrupt
+                    # snapshots on its own.
+                    step, state = self.ckpt.restore(state)
+                except (FileNotFoundError, CheckpointCorrupt):
+                    # no (intact) checkpoint yet: restart from scratch
                     step, state = start_step, initial_state
-                else:
-                    step, state = self.ckpt.restore(state, latest)
                 if on_restore is not None:
                     on_restore(step)
         self.ckpt.save(step, state, blocking=True)

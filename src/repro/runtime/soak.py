@@ -22,10 +22,18 @@ The elastic contract the harness asserts after EVERY remesh/preemption:
         → per-shard hg resharded column-total-preserving
           (``reshard.reshard_hg``), batch re-split, detector reset.
 
+Alongside the simulated control plane, the soak steps a REAL-numeric
+guard lane (``runtime.faults.GuardLane``): actual guarded engine steps
+on a one-device mesh against one injected fault of each data-plane
+class (NaN gradient, forced overflow, bit-flipped wire segment), with
+the in-band census verdict, the atomic-skip bit-identity check, and the
+loss-scale trajectory recorded in the trace's ``guard`` section.
+
 Everything recorded in the trace is pure-python cost-model arithmetic
-(floats rounded to 9 dp) or integers, so the seeded schedule yields a
-bit-identical trace on any machine — ``benchmarks/micro.py --soak-check``
-gates it against the committed ``BENCH_soak.json``.
+(floats rounded to 9 dp), integers, booleans, or power-of-two loss
+scales, so the seeded schedule yields a bit-identical trace on any
+machine — ``benchmarks/micro.py --soak-check`` gates it against the
+committed ``BENCH_soak.json``.
 
 Entry points: ``SoakHarness(cfg, ckpt_dir).run()`` (tests, the bench) and
 ``python -m repro.launch.dryrun --soak`` (rendered per-event table).
@@ -103,6 +111,11 @@ class SoakConfig:
     patience: int = 3
     remesh_after: int = 8
     jitter: float = 0.02           # +/- fractional per-host step noise
+    # Numeric guard lane (PR 7): alongside the simulated control plane,
+    # a miniature REAL-numeric guarded training lane (runtime.faults.
+    # GuardLane) is stepped against one fault of each data-plane class;
+    # its detection records join the trace. 0 disables the lane.
+    guard_steps: int = 24
 
 
 def default_schedule(cfg: SoakConfig) -> Tuple[SoakEvent, ...]:
@@ -118,6 +131,17 @@ def default_schedule(cfg: SoakConfig) -> Tuple[SoakEvent, ...]:
         SoakEvent(step=int(s * 0.50), kind="preempt", host=3),
         SoakEvent(step=int(s * 0.70), kind="fail", host=1),
     )
+
+
+def default_numeric_faults(num_steps: int) -> Tuple:
+    """The committed-baseline data-plane schedule: one fault per class,
+    early enough that the trailing clean streak exceeds the lane's
+    growth interval (the trace then shows backoff AND regrowth)."""
+    from repro.runtime.faults import FaultEvent
+    q = max(1, num_steps // 6)
+    return (FaultEvent(step=q, kind="nan", offset=8, width=4),
+            FaultEvent(step=2 * q, kind="overflow", offset=40, width=4),
+            FaultEvent(step=3 * q, kind="bitflip", offset=100, width=6))
 
 
 class SoakHarness:
@@ -398,6 +422,7 @@ class SoakHarness:
                 break
         completed = int(state["step_val"]) if aborted is None else step
         kinds = sorted({e["kind"] for e in self.events})
+        guard_section = self._guard_lane() if cfg.guard_steps else None
         trace = {
             "config": {f.name: getattr(cfg, f.name)
                        for f in dataclasses.fields(cfg)},
@@ -407,6 +432,7 @@ class SoakHarness:
                 "completed_steps": completed,
                 "aborted": aborted,
                 "restarts_consumed": int(self.sup.restarts),
+                "restart_causes": list(self.sup.restart_causes),
                 "final_hosts": len(self.hosts),
                 "final_data_shards": int(self.num_data),
                 "final_plan_key": repr(self.gf.plan_cache_key()),
@@ -416,7 +442,27 @@ class SoakHarness:
                 "event_kinds": kinds,
             },
         }
+        if guard_section is not None:
+            trace["guard"] = guard_section
         return trace
+
+    def _guard_lane(self) -> Dict:
+        """The numeric lane: real guarded steps (one-device mesh) under
+        the committed fault schedule, in both wire modes. Records are
+        ints/bools/power-of-two floats only — the trace stays verbatim
+        machine-independent."""
+        from repro.runtime.faults import GuardLane, truth_table
+        faults = default_numeric_faults(self.cfg.guard_steps)
+        section: Dict = {
+            "steps": int(self.cfg.guard_steps),
+            "faults": [dataclasses.asdict(f) for f in faults],
+        }
+        for mode in ("lazy", "csc"):
+            records = GuardLane(mode=mode).run(self.cfg.guard_steps,
+                                               faults)
+            section[mode] = {"records": records,
+                             "truth_table": truth_table(records)}
+        return section
 
 
 def render_trace(trace: Dict) -> str:
@@ -456,4 +502,17 @@ def render_trace(trace: Dict) -> str:
         f"{f['final_hosts']} hosts, {f['final_data_shards']} data shards, "
         f"step {f['final_predicted_step_s'] * ms:.2f} ms"
         + (f" | ABORTED: {f['aborted']}" if f["aborted"] else ""))
+    g = trace.get("guard")
+    if g:
+        for mode in ("lazy", "csc"):
+            tt = g[mode]["truth_table"]
+            caught = sum(r["caught"] for r in tt["classes"].values())
+            inj = sum(r["injected"] for r in tt["classes"].values())
+            scales = sorted({r["scale"] for r in g[mode]["records"]})
+            lines.append(
+                f"guard[{mode}]: {caught}/{inj} faults caught "
+                f"({', '.join(sorted(tt['classes']))}), "
+                f"{tt['false_trips']} false trips / "
+                f"{tt['clean_steps']} clean steps, "
+                f"scales {scales}")
     return "\n".join(lines)

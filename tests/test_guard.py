@@ -1,0 +1,335 @@
+"""Numeric guard rail: dynamic loss scaling, in-band health flags,
+data-plane fault injection, and the atomic guard-rejected step.
+
+The PR-7 acceptance surface, in-process:
+  * scaler grow/backoff state machine (every scale a power of two times
+    init_scale — traces stay exact);
+  * HealthFlags from post-reduce health words / the chunk-L1 census,
+    and the narrow-wire overflow_limit rule;
+  * the three fault classes (nan / overflow / bitflip) and the
+    exponent-MSB envelope math;
+  * GuardLane truth table: every injected class caught, zero false
+    trips, bit-identical skips — both wire modes;
+  * a guard-rejected step leaves params, momentum, and the CSC hg
+    residual BIT-identical across the full {dense,lazy,csc} x
+    {staged,monolithic} x {flat,pallas_ring} matrix, driven through the
+    trainer's real ``_inner_update`` (only the scaler state advances);
+  * trainer end-to-end on smollm-smoke: a guarded clean run matches the
+    unguarded run's final loss, and ``fault_hook``-injected corruption
+    skips its steps without poisoning the trajectory.
+
+The checkpoint-integrity and supervisor-backoff satellites live in
+tests/test_checkpoint.py and tests/test_runtime.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.configs.base import (GradientFlowConfig, GuardConfig,
+                                OptimizerConfig, TrainConfig)
+from repro.core import guard
+from repro.optim import scaler as scaler_mod
+from repro.runtime.faults import (FaultEvent, GuardLane,
+                                  _flip_exponent_msb, apply_faults,
+                                  make_hook, truth_table)
+
+# -- scaler state machine -----------------------------------------------------
+
+
+def test_scaler_grow_backoff_and_clamps():
+    cfg = GuardConfig(init_scale=8.0, growth_interval=2,
+                      growth_factor=2.0, backoff_factor=0.5,
+                      min_scale=2.0, max_scale=16.0)
+    ok, bad = jnp.bool_(True), jnp.bool_(False)
+    st = scaler_mod.init(cfg)
+    assert float(st.scale) == 8.0
+    st = scaler_mod.update(st, ok, cfg)        # streak 1: no growth yet
+    assert float(st.scale) == 8.0 and int(st.growth_count) == 1
+    st = scaler_mod.update(st, ok, cfg)        # streak hits interval: x2
+    assert float(st.scale) == 16.0 and int(st.growth_count) == 0
+    st = scaler_mod.update(st, ok, cfg)
+    st = scaler_mod.update(st, ok, cfg)        # would grow again: clamped
+    assert float(st.scale) == 16.0
+    st = scaler_mod.update(st, bad, cfg)       # trip: halve, count skip
+    assert float(st.scale) == 8.0
+    assert int(st.skipped) == 1 and int(st.growth_count) == 0
+    for _ in range(5):
+        st = scaler_mod.update(st, bad, cfg)
+    assert float(st.scale) == 2.0              # clamped at min_scale
+    assert int(st.skipped) == 6
+    st = scaler_mod.update(st, ok, cfg)        # clean step after trips
+    assert float(st.scale) == 2.0 and int(st.growth_count) == 1
+
+
+def test_scaler_state_shapes_match_abstract():
+    cfg = GuardConfig()
+    st, ab = scaler_mod.init(cfg), scaler_mod.abstract(cfg)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(ab)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+# -- health flags -------------------------------------------------------------
+
+
+def test_overflow_limit_wide_vs_narrow_wire():
+    cfg = GuardConfig()
+    for wide in ("bfloat16", "float32"):
+        lim = guard.overflow_limit(cfg, wide)
+        assert np.isfinite(lim)
+        assert lim == pytest.approx(
+            float(jnp.finfo(jnp.dtype(wide)).max) * cfg.overflow_fraction)
+    # f16's max (65504) sits below honest L1 sums: margin check disabled,
+    # saturation is caught post-hoc by the nonfinite flag instead.
+    assert guard.overflow_limit(cfg, "float16") == float("inf")
+
+
+def test_flags_from_health_words():
+    seg = jnp.asarray([1.0, -2.0, 3.0])
+    clean = guard.flags_from_words([guard.health_word(seg)], 100.0)
+    assert not bool(guard.tripped(clean))
+    nan = guard.flags_from_words(
+        [guard.health_word(seg.at[0].set(jnp.nan))], 100.0)
+    assert bool(nan.nonfinite) and bool(guard.tripped(nan))
+    # bf16 saturation: the cast emits Inf, |Inf| taints the word
+    inf = guard.flags_from_words(
+        [guard.health_word(jnp.asarray([4e38], jnp.float32)
+                           .astype(jnp.bfloat16))], 100.0)
+    assert bool(inf.nonfinite)
+    big = guard.flags_from_words([guard.health_word(seg * 60.0)], 100.0)
+    assert bool(big.overflow) and not bool(big.nonfinite)
+
+
+def test_flags_from_census_vector():
+    limit = guard.overflow_limit(GuardConfig(), "bfloat16")
+    census = jnp.asarray([1.0, 2.5, 0.0])
+    assert not bool(guard.tripped(guard.flags_from_census(census, limit)))
+    f = guard.flags_from_census(census.at[1].set(jnp.nan), limit)
+    assert bool(f.nonfinite)
+    f = guard.flags_from_census(census.at[2].set(limit * 2), limit)
+    assert bool(f.overflow) and not bool(f.nonfinite)
+
+
+# -- fault injection ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("dt", [jnp.bfloat16, jnp.float32])
+def test_bitflip_lands_outside_the_envelope(dt):
+    """Exponent-MSB flips of words in the working envelope [2^-8, 2)
+    land at magnitude >= 2^100 (or Inf) — far above any census limit."""
+    seg = jnp.asarray([0.25, 0.5, 1.9, -0.3, 2.0 ** -8], dt)
+    flipped = np.asarray(_flip_exponent_msb(seg).astype(jnp.float32))
+    mags = np.abs(flipped.astype(np.float64))
+    assert np.all((mags >= 2.0 ** 100) | ~np.isfinite(flipped))
+
+
+def test_apply_faults_only_at_scheduled_step():
+    g = jnp.arange(16.0, dtype=jnp.float32)
+    evs = (FaultEvent(step=3, kind="nan", offset=2, width=4),)
+    np.testing.assert_array_equal(
+        np.asarray(apply_faults(g, jnp.int32(2), evs)), np.asarray(g))
+    hit = np.asarray(apply_faults(g, jnp.int32(3), evs))
+    assert np.isnan(hit[2:6]).all()
+    assert np.isfinite(np.delete(hit, slice(2, 6))).all()
+
+
+def test_overflow_fault_is_huge_but_finite():
+    g = jnp.ones((8,), jnp.float32)
+    evs = (FaultEvent(step=0, kind="overflow", offset=0, width=2),)
+    hit = np.asarray(apply_faults(g, jnp.int32(0), evs))
+    assert np.isfinite(hit).all() and hit[0] == 2.0 ** 120
+
+
+def test_unknown_fault_kind_raises():
+    with pytest.raises(ValueError):
+        apply_faults(jnp.ones((4,)), jnp.int32(0),
+                     (FaultEvent(step=0, kind="gamma_ray"),))
+
+
+# -- the guard lane (real numeric path, one device) ---------------------------
+
+
+@pytest.mark.parametrize("mode", ["lazy", "csc"])
+def test_guard_lane_catches_every_class(mode):
+    faults = (FaultEvent(step=2, kind="nan", offset=8, width=4),
+              FaultEvent(step=5, kind="overflow", offset=40, width=4),
+              FaultEvent(step=8, kind="bitflip", offset=100, width=6))
+    recs = GuardLane(mode=mode).run(11, faults)
+    tt = truth_table(recs)
+    assert tt["false_trips"] == 0 and tt["clean_steps"] == 8
+    for kind in ("nan", "overflow", "bitflip"):
+        assert tt["classes"][kind] == {"injected": 1, "caught": 1}, kind
+    # caught == tripped AND bit-identical: every record proves the skip
+    assert all(r["state_frozen"] for r in recs)
+    assert recs[-1]["skipped"] == 3
+    # every recorded scale is a power of two (exact traces)
+    for r in recs:
+        m, e = np.frexp(r["scale"])
+        assert m == 0.5, r
+
+
+# -- the atomic skip, full mode/overlap/algorithm matrix ----------------------
+
+MATRIX = [(m, o, a) for m in ("dense", "lazy", "csc")
+          for o in ("staged", "monolithic")
+          for a in ("flat", "pallas_ring")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,overlap,algo", MATRIX)
+def test_guard_rejected_step_bit_identical(mode, overlap, algo):
+    """A tripped guard rejects the WHOLE step: params, momentum, and the
+    CSC hg residual bit-identical through the trainer's real update path
+    (``Trainer._inner_update`` with a scaler), on every cell of the
+    {mode} x {overlap} x {collective algorithm} matrix. Only the scaler
+    state advances (backoff + skip count)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.trainer import Trainer
+    from repro.parallel.collectives import (compat_set_mesh,
+                                            compat_shard_map)
+
+    model_cfg, rules = get_smoke("smollm-135m")
+    gf_cfg = GradientFlowConfig(
+        mode=mode, bucket_elems=16384, chunk_elems=512, sparsity=0.5,
+        warmup_steps=0, wire_dtype="float32", collective_algo=algo,
+        overlap=overlap,
+        guard=GuardConfig(init_scale=4.0, growth_interval=1000,
+                          backoff_factor=0.5, min_scale=1.0))
+    cfg = TrainConfig(model=model_cfg, gradientflow=gf_cfg,
+                      optimizer=OptimizerConfig(name="momentum_sgd",
+                                                learning_rate=0.1,
+                                                warmup_steps=1,
+                                                total_steps=10,
+                                                schedule="constant"),
+                      seq_len=8, global_batch=1, attn_chunk=0)
+    mesh = make_host_mesh()
+    t = Trainer(cfg, mesh, rules)
+    state = t.init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    base = jnp.asarray(rng.normal(size=t.pool.size) * 1e-3, jnp.float32)
+
+    def body(gpool, params, opt, gfstate, scaler):
+        return t._inner_update(gpool, params, opt, gfstate, 0.1, None,
+                               scaler=scaler)
+
+    def spec(tree):
+        return jax.tree_util.tree_map(lambda _: P(), tree)
+
+    sm = compat_shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), spec(state.params), spec(state.opt),
+                  spec(state.gf), spec(state.guard)),
+        out_specs=(spec(state.params), spec(state.opt), spec(state.gf),
+                   spec(state.guard)),
+        axis_names={"data"}, check_vma=False)
+    gclean = (base * 4.0).astype(t._pack_dtype)
+    gbad = gclean.at[17:21].set(jnp.nan)
+    with compat_set_mesh(mesh):
+        stepped = jax.jit(sm)
+        p1, o1, g1, s1 = stepped(gclean, state.params, state.opt,
+                                 state.gf, state.guard)
+        p2, o2, g2, s2 = stepped(gbad, state.params, state.opt,
+                                 state.gf, state.guard)
+
+    def flat(tree):
+        return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+    # clean step commits: parameters actually move, scaler untouched
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(flat(p1), flat(state.params)))
+    assert float(s1.scale) == 4.0 and int(s1.skipped) == 0
+    # poisoned step: every leaf of params/opt/gf bit-identical
+    for a, b in zip(flat((p2, o2, g2)),
+                    flat((state.params, state.opt, state.gf))):
+        np.testing.assert_array_equal(a, b)
+    assert float(s2.scale) == 2.0 and int(s2.skipped) == 1
+
+
+# -- trainer end-to-end -------------------------------------------------------
+
+
+def _run_smoke(mode, overlap, *, guard_cfg, fault_hook=None, steps=4):
+    from repro.data.synthetic import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.trainer import Trainer
+    from repro.parallel.collectives import compat_set_mesh
+
+    model_cfg, rules = get_smoke("smollm-135m")
+    gf = GradientFlowConfig(mode=mode, bucket_elems=4096,
+                            chunk_elems=512, sparsity=0.5,
+                            warmup_steps=0, wire_dtype="float32",
+                            overlap=overlap, guard=guard_cfg)
+    cfg = TrainConfig(model=model_cfg, gradientflow=gf,
+                      optimizer=OptimizerConfig(
+                          name="momentum_sgd", learning_rate=0.2,
+                          warmup_steps=1, total_steps=20,
+                          schedule="constant"),
+                      seq_len=32, global_batch=2, attn_chunk=0)
+    mesh = make_host_mesh()
+    trainer = Trainer(cfg, mesh, rules)
+    data = SyntheticLM(model_cfg.vocab_size, seed=0)
+    losses, states = [], []
+    with compat_set_mesh(mesh):
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        states.append(state)
+        step = trainer.build_train_step(donate=False,
+                                        fault_hook=fault_hook)
+        for i in range(steps):
+            state, m = step(state, jax.device_put(data.batch(i, 2, 32)))
+            losses.append(float(m["loss"]))
+            states.append(state)
+    return losses, states
+
+
+@pytest.mark.slow
+def test_trainer_guarded_clean_run_matches_unguarded():
+    """ISSUE acceptance: a guarded smollm run (loss scale 2^10, f32
+    wire) matches the clean unguarded run's final loss within rtol 1e-3
+    — power-of-two scaling is exact, so the guard rail is trajectory-
+    neutral when nothing trips."""
+    clean, _ = _run_smoke("lazy", "monolithic", guard_cfg=None)
+    guarded, states = _run_smoke(
+        "lazy", "monolithic",
+        guard_cfg=GuardConfig(init_scale=2.0 ** 10,
+                              growth_interval=1000))
+    np.testing.assert_allclose(guarded[-1], clean[-1], rtol=1e-3)
+    assert int(states[-1].guard.skipped) == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,overlap",
+                         [("lazy", "monolithic"), ("csc", "staged")])
+def test_trainer_fault_hook_skips_without_poisoning(mode, overlap):
+    """fault_hook corruption through the full train step: each faulted
+    step is rejected bit-identically (params/opt/gf frozen, scaler
+    backed off) and the run continues to a finite loss."""
+    hook = make_hook([FaultEvent(step=1, kind="nan", offset=8, width=4),
+                      FaultEvent(step=2, kind="overflow", offset=64,
+                                 width=4)])
+    losses, states = _run_smoke(
+        mode, overlap,
+        guard_cfg=GuardConfig(init_scale=4.0, growth_interval=1000,
+                              min_scale=1.0),
+        fault_hook=hook, steps=4)
+
+    def flat(tree):
+        return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+    for fault_step in (1, 2):
+        before, after = states[fault_step], states[fault_step + 1]
+        for a, b in zip(flat((before.params, before.opt, before.gf)),
+                        flat((after.params, after.opt, after.gf))):
+            np.testing.assert_array_equal(a, b)
+    assert int(states[-1].guard.skipped) == 2
+    assert float(states[-1].guard.scale) == 1.0  # 4 -> 2 -> 1
+    # clean steps before/after the faults did commit
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(flat(states[0].params),
+                               flat(states[1].params)))
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(flat(states[3].params),
+                               flat(states[4].params)))
+    assert np.isfinite(losses).all()

@@ -374,3 +374,114 @@ def test_supervisor_preemption_during_final_step(tmp_path):
     sup.clear_preemption()
     final = sup.run(final, 10, 20, step_fn)
     assert int(final["step_val"]) == 20
+
+
+def test_supervisor_backoff_and_restart_causes(tmp_path):
+    """Seeded exponential backoff between restarts (injectable clock —
+    no real sleeping) and per-restart cause strings in run_stats."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sleeps = []
+    sup = TrainSupervisor(
+        ckpt,
+        SupervisorConfig(checkpoint_every=100, max_restarts=3,
+                         backoff_base_s=1.0, backoff_factor=2.0,
+                         backoff_max_s=3.0, backoff_jitter=0.0, seed=0),
+        sleep_fn=sleeps.append)
+    calls = {"n": 0}
+    fails = {"n": 0}
+
+    def fault(step):
+        if step == 2 and fails["n"] < 3:
+            fails["n"] += 1
+            raise RuntimeError(f"boom {fails['n']}")
+
+    final = sup.run(_mini_state(), 0, 5, _count_step(calls),
+                    fault_injector=fault)
+    assert float(final["x"][0]) == 5.0
+    # 1.0 * 2^(n-1), capped at backoff_max_s
+    assert sleeps == [1.0, 2.0, 3.0]
+    stats = sup.run_stats()
+    assert stats["restarts"] == 3
+    assert stats["restart_causes"] == [
+        "RuntimeError: boom 1", "RuntimeError: boom 2",
+        "RuntimeError: boom 3"]
+    assert stats["backoffs_s"] == sleeps
+
+
+def test_supervisor_backoff_jitter_is_seeded(tmp_path):
+    """With jitter on, the delay sequence is deterministic for a seed
+    (integer RNG draws) and bounded by +/- jitter."""
+    def delays(seed, tag):
+        ckpt = CheckpointManager(str(tmp_path) + f"/{tag}", keep=3)
+        sleeps = []
+        sup = TrainSupervisor(
+            ckpt,
+            SupervisorConfig(checkpoint_every=100, max_restarts=3,
+                             backoff_base_s=1.0, backoff_factor=1.0,
+                             backoff_max_s=10.0, backoff_jitter=0.5,
+                             seed=seed),
+            sleep_fn=sleeps.append)
+        fails = {"n": 0}
+
+        def fault(step):
+            if step == 0 and fails["n"] < 3:
+                fails["n"] += 1
+                raise RuntimeError("boom")
+
+        sup.run(_mini_state(), 0, 2, _count_step({"n": 0}),
+                fault_injector=fault)
+        return sleeps
+
+    a, b = delays(0, "a"), delays(0, "b")
+    assert a == b and len(a) == 3
+    assert all(0.5 <= d <= 1.5 for d in a)
+
+
+def test_supervisor_backoff_disabled_by_default(tmp_path):
+    """backoff_base_s defaults to 0.0: the injectable clock is never
+    called, restarts stay instant (the existing tests and the soak rely
+    on this)."""
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    called = []
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=100,
+                                                 max_restarts=1),
+                          sleep_fn=called.append)
+    faulted = {"done": False}
+
+    def fault(step):
+        if step == 1 and not faulted["done"]:
+            faulted["done"] = True
+            raise RuntimeError("boom")
+
+    sup.run(_mini_state(), 0, 3, _count_step({"n": 0}),
+            fault_injector=fault)
+    assert called == []
+    assert sup.run_stats()["backoffs_s"] == [0.0]
+
+
+def test_supervisor_restores_from_older_checkpoint_when_newest_rots(
+        tmp_path):
+    """End-to-end: a fault + a corrupted newest checkpoint → the
+    supervisor restores the older intact one instead of crashing or
+    loading garbage (CheckpointManager.restore walks back on its own)."""
+    import os
+
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=2,
+                                                 max_restarts=1))
+    faulted = {"done": False}
+    restored = []
+
+    def fault(step):
+        if step == 5 and not faulted["done"]:
+            faulted["done"] = True
+            ckpt.wait()   # join the async step-4 write before rotting it
+            npz = os.path.join(str(tmp_path), "step_4", "arrays.npz")
+            with open(npz, "r+b") as f:
+                f.truncate(os.path.getsize(npz) // 2)
+            raise RuntimeError("node died, checkpoint rotted")
+
+    final = sup.run(_mini_state(), 0, 8, _count_step({"n": 0}),
+                    on_restore=restored.append, fault_injector=fault)
+    assert restored == [2]        # walked back past the rotted step_4
+    assert float(final["x"][0]) == 8.0

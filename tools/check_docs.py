@@ -36,7 +36,8 @@ REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
                    "pallas_ring", "exchange_steps", "wire_bytes_per_step",
                    "--overlap-check", "BENCH_overlap.json",
                    "StepPlan", "overlap", "exposed-comm",
-                   "replan", "--soak", "BENCH_soak.json")
+                   "replan", "--soak", "BENCH_soak.json",
+                   "loss scale", "--guard-check", "BENCH_guard.json")
 
 
 def module_resolves(dotted: str) -> bool:
