@@ -302,6 +302,7 @@ def kernel_bench(measure_time: bool = True) -> Dict:
         "pack": pack_row,
         "unpack": upd_row,
         "ring": ring_bench(),
+        "wire": wire_bench(),
     }
 
 
@@ -344,6 +345,36 @@ for wire in ("float32", "bfloat16"):
         ring, flat = jax.jit(sm)(x)
     out["max_abs_err_" + ("f32" if wd == jnp.float32 else "bf16")] = \\
         float(jnp.max(jnp.abs(ring - flat)))
+# Low-bit wires: quantize per rank (per-chunk scales from the summed
+# census), ring-reduce the 1-byte words, compare against the exact f32
+# sum of the same words. int8 must be LOSSLESS (integer partial sums
+# stay on the grid, rank_clip keeps them in range); fp8-e4m3 rounds
+# per hop (bounded).
+from repro.core import wire as wire_mod
+QCHUNK = 64
+QPOOL = QCHUNK * 155
+xq = jnp.asarray(rng.normal(size=N * QPOOL), jnp.float32)
+census = jnp.sum(jnp.abs(xq.reshape((N, -1, QCHUNK))), axis=(0, 2))
+for fmt in ("int8", "fp8_e4m3"):
+    if fmt not in wire_mod.supported_formats():
+        continue
+    spec = wire_mod.resolve(fmt)
+    scales = wire_mod.scales_from_census(census, chunk_elems=QCHUNK,
+                                         num_shards=N, spec=spec)
+    def fq(g):
+        q, _ = wire_mod.quantize_pool(g, scales, chunk_elems=QCHUNK,
+                                      spec=spec, num_shards=N)
+        ring = algo.reduce(q, ("data",)).astype(jnp.float32)
+        exact = jax.lax.psum(q.astype(jnp.float32), "data")
+        return (wire_mod.dequantize_pool(ring, scales, QCHUNK),
+                wire_mod.dequantize_pool(exact, scales, QCHUNK))
+    smq = compat_shard_map(fq, mesh=mesh, in_specs=P("data"),
+                           out_specs=(P(None), P(None)),
+                           axis_names={{"data"}})
+    with compat_set_mesh(mesh):
+        ringq, exactq = jax.jit(smq)(xq)
+    out["ring_max_err_" + fmt] = float(jnp.max(jnp.abs(ringq - exactq)))
+    out["ring_scale_max_" + fmt] = float(jnp.max(scales))
 # Step count: the full-ring twin under check_vma=False (pins the
 # 2(N-1)-exchange schedule on every jax version; no hidden psum).
 from repro.kernels import ref
@@ -384,6 +415,7 @@ def ring_bench() -> Dict:
             f"ring bench subprocess failed:\n{proc.stdout}\n{proc.stderr}")
     measured = json.loads(proc.stdout.strip().splitlines()[-1])
     p = ring_reduce.plan(RING_POOL_ELEMS, RING_DEVICES, "bfloat16")
+    p8 = ring_reduce.plan(RING_POOL_ELEMS, RING_DEVICES, "int8")
     return {
         "devices": RING_DEVICES,
         "pool_elems": RING_POOL_ELEMS,
@@ -391,7 +423,74 @@ def ring_bench() -> Dict:
         "exchange_steps": ring_exchange_steps(RING_DEVICES),
         "wire_bytes_per_step": p["wire_bytes_per_step"],
         "total_wire_bytes": p["total_wire_bytes"],
+        "wire_bytes_per_step_int8": p8["wire_bytes_per_step"],
         **measured,
+    }
+
+
+# -- low-bit wire gate (bytes accounting + matched-loss train twin) ----------
+
+
+def _wire_gf(mode, wire_format, sparsity=0.5):
+    from repro.configs.base import GradientFlowConfig
+    from repro.core.gradientflow import GradientFlow
+
+    pool = GradientPool({f"t{i}": jnp.zeros(s, jnp.float32)
+                         for i, s in enumerate(ALEXNET_GRAD_SHAPES)},
+                        pad_to=32768)
+    cfg = GradientFlowConfig(
+        mode=mode, bucket_elems=1 << 22, chunk_elems=32768,
+        sparsity=sparsity, warmup_steps=0, wire_dtype="bfloat16",
+        wire_format=wire_format, reduce_axes=("data",),
+        collective_algo="flat")
+    # Cluster-V: 64 nodes x 8 V100s (parallel.topology.Topology.cluster_v)
+    return GradientFlow(cfg, pool, num_data_shards=512)
+
+
+_WIRE_TRAIN_ARGS = [
+    "--arch", "smollm-135m", "--reduced", "--steps", "24",
+    "--seq-len", "64", "--batch", "4", "--gf-mode", "csc",
+    "--sparsity", "0.85", "--chunk-elems", "2048", "--csc-warmup", "4",
+    "--lr", "0.1", "--log-every", "1000",
+]
+
+
+def wire_bench() -> Dict:
+    """Low-bit wire accounting + convergence twin.
+
+    Bytes: the AlexNet/Cluster-V pool priced by GradientFlow's own wire
+    accounting (census collectives included) — CSC-int8 vs the bf16
+    dense baseline is the headline reduction (sparsity x byte-width);
+    the same-mode lazy ratio isolates the byte-width factor alone.
+
+    Convergence: the 100m example's reduced twin (same flags at smoke
+    scale) trained with native bf16 vs the int8 wire — final losses must
+    match to rtol 1e-2 (error feedback keeps the quantizer unbiased)."""
+    dense_bf16 = _wire_gf("dense", "native").wire_bytes_per_step()
+    lazy_bf16 = _wire_gf("lazy", "native").wire_bytes_per_step()
+    lazy_int8 = _wire_gf("lazy", "int8").wire_bytes_per_step()
+    gf_csc = _wire_gf("csc", "int8")
+    csc_int8 = gf_csc.wire_bytes_per_step(gf_csc.stages[-1])
+
+    from repro.launch.train import main as train_main
+    losses_native = train_main(_WIRE_TRAIN_ARGS)
+    losses_int8 = train_main(_WIRE_TRAIN_ARGS + ["--wire-format", "int8"])
+    ln, lq = losses_native[-1], losses_int8[-1]
+    return {
+        "workload": "alexnet",
+        "devices": 512,
+        "bytes_dense_bf16": int(dense_bf16),
+        "bytes_lazy_bf16": int(lazy_bf16),
+        "bytes_lazy_int8": int(lazy_int8),
+        "bytes_csc_int8": int(csc_int8),
+        "reduction_csc_int8_vs_dense_bf16": round(
+            dense_bf16 / csc_int8, 4),
+        "reduction_lazy_int8_vs_lazy_bf16": round(
+            lazy_bf16 / lazy_int8, 4),
+        "train_steps": 24,
+        "final_loss_native": round(float(ln), 6),
+        "final_loss_int8": round(float(lq), 6),
+        "final_loss_rel_diff": round(abs(ln - lq) / abs(ln), 6),
     }
 
 
@@ -1036,11 +1135,58 @@ def check_kernel_regression(baseline_path: str) -> int:
             "— no longer owns the collective")
     base_ring = base.get("ring", {})
     for k in ("devices", "pool_elems", "seg_elems", "exchange_steps",
-              "wire_bytes_per_step"):
+              "wire_bytes_per_step", "wire_bytes_per_step_int8"):
         if ring[k] != base_ring.get(k):
             failures.append(
                 f"ring.{k} drifted: {ring[k]} != baseline "
                 f"{base_ring.get(k)} (refresh BENCH_kernels.json if "
+                "intentional)")
+    # Low-bit wire gates. The int8 grid is designed lossless in the ring
+    # (rank_clip keeps partial sums on the int8 grid — wire.py): any
+    # nonzero error means the in-flight requant cycle broke. fp8 tolerates
+    # bounded per-hop rounding (half-ulp ~ 2^-4 relative, amortized over
+    # the dequantized magnitudes; measured ~1e-2 on this pool).
+    if "ring_max_err_int8" in ring and ring["ring_max_err_int8"] > 1e-6:
+        failures.append(
+            f"int8 ring no longer lossless: max err "
+            f"{ring['ring_max_err_int8']:.2e} vs exact grid sum")
+    if "ring_max_err_fp8_e4m3" in ring:
+        # Per-hop fp8 rounding is half-ulp: <= 2^-4 of the value. Values
+        # live under qmax*scale (the grid's headroom), so one envelope of
+        # that bound covers the whole hop chain comfortably (measured
+        # ~1.26 vs bound ~6.95 on this pool); a structurally broken
+        # dequant cycle is off by the full magnitude, O(qmax*scale).
+        bound = 448.0 * ring["ring_scale_max_fp8_e4m3"] * 2.0 ** -4
+        if ring["ring_max_err_fp8_e4m3"] > bound:
+            failures.append(
+                f"fp8 ring max err {ring['ring_max_err_fp8_e4m3']:.2e} > "
+                f"half-ulp envelope {bound:.2e} vs exact grid sum")
+    wire = cur["wire"]
+    # ISSUE acceptance: >=3.5x wire-bytes reduction for CSC-int8 vs the
+    # bf16 dense baseline on the AlexNet/Cluster-V pool, with the tiny
+    # train twin's final loss matching native to 1e-2 relative.
+    if wire["reduction_csc_int8_vs_dense_bf16"] < 3.5:
+        failures.append(
+            f"CSC-int8 wire reduction "
+            f"{wire['reduction_csc_int8_vs_dense_bf16']:.2f}x < 3.5x vs "
+            "dense bf16")
+    if wire["reduction_lazy_int8_vs_lazy_bf16"] < 1.9:
+        failures.append(
+            f"lazy int8 wire reduction "
+            f"{wire['reduction_lazy_int8_vs_lazy_bf16']:.2f}x < 1.9x vs "
+            "lazy bf16 (byte-width factor lost)")
+    if wire["final_loss_rel_diff"] > 1e-2:
+        failures.append(
+            f"int8 train twin diverged: final loss rel diff "
+            f"{wire['final_loss_rel_diff']:.2e} > 1e-2 (native "
+            f"{wire['final_loss_native']} vs int8 {wire['final_loss_int8']})")
+    base_wire = base.get("wire", {})
+    for k in ("bytes_dense_bf16", "bytes_lazy_bf16", "bytes_lazy_int8",
+              "bytes_csc_int8"):
+        if wire[k] != base_wire.get(k):
+            failures.append(
+                f"wire.{k} drifted: {wire[k]} != baseline "
+                f"{base_wire.get(k)} (refresh BENCH_kernels.json if "
                 "intentional)")
     for msg in failures:
         print(f"KERNEL BENCH REGRESSION: {msg}")

@@ -39,6 +39,20 @@ class CheckpointCorrupt(Exception):
     (unreadable archive, missing leaves, or a SHA-256 mismatch)."""
 
 
+# Leaves that are per-step scratch, not state: their contents are fully
+# rewritten every step (the pack staging pool rides in TrainState only
+# for buffer donation) and their shape follows the mesh's data degree —
+# persisting them would both waste checkpoint bytes and pin the mesh
+# shape, breaking elastic restore. Saved as empty placeholders (marked
+# in the manifest) and restored from the live ``like`` state, which
+# already has the right shape for the current mesh.
+SCRATCH_LEAF_NAMES = ("staging",)
+
+
+def _is_scratch(name: str) -> bool:
+    return name.split("/")[-1] in SCRATCH_LEAF_NAMES
+
+
 def _sha256(a: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
 
@@ -75,11 +89,14 @@ class CheckpointManager:
         self.wait()  # at most one in-flight save
         leaves = jax.tree_util.tree_leaves(state)
         names = _leaf_names(state)
-        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        host = [np.zeros((0,), np.asarray(jax.device_get(x)).dtype)
+                if _is_scratch(n) else np.asarray(jax.device_get(x))
+                for n, x in zip(names, leaves)]
         manifest = {
             "step": int(step),
             "leaves": [{"name": n, "shape": list(a.shape),
-                        "dtype": str(a.dtype), "sha256": _sha256(a)}
+                        "dtype": str(a.dtype), "sha256": _sha256(a),
+                        **({"scratch": True} if _is_scratch(n) else {})}
                        for n, a in zip(names, host)],
         }
 
@@ -197,7 +214,12 @@ class CheckpointManager:
         want = jax.tree_util.tree_leaves(like)
         assert len(want) == len(leaves), (
             f"checkpoint has {len(leaves)} leaves, state needs {len(want)}")
+        out = []
         for w, l, meta in zip(want, leaves, manifest["leaves"]):
+            if meta.get("scratch"):
+                out.append(w)  # live shape wins; contents are per-step
+                continue
             assert tuple(w.shape) == tuple(l.shape), (
                 f"{meta['name']}: shape {l.shape} != expected {w.shape}")
-        return step, jax.tree_util.tree_unflatten(treedef, leaves)
+            out.append(l)
+        return step, jax.tree_util.tree_unflatten(treedef, out)

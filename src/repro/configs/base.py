@@ -180,6 +180,21 @@ class GradientFlowConfig:
     #   'monolithic' — the barrier chain (reduce every bucket, then update
     #                  the whole pool); kept as the equivalence twin.
     overlap: str = "staged"
+    # Low-bit wire format for gradient transport (repro.core.wire):
+    #   'native'   — segments travel as wire_dtype (§2.5, the default)
+    #   'int8'     — per-chunk-scaled int8 words; ring transport is exact
+    #                (integer partial sums stay on the grid)
+    #   'fp8_e4m3' — per-chunk-scaled fp8 (where jax ships the dtype)
+    # Scales derive from the chunk-L1 census (rank-invariant, no side
+    # channel); wire_dtype stays the pack/storage dtype. See
+    # docs/numerics.md.
+    wire_format: str = "native"
+    # Error feedback for quantized formats: carry the per-rank
+    # quantization error in a pool-shaped residual (GFState.residual,
+    # donated through the train state like the pack staging) and
+    # re-inject it next step. Disable only for ablations — without it a
+    # quantized run keeps the quantizer's bias.
+    error_feedback: bool = True
     # Use Pallas fused kernels where available (CPU falls back to ref).
     use_kernels: bool = False
     # Numeric guard rail (None => unguarded, the pre-guard behavior):
@@ -194,6 +209,14 @@ class GradientFlowConfig:
     @property
     def guarded(self) -> bool:
         return self.guard is not None
+
+    @property
+    def quantized(self) -> bool:
+        return self.wire_format not in (None, "native")
+
+    @property
+    def feedback_enabled(self) -> bool:
+        return self.quantized and self.error_feedback
 
 
 @dataclasses.dataclass(frozen=True)

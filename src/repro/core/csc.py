@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GradientFlowConfig
+from repro.core import wire as wire_mod
 from repro.core.lazy_allreduce import bucketed_reduce
 from repro.parallel.collectives import reduce_pool
 
@@ -102,6 +103,8 @@ class CSCReduceResult:
                             # (device-invariant: safe input for the optimizer)
     elem_mask: jax.Array    # bool[pool]; True where the update may apply
     state: CSCState         # hg is per-data-shard (device-varying) by design
+    residual: Any = None    # error-feedback residual (quantized wire formats
+                            # only; per-shard, updated at selected chunks)
 
 
 def csc_reduce(
@@ -113,6 +116,7 @@ def csc_reduce(
     bucket_boundaries: Sequence[Tuple[int, int]],
     num_data_shards: int,
     algo=None,
+    residual=None,
 ) -> CSCReduceResult:
     """One CSC reduction (Fig 17 + Algorithm 1 preprocess step).
 
@@ -131,9 +135,24 @@ def csc_reduce(
         wire bucket — so sparsity shrinks the ring's segments, never its
         step count. The norm census stays flat — it is one tiny
         f32[chunks] message, below any crossover point.
+      residual: error-feedback residual pool (f32[pool], per-shard) for
+        quantized wire formats. Re-injected into the send values of the
+        SELECTED chunks and replaced there with this step's quantization
+        error; unselected chunks keep their residual (their payload
+        flows through hg, Algorithm 1). None => no feedback (ablation or
+        native transport).
+
+    Quantized wire formats (``cfg.wire_format`` in {'int8','fp8_e4m3'}):
+    only the surviving chunks of the compacted buffer are quantized —
+    per-chunk scales come from the PREVIOUS iteration's allreduced census
+    (``state.chunk_norms``, already rank-invariant: zero extra
+    collectives), gathered at the selected chunk ids. Scale drift between
+    iterations is absorbed by the saturating clip + error feedback and
+    watched by the guard's per-chunk overflow limit (repro.core.guard).
     """
     chunk = cfg.chunk_elems
     momentum = cfg.momentum
+    spec = wire_mod.resolve(cfg.wire_format)
     g = pool_grads.astype(jnp.float32)
 
     # Algorithm 1 line 7: re-inject historical gradients.
@@ -143,15 +162,39 @@ def csc_reduce(
     idx, chunk_mask = select_chunks(state.chunk_norms, num_selected)
     elem_mask = jnp.repeat(chunk_mask, chunk)
 
+    # Error feedback: selected chunks also carry the residual of their
+    # previous quantized sends.
+    g_send = g if (spec is None or residual is None) else g + residual
+
     # Pack important chunks; fused bucketed allreduce over the wire buffer.
     if cfg.use_kernels:
         from repro.kernels import ops as kops
-        wire = kops.csc_compact(g, idx, chunk)
+        wire = kops.csc_compact(g_send, idx, chunk)
     else:
-        wire = compact_chunks(g, idx, chunk)
-    reduced = bucketed_reduce(
-        wire, bucket_boundaries, cfg.reduce_axes, cfg.wire_dtype,
-        algo=algo)
+        wire = compact_chunks(g_send, idx, chunk)
+    residual_new = residual
+    if spec is None:
+        reduced = bucketed_reduce(
+            wire, bucket_boundaries, cfg.reduce_axes, cfg.wire_dtype,
+            algo=algo)
+    else:
+        scales = wire_mod.scales_from_census(
+            jnp.take(state.chunk_norms, idx), chunk_elems=chunk,
+            num_shards=num_data_shards, spec=spec)
+        # Pre-quantization send census (see the norms_new block below):
+        # captured before the saturating clip/cast can eat NaN or cap
+        # magnitudes.
+        send_l1 = chunk_l1_norms(wire.astype(jnp.float32), chunk)
+        qwire, err = wire_mod.quantize_pool(
+            wire, scales, chunk_elems=chunk, spec=spec,
+            num_shards=num_data_shards)
+        # Scaled-domain transport: the ring dequant-accumulate-requants
+        # in flight; wire_dtype=None means "already wire-packed".
+        summed = bucketed_reduce(qwire, bucket_boundaries, cfg.reduce_axes,
+                                 None, algo=algo)
+        reduced = wire_mod.dequantize_pool(summed, scales, chunk)
+        if residual is not None:
+            residual_new = scatter_chunks(residual, idx, err, chunk)
     reduced = reduced / num_data_shards  # mean over data shards
 
     # Post-reduce view: important chunks hold the mean, others local g
@@ -176,12 +219,26 @@ def csc_reduce(
         l1 = kops.chunk_l1norm(g_out, chunk)
     else:
         l1 = chunk_l1_norms(g_out, chunk)
+    if spec is not None:
+        # Quantized wires: selected chunks contribute their PRE-QUANT
+        # send-buffer L1 instead of the post-dequant mean's. Three birds,
+        # one (unchanged) psum: (a) the census is the health channel —
+        # int8's round/clip eats NaN and caps saturation at ~WIRE_MARGIN x
+        # basis, so only the pre-quant values still carry poison and the
+        # 512x per-chunk overflow jump (guard.per_chunk_limit); (b) the
+        # resulting norms are next iteration's SCALE basis, and a sum of
+        # per-rank L1s bounds per-rank magnitudes — exactly what
+        # wire.rank_clip budgets against; (c) selection importance is
+        # preserved (both are the same census up to cross-rank
+        # cancellation).
+        l1 = l1.at[idx].set(send_l1)
     norms_new = reduce_pool(l1, cfg.reduce_axes)
 
     return CSCReduceResult(
         grads=g_update,
         elem_mask=elem_mask,
         state=CSCState(hg=hg_new, chunk_norms=norms_new),
+        residual=residual_new,
     )
 
 

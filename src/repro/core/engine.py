@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.core import csc as csc_mod
 from repro.core import lazy_allreduce as lazy_mod
 from repro.core import schedule as schedule_mod
+from repro.core import wire as wire_mod
 from repro.parallel import cost_model
 from repro.parallel.collectives import reduce_pool
 
@@ -217,11 +218,14 @@ class OverlapEngine:
     # -- public entry point --------------------------------------------------
 
     def run(self, plan: StepPlan, gpool, params_tree, opt_state,
-            gfstate, lr):
+            gfstate, lr, census=None):
         """One pipelined reduce+update phase. ``gpool`` is the local
         gradient pool, already packed (wire dtype for dense/lazy, f32 for
-        CSC); ``gfstate`` the LOCAL GradientFlow state (hg as a flat
-        [pool] row, as inside the manual region). Returns
+        CSC and the quantized wire formats); ``gfstate`` the LOCAL
+        GradientFlow state (hg as a flat [pool] row, as inside the manual
+        region). ``census`` is the per-rank chunk-L1 census the pack
+        pipeline already emitted for ``gpool`` (quantized formats only;
+        recomputed here when None — one extra pool pass). Returns
         (new_params_tree, new_opt_state, new_gfstate)."""
         cfg = self.gf.cfg
         use_k = cfg.use_kernels
@@ -234,13 +238,16 @@ class OverlapEngine:
         if cfg.mode == "csc":
             return self._run_csc_warmup(plan, gpool, master, opt_state,
                                         gfstate, lr)
+        if self.gf.wire_spec is not None:
+            return self._run_quantized_pool(plan, gpool, master, opt_state,
+                                            gfstate, lr, census)
         new_params, opt2 = self._run_pool_pipeline(
             plan, gpool, master, opt_state, lr, prepacked=prepacked,
             mask=None)
         return new_params, opt2, gfstate
 
     def run_guarded(self, plan: StepPlan, gpool, params_tree, opt_state,
-                    gfstate, scaler_state, lr):
+                    gfstate, scaler_state, lr, census=None):
         """Guard-railed twin of ``run``: the same collectives, in the same
         order, plus the census-derived health verdict and ONE atomic
         commit. Every bucket's reduce is issued first (they still overlap
@@ -276,6 +283,11 @@ class OverlapEngine:
             out = self._guarded_csc_warmup(plan, gpool, master, params_tree,
                                            opt_state, gfstate, scaler_state,
                                            lr, limit)
+        elif self.gf.wire_spec is not None:
+            out = self._guarded_quantized_pool(plan, gpool, master,
+                                               params_tree, opt_state,
+                                               gfstate, scaler_state, lr,
+                                               limit, census)
         else:
             out = self._guarded_pool(plan, gpool, master, params_tree,
                                      opt_state, gfstate, scaler_state, lr,
@@ -313,6 +325,99 @@ class OverlapEngine:
             ~guard_mod.tripped(flags), commit, (params_tree, opt_state))
         return new_params, opt2, gfstate, flags
 
+    # -- quantized wire formats (int8 / fp8) ----------------------------------
+
+    def _quantize_wire(self, gpool, gfstate, reduce_axes, census,
+                       loss_scale):
+        """Quantize the f32 pool for scaled-domain transport (the staged
+        twin of ``GradientFlow._quantized_dense_or_lazy``'s front half):
+        census psum → rank-invariant per-chunk scales → one pool-pass
+        quantize with error feedback. ``loss_scale`` (guarded runs) is the
+        scaler's power-of-two scale already riding on ``gpool``: the
+        residual is stored UNSCALED (err / scale on write, r * scale on
+        read), so scaler backoffs never corrupt carried feedback. Returns
+        (q, scales, census_sum, residual)."""
+        gf = self.gf
+        cfg = gf.cfg
+        chunk = cfg.chunk_elems
+        g = gpool.astype(jnp.float32)
+        if cfg.feedback_enabled:
+            r = gfstate.residual if loss_scale is None \
+                else gfstate.residual * loss_scale
+            g = g + r
+        if census is None:
+            census = wire_mod.chunk_l1(gpool.astype(jnp.float32), chunk)
+        census_sum = reduce_pool(census, reduce_axes)
+        scales = gf.quantized_scales(census_sum)
+        q, err = wire_mod.quantize_pool(g, scales, chunk_elems=chunk,
+                                        spec=gf.wire_spec,
+                                        num_shards=gf.num_data_shards)
+        if cfg.feedback_enabled:
+            residual = err if loss_scale is None else err / loss_scale
+        else:
+            residual = gfstate.residual
+        return q, scales, census_sum, residual
+
+    def _run_quantized_pool(self, plan, gpool, master, opt_state, gfstate,
+                            lr, census):
+        """Dense/lazy pipeline on a low-bit wire: quantize the whole pool
+        once (scales from the census psum), run the staged loop in the
+        scaled domain (wire_dtype=None — the int8/fp8 words ARE the wire),
+        and dequantize each bucket's mean segment as it retires."""
+        cfg = self.gf.cfg
+        chunk = cfg.chunk_elems
+        q, scales, _, residual = self._quantize_wire(
+            gpool, gfstate, plan.reduce_axes, census, None)
+
+        def dequant(red, task):
+            return wire_mod.dequantize_segment(red, scales, task.start,
+                                               task.end, chunk)
+
+        new_params, opt2 = self._run_pool_pipeline(
+            plan, q, master, opt_state, lr, prepacked=True, mask=None,
+            xform=dequant)
+        return new_params, opt2, gfstate._replace(residual=residual)
+
+    def _guarded_quantized_pool(self, plan, gpool, master, params_tree,
+                                opt_state, gfstate, scaler_state, lr,
+                                limit, census):
+        """Guarded twin of ``_run_quantized_pool``. Low-bit wires saturate
+        at the grid clip instead of overflowing to Inf, so the reduced
+        payload can never carry the poison in-band — the health channel is
+        the census psum itself (any rank's NaN/Inf taints its chunk's L1;
+        the psum the scales already need makes the verdict global, still
+        zero extra collectives). The error-feedback residual joins
+        params/momentum in the atomic skip set: a rejected step keeps the
+        pre-step residual bit-identically."""
+        from repro.core import guard as guard_mod
+
+        cfg = self.gf.cfg
+        chunk = cfg.chunk_elems
+        scale = scaler_state.scale
+        q, scales, census_sum, residual = self._quantize_wire(
+            gpool, gfstate, plan.reduce_axes, census, scale)
+        flags = guard_mod.flags_from_census(census_sum, limit)
+        segs = []
+        for task in plan.tasks:
+            segs.append(lazy_mod.reduce_bucket(
+                q, task.start, task.end, plan.reduce_axes, None,
+                algo=task.algo) / plan.num_data_shards)
+
+        def commit():
+            outs = []
+            for t in plan.tasks:
+                red = wire_mod.dequantize_segment(
+                    segs[t.index], scales, t.start, t.end, chunk) / scale
+                outs.append(self._update_span(t.update_span, red, master,
+                                              opt_state, lr, None))
+            new_params, opt2 = self._assemble(outs)
+            return new_params, opt2, gfstate._replace(residual=residual)
+
+        new_params, opt2, gf2 = guard_mod.guarded_commit(
+            ~guard_mod.tripped(flags), commit,
+            (params_tree, opt_state, gfstate))
+        return new_params, opt2, gf2, flags
+
     def _guarded_csc(self, plan, gpool, master, params_tree, opt_state,
                      gfstate, scaler_state, lr, limit):
         """Sparse CSC guarded stage: same reduce_i ∥ scatter_{i-1}
@@ -321,28 +426,66 @@ class OverlapEngine:
         anywhere in the post-reduce pool — wire-reduced chunks and the
         locally-kept hg side alike — taints its chunk's allreduced L1).
         On a trip the hg residual and the norm census keep their pre-step
-        values, so Algorithm 1 conservation holds across the skip."""
+        values, so Algorithm 1 conservation holds across the skip.
+
+        Quantized wire formats: the compacted buffer travels int8/fp8
+        (scales from the previous iteration's census, exactly as
+        ``_run_csc``), the error-feedback residual joins the atomic skip
+        set, and the overflow limit becomes PER-CHUNK
+        (``guard.per_chunk_limit``): a chunk whose fresh census jumps far
+        past its scale basis is mass-saturating the wire grid — a
+        condition the saturating int8 clip never surfaces as Inf."""
         from repro.core import guard as guard_mod
         from repro.core.gradientflow import GFState
 
         cfg = self.gf.cfg
+        spec = self.gf.wire_spec
+        feedback = cfg.feedback_enabled
         chunk = plan.chunk_elems
         g = gpool.astype(jnp.float32) / scaler_state.scale + gfstate.hg
         idx, chunk_mask = csc_mod.select_chunks(gfstate.chunk_norms,
                                                 plan.num_selected)
         elem_mask = jnp.repeat(chunk_mask, chunk)
+        # CSC runs unscaled past entry, so the (unscaled) residual adds
+        # directly to the send values of the selected chunks.
+        g_send = g + gfstate.residual if (spec is not None and feedback) \
+            else g
         if cfg.use_kernels:
             from repro.kernels import ops as kops
-            wire = kops.csc_compact(g, idx, chunk)
+            wire = kops.csc_compact(g_send, idx, chunk)
         else:
-            wire = csc_mod.compact_chunks(g, idx, chunk)
+            wire = csc_mod.compact_chunks(g_send, idx, chunk)
+        scales = None
+        send_l1 = None
+        residual_new = gfstate.residual
+        wire_dt = cfg.wire_dtype
+        if spec is not None:
+            scales = wire_mod.scales_from_census(
+                jnp.take(gfstate.chunk_norms, idx), chunk_elems=chunk,
+                num_shards=plan.num_data_shards, spec=spec)
+            # Pre-quant send census — the only place NaN and the 512x
+            # saturation jump still exist on an int8 wire (the round/clip
+            # eats both); it feeds the selected chunks of norms_new below.
+            send_l1 = csc_mod.chunk_l1_norms(wire, chunk)
+            wire, err = wire_mod.quantize_pool(
+                wire, scales, chunk_elems=chunk, spec=spec,
+                num_shards=plan.num_data_shards)
+            if feedback:
+                residual_new = csc_mod.scatter_chunks(gfstate.residual,
+                                                      idx, err, chunk)
+            wire_dt = None  # already wire-packed (scaled domain)
+            limit = guard_mod.per_chunk_limit(gfstate.chunk_norms,
+                                              cfg.guard, limit)
 
         g_out, g_update = g, jnp.zeros(g.shape, g.dtype)
         pending = None
         for task in plan.tasks:
             red = lazy_mod.reduce_bucket(
                 wire, task.start, task.end, plan.reduce_axes,
-                cfg.wire_dtype, algo=task.algo) / plan.num_data_shards
+                wire_dt, algo=task.algo) / plan.num_data_shards
+            if spec is not None:
+                red = wire_mod.dequantize_segment(red, scales, task.start,
+                                                  task.end, chunk)
             if pending is not None:
                 g_out, g_update = self._scatter_task(
                     g_out, g_update, pending[0], pending[1], idx, chunk)
@@ -357,6 +500,8 @@ class OverlapEngine:
             l1 = kops.chunk_l1norm(g_out, chunk)
         else:
             l1 = csc_mod.chunk_l1_norms(g_out, chunk)
+        if send_l1 is not None:
+            l1 = l1.at[idx].set(send_l1)
         norms_new = reduce_pool(l1, plan.reduce_axes)
         flags = guard_mod.flags_from_census(norms_new, limit)
 
@@ -366,7 +511,8 @@ class OverlapEngine:
                     for span in plan.update_spans]
             new_params, opt2 = self._assemble(outs)
             return new_params, opt2, GFState(hg=hg_new,
-                                             chunk_norms=norms_new)
+                                             chunk_norms=norms_new,
+                                             residual=residual_new)
 
         new_params, opt2, gf2 = guard_mod.guarded_commit(
             ~guard_mod.tripped(flags), commit,
@@ -400,7 +546,8 @@ class OverlapEngine:
                                       opt_state, lr, None)
                     for t in plan.tasks]
             new_params, opt2 = self._assemble(outs)
-            return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms)
+            return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms,
+                                             residual=gfstate.residual)
 
         new_params, opt2, gf2 = guard_mod.guarded_commit(
             ~guard_mod.tripped(flags), commit,
@@ -411,12 +558,16 @@ class OverlapEngine:
 
     def _run_pool_pipeline(self, plan, gpool, master, opt_state, lr, *,
                            prepacked: bool, mask,
-                           reduced_segs: Optional[list] = None):
+                           reduced_segs: Optional[list] = None,
+                           xform=None):
         """The staged loop over pool-space tasks: issue reduce_i, then
         emit update_{i-1} while it is in flight. ``mask`` is an optional
         pool-sized element mask (CSC); ``reduced_segs`` (when given) is
         filled with each task's mean segment for callers that need the
-        whole reduced pool afterwards (the warm-up norm census)."""
+        whole reduced pool afterwards (the warm-up norm census);
+        ``xform(red, task)`` (when given) post-processes each mean
+        segment before its update — the quantized path's per-bucket
+        dequantization."""
         cfg = self.gf.cfg
         wire = None if prepacked else cfg.wire_dtype
         outs: List[Any] = [None] * len(plan.tasks)
@@ -425,6 +576,8 @@ class OverlapEngine:
             red = lazy_mod.reduce_bucket(
                 gpool, task.start, task.end, plan.reduce_axes, wire,
                 algo=task.algo) / plan.num_data_shards
+            if xform is not None:
+                red = xform(red, task)
             if reduced_segs is not None:
                 reduced_segs.append(red)
             if pending is not None:
@@ -443,25 +596,54 @@ class OverlapEngine:
         """Sparse CSC stage: pipeline reduce_i ∥ scatter_{i-1} over the
         compacted wire buffer, then the segmented masked update. Same math
         as ``csc.csc_reduce`` + the monolithic update — Algorithm 1 with
-        the collectives and scatters interleaved."""
+        the collectives and scatters interleaved. Quantized wire formats
+        transport the compacted buffer in int8/fp8 with per-chunk scales
+        from the PREVIOUS iteration's allreduced census (zero extra
+        collectives) and error feedback at the selected chunks."""
         cfg = self.gf.cfg
+        spec = self.gf.wire_spec
+        feedback = cfg.feedback_enabled
         chunk = plan.chunk_elems
         g = gpool.astype(jnp.float32) + gfstate.hg
         idx, chunk_mask = csc_mod.select_chunks(gfstate.chunk_norms,
                                                 plan.num_selected)
         elem_mask = jnp.repeat(chunk_mask, chunk)
+        g_send = g + gfstate.residual if (spec is not None and feedback) \
+            else g
         if cfg.use_kernels:
             from repro.kernels import ops as kops
-            wire = kops.csc_compact(g, idx, chunk)
+            wire = kops.csc_compact(g_send, idx, chunk)
         else:
-            wire = csc_mod.compact_chunks(g, idx, chunk)
+            wire = csc_mod.compact_chunks(g_send, idx, chunk)
+        scales = None
+        residual_new = gfstate.residual
+        wire_dt = cfg.wire_dtype
+        send_l1 = None
+        if spec is not None:
+            scales = wire_mod.scales_from_census(
+                jnp.take(gfstate.chunk_norms, idx), chunk_elems=chunk,
+                num_shards=plan.num_data_shards, spec=spec)
+            # Pre-quant send census: the health/scale-basis source for the
+            # selected chunks (csc.csc_reduce documents why post-dequant
+            # norms cannot carry NaN or the saturation jump on int8).
+            send_l1 = csc_mod.chunk_l1_norms(wire, chunk)
+            wire, err = wire_mod.quantize_pool(
+                wire, scales, chunk_elems=chunk, spec=spec,
+                num_shards=plan.num_data_shards)
+            if feedback:
+                residual_new = csc_mod.scatter_chunks(gfstate.residual,
+                                                      idx, err, chunk)
+            wire_dt = None  # already wire-packed (scaled domain)
 
         g_out, g_update = g, jnp.zeros(g.shape, g.dtype)
         pending = None
         for task in plan.tasks:
             red = lazy_mod.reduce_bucket(
                 wire, task.start, task.end, plan.reduce_axes,
-                cfg.wire_dtype, algo=task.algo) / plan.num_data_shards
+                wire_dt, algo=task.algo) / plan.num_data_shards
+            if spec is not None:
+                red = wire_mod.dequantize_segment(red, scales, task.start,
+                                                  task.end, chunk)
             if pending is not None:
                 g_out, g_update = self._scatter_task(
                     g_out, g_update, pending[0], pending[1], idx, chunk)
@@ -478,6 +660,8 @@ class OverlapEngine:
             l1 = kops.chunk_l1norm(g_out, chunk)
         else:
             l1 = csc_mod.chunk_l1_norms(g_out, chunk)
+        if send_l1 is not None:
+            l1 = l1.at[idx].set(send_l1)
         norms_new = reduce_pool(l1, plan.reduce_axes)
 
         outs = [self._update_span(span, _seg(g_update, *span), master,
@@ -485,7 +669,8 @@ class OverlapEngine:
                 for span in plan.update_spans]
         new_params, opt2 = self._assemble(outs)
         from repro.core.gradientflow import GFState
-        return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms_new)
+        return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms_new,
+                                         residual=residual_new)
 
     @staticmethod
     def _scatter_task(g_out, g_update, task, red, idx, chunk):
@@ -520,7 +705,8 @@ class OverlapEngine:
         l1 = csc_mod.chunk_l1_norms(mean, cfg.chunk_elems)
         norms = reduce_pool(l1, plan.reduce_axes)
         hg_new = match_vma(jnp.zeros_like(gfstate.hg), gpool)
-        return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms)
+        return new_params, opt2, GFState(hg=hg_new, chunk_norms=norms,
+                                         residual=gfstate.residual)
 
     # -- the per-bucket update -------------------------------------------------
 

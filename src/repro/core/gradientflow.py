@@ -26,16 +26,26 @@ import jax.numpy as jnp
 from repro.configs.base import GradientFlowConfig
 from repro.core import csc as csc_mod
 from repro.core import schedule as schedule_mod
+from repro.core import wire as wire_mod
 from repro.core.lazy_allreduce import bucketed_reduce
 from repro.core.pool import GradientPool
 from repro.parallel import topology as topo_mod
 
 
 class GFState(NamedTuple):
-    """GradientFlow's cross-iteration state (empty tensors when not CSC)."""
+    """GradientFlow's cross-iteration state (empty tensors when unused).
+
+    ``residual`` is the error-feedback residual of the quantized wire
+    formats (repro.core.wire): per-data-shard, pool-shaped f32, stored
+    UNSCALED — the loss-scale interplay divides the quantization error by
+    the (power-of-two) scale on write and multiplies on read, so scaler
+    backoffs never corrupt carried feedback. It joins params/momentum/hg
+    in the guard's atomic skip set: a rejected step restores it
+    bit-identically."""
 
     hg: jax.Array           # f32[pool] historical gradients (CSC)
     chunk_norms: jax.Array  # f32[chunks] previous-iteration norms (CSC)
+    residual: jax.Array = ()  # f32[pool] error-feedback residual (quantized)
 
 
 class GradientFlow:
@@ -44,9 +54,13 @@ class GradientFlow:
         self.cfg = cfg
         self.pool = pool
         self.num_data_shards = int(num_data_shards)
-        if cfg.csc_enabled:
+        # Validates wire_format at build time (unknown/unavailable raises).
+        self.wire_spec = wire_mod.resolve(cfg.wire_format)
+        if cfg.csc_enabled or self.wire_spec is not None:
             assert pool.size % cfg.chunk_elems == 0, (
-                "GradientPool must be constructed with pad_to=chunk_elems")
+                "GradientPool must be constructed with pad_to=chunk_elems "
+                "(CSC chunking and per-chunk quantization scales both key "
+                "off whole chunks)")
             self.num_chunks = pool.size // cfg.chunk_elems
         else:
             self.num_chunks = 0
@@ -66,6 +80,12 @@ class GradientFlow:
         # tuner (docs/collectives.md).
         self._dense_bounds = tuple(
             (s.offset, s.offset + s.size) for s in pool.specs)
+        if self._dense_bounds and pool.size > self._dense_bounds[-1][1]:
+            # Chunk-padded pools (CSC / quantized wires) have a zero tail
+            # past the last tensor; give it its own bucket — the same
+            # dedicated padding task plan() appends — so bucketed_reduce
+            # keeps producing pool-shaped output on the monolithic path.
+            self._dense_bounds += ((self._dense_bounds[-1][1], pool.size),)
         self.bucket_elems = cfg.bucket_elems
         if cfg.auto_bucket and cfg.topology is not None:
             # Staged execution prices θ against the overlap engine's full
@@ -95,8 +115,8 @@ class GradientFlow:
         topo_key = tuple((lv.axis, lv.size) for lv in topo.levels) \
             if topo is not None else None
         return (self.cfg.mode, self.cfg.collective_algo,
-                str(self.cfg.wire_dtype), self.num_data_shards,
-                self.bucket_elems, topo_key)
+                str(self.cfg.wire_dtype), self.cfg.wire_format,
+                self.num_data_shards, self.bucket_elems, topo_key)
 
     def replan(self, topology: Optional[topo_mod.Topology] = None, *,
                num_data_shards: Optional[int] = None,
@@ -133,7 +153,8 @@ class GradientFlow:
         step may run concurrently and must not share collective
         bookkeeping, and the bucket layout — unlike any process-local
         counter — is derived identically on every host."""
-        elt = jnp.dtype(self.cfg.wire_dtype).itemsize
+        elt = wire_mod.wire_itemsize(self.cfg.wire_format,
+                                     self.cfg.wire_dtype)
         algos = []
         for i, (s, e) in enumerate(bounds):
             algo = topo_mod.resolve_algorithm(self.cfg.collective_algo,
@@ -146,22 +167,34 @@ class GradientFlow:
 
     # -- state -------------------------------------------------------------
 
+    @property
+    def _residual_size(self) -> int:
+        """Pool-shaped when error feedback is live, zero-size otherwise
+        (placeholders keep the train-state pytree uniform)."""
+        return self.pool.size if self.cfg.feedback_enabled else 0
+
     def init_state(self) -> GFState:
+        residual = jnp.zeros((self._residual_size,), jnp.float32)
         if self.cfg.csc_enabled:
             st = csc_mod.init_state(self.pool.size, self.cfg.chunk_elems)
-            return GFState(hg=st.hg, chunk_norms=st.chunk_norms)
+            return GFState(hg=st.hg, chunk_norms=st.chunk_norms,
+                           residual=residual)
         # Zero-size placeholders keep the train-state pytree uniform.
         return GFState(hg=jnp.zeros((0,), jnp.float32),
-                       chunk_norms=jnp.zeros((0,), jnp.float32))
+                       chunk_norms=jnp.zeros((0,), jnp.float32),
+                       residual=residual)
 
     def abstract_state(self) -> GFState:
+        residual = jax.ShapeDtypeStruct((self._residual_size,), jnp.float32)
         if self.cfg.csc_enabled:
             return GFState(
                 hg=jax.ShapeDtypeStruct((self.pool.size,), jnp.float32),
                 chunk_norms=jax.ShapeDtypeStruct((self.num_chunks,),
-                                                 jnp.float32))
+                                                 jnp.float32),
+                residual=residual)
         return GFState(hg=jax.ShapeDtypeStruct((0,), jnp.float32),
-                       chunk_norms=jax.ShapeDtypeStruct((0,), jnp.float32))
+                       chunk_norms=jax.ShapeDtypeStruct((0,), jnp.float32),
+                       residual=residual)
 
     def stage_for_step(self, step: int) -> schedule_mod.SparsityStage:
         return schedule_mod.stage_at(self.stages, step,
@@ -197,6 +230,9 @@ class GradientFlow:
         *,
         stage: Optional[schedule_mod.SparsityStage] = None,
         prepacked: bool = False,
+        census: Optional[jax.Array] = None,
+        census_sum: Optional[jax.Array] = None,
+        loss_scale=None,
     ) -> Tuple[jax.Array, jax.Array, GFState]:
         """Reduce the local gradient pool across the data axes.
 
@@ -209,6 +245,20 @@ class GradientFlow:
         the dense/lazy buckets skip their per-bucket down-cast. CSC keeps
         f32 input regardless — its hg accumulation must not round through
         the wire dtype before the selection decides what is transmitted.
+
+        Quantized wire formats: ``census`` is the per-rank chunk-L1
+        census the pack pipeline already emitted for ``pool_grads``
+        (recomputed here when None — one extra pool pass); the dense/lazy
+        quantized path psums it (one tiny f32[chunks] collective) to
+        derive rank-invariant per-chunk scales. ``census_sum`` hands in an
+        ALREADY-allreduced census instead (the guarded monolithic path,
+        which needs the sum for its health verdict too — passing it back
+        keeps the guarded step at exactly the unguarded step's collective
+        count). ``loss_scale`` is the
+        guard's power-of-two scale on ``pool_grads`` (None = 1): the
+        error-feedback residual is stored UNSCALED, so the scaled
+        quantization error is divided by it on write and re-multiplied on
+        read — scaler backoffs never corrupt carried feedback.
         """
         cfg = self.cfg
         if cfg.mode == "csc":
@@ -219,9 +269,13 @@ class GradientFlow:
             if k >= self.num_chunks:
                 # Warm-up dense stage: full pool via the lazy path, but the
                 # CSC state must keep tracking norms for the handoff.
+                # Quantized runs keep NATIVE transport here: the very
+                # first iterations have no trustworthy census basis yet,
+                # and warm-up is by definition the dense phase.
                 return self._dense_or_lazy_with_norms(pool_grads, state)
             wire_bounds = csc_mod.wire_bucket_boundaries(
                 k, cfg.chunk_elems, self.bucket_elems)
+            feedback = cfg.feedback_enabled
             res = csc_mod.csc_reduce(
                 pool_grads,
                 csc_mod.CSCState(hg=state.hg, chunk_norms=state.chunk_norms),
@@ -230,18 +284,64 @@ class GradientFlow:
                 bucket_boundaries=wire_bounds,
                 num_data_shards=self.num_data_shards,
                 algo=self._algos_for(wire_bounds),
+                residual=state.residual if feedback else None,
             )
             return res.grads, res.elem_mask, GFState(
-                hg=res.state.hg, chunk_norms=res.state.chunk_norms)
+                hg=res.state.hg, chunk_norms=res.state.chunk_norms,
+                residual=res.residual if feedback else state.residual)
 
         dense = cfg.mode == "dense"
         bounds = self._dense_bounds if dense else self._lazy_bounds
         algos = self._dense_algos if dense else self._lazy_algos
+        if self.wire_spec is not None:
+            return self._quantized_dense_or_lazy(
+                pool_grads, state, bounds, algos, census=census,
+                census_sum=census_sum, loss_scale=loss_scale)
         wire = None if prepacked else cfg.wire_dtype
         summed = bucketed_reduce(pool_grads, bounds, cfg.reduce_axes,
                                  wire, algo=algos)
         mean = summed / self.num_data_shards
         mask = jnp.ones(mean.shape, dtype=jnp.bool_)
+        return mean, mask, state
+
+    def quantized_scales(self, census_sum: jax.Array) -> jax.Array:
+        """Per-chunk wire scales from a rank-invariant census sum."""
+        return wire_mod.scales_from_census(
+            census_sum, chunk_elems=self.cfg.chunk_elems,
+            num_shards=self.num_data_shards, spec=self.wire_spec)
+
+    def _quantized_dense_or_lazy(
+        self, pool_grads: jax.Array, state: GFState, bounds, algos, *,
+        census: Optional[jax.Array] = None,
+        census_sum: Optional[jax.Array] = None, loss_scale=None,
+    ) -> Tuple[jax.Array, jax.Array, GFState]:
+        """Dense/lazy transport on a low-bit wire: one census psum for
+        rank-invariant scales, one pool-pass quantize with error
+        feedback, scaled-domain buckets on the wire, dequant after."""
+        cfg = self.cfg
+        from repro.parallel.collectives import reduce_pool
+        g = pool_grads.astype(jnp.float32)
+        if cfg.feedback_enabled:
+            r = state.residual if loss_scale is None else \
+                state.residual * loss_scale
+            g = g + r
+        if census_sum is None:
+            if census is None:
+                census = wire_mod.chunk_l1(pool_grads.astype(jnp.float32),
+                                           cfg.chunk_elems)
+            census_sum = reduce_pool(census, cfg.reduce_axes)
+        scales = self.quantized_scales(census_sum)
+        q, err = wire_mod.quantize_pool(
+            g, scales, chunk_elems=cfg.chunk_elems, spec=self.wire_spec,
+            num_shards=self.num_data_shards)
+        summed = bucketed_reduce(q, bounds, cfg.reduce_axes, None,
+                                 algo=algos)
+        mean = wire_mod.dequantize_pool(summed, scales, cfg.chunk_elems) \
+            / self.num_data_shards
+        mask = jnp.ones(mean.shape, dtype=jnp.bool_)
+        if cfg.feedback_enabled:
+            residual = err if loss_scale is None else err / loss_scale
+            state = state._replace(residual=residual)
         return mean, mask, state
 
     def _dense_or_lazy_with_norms(
@@ -262,29 +362,47 @@ class GradientFlow:
         # hg is per-data-shard state: keep its device-varying tag even for
         # the (invariant) zeros written during dense warm-up.
         hg_new = match_vma(jnp.zeros_like(state.hg), pool_grads)
-        return mean, mask, GFState(hg=hg_new, chunk_norms=norms)
+        return mean, mask, GFState(hg=hg_new, chunk_norms=norms,
+                                   residual=state.residual)
 
     # -- analytics ---------------------------------------------------------
 
     def wire_bytes_per_step(self, stage: Optional[schedule_mod.SparsityStage]
                             = None) -> int:
         """Bytes entering the allreduce on each device (model, not measured).
-        Used by the paper-table benchmarks."""
-        elt = jnp.dtype(self.cfg.wire_dtype).itemsize
+        Used by the paper-table benchmarks and the kernel-bench wire gate.
+
+        Low-bit formats count 1 byte per payload element plus the f32
+        census sidecar: CSC's norm allreduce already carries the census
+        (scales derive from it for free), while the dense/lazy quantized
+        path adds its own f32[chunks] census psum."""
+        elt = wire_mod.wire_itemsize(self.cfg.wire_format,
+                                     self.cfg.wire_dtype)
+        quantized = self.wire_spec is not None
+        census_bytes = self.num_chunks * 4  # f32 per-chunk census
         if self.cfg.mode == "csc":
             stage = stage or self.stages[-1]
             if stage.num_selected < self.num_chunks:
-                payload = stage.num_selected * self.cfg.chunk_elems
-                payload += self.num_chunks  # the norm allreduce (f32≈wire)
-                return payload * elt
-        return self.pool.size * elt
+                payload = stage.num_selected * self.cfg.chunk_elems * elt
+                if quantized:
+                    return payload + census_bytes
+                # native: the norm allreduce rides at ≈ wire width
+                return payload + self.num_chunks * elt
+            # warm-up stays on native transport (see reduce()).
+            return self.pool.size * jnp.dtype(self.cfg.wire_dtype).itemsize \
+                + census_bytes
+        payload = self.pool.size * elt
+        return payload + census_bytes if quantized else payload
 
     def num_collectives(self, stage=None) -> int:
         cfg = self.cfg
+        # Quantized dense/lazy adds the census psum the scales derive from.
+        extra = 1 if (self.wire_spec is not None
+                      and cfg.mode in ("dense", "lazy")) else 0
         if cfg.mode == "dense":
-            return len(self._dense_bounds)
+            return len(self._dense_bounds) + extra
         if cfg.mode == "lazy":
-            return len(self._lazy_bounds)
+            return len(self._lazy_bounds) + extra
         stage = stage or self.stages[-1]
         if stage.num_selected >= self.num_chunks:
             return len(self._lazy_bounds) + 1

@@ -62,6 +62,35 @@ def overflow_limit(cfg: GuardConfig, wire_dtype) -> float:
     return float(fi.max) * cfg.overflow_fraction
 
 
+def per_chunk_limit(scale_census: jax.Array, cfg: GuardConfig,
+                    absolute_limit: float) -> jax.Array:
+    """Per-chunk overflow limits for quantized wire formats.
+
+    The per-chunk quantization scales (repro.core.wire) are derived from
+    a census *basis* — for CSC, the PREVIOUS iteration's allreduced
+    chunk norms. A chunk whose current census lands at
+    ``1 / overflow_fraction`` (512x) times its scale basis is saturating
+    its wire grid en masse: the injected-fault case (an exponent flip
+    inflates one chunk by orders of magnitude) and exactly the condition
+    a scalar limit keyed to bf16's max cannot see, because int8's
+    saturating clip never produces an Inf to catch post-hoc. The
+    absolute bf16-max-fraction limit still applies on top (the census
+    itself is f32 and can grow without wire saturation), so the
+    effective limit is the elementwise minimum.
+
+    ``flags_from_census`` broadcasts an array limit per chunk, making
+    both the detection and the skip per-chunk-granular: any single
+    tripped chunk rejects the step atomically.
+
+    Chunks with a ZERO basis (the padding tail; dead parameters) get only
+    the absolute limit: their census is legitimately 0 and ``0 >= 0``
+    must not trip, while mass appearing in a previously-silent chunk is
+    a warm-up-like event the relative check has no basis to judge."""
+    basis = scale_census.astype(jnp.float32)
+    rel = jnp.where(basis > 0, basis / cfg.overflow_fraction, jnp.inf)
+    return jnp.minimum(rel, jnp.float32(absolute_limit))
+
+
 def health_word(seg: jax.Array) -> jax.Array:
     """One bucket's in-band health word: the bucket-level L1 census in
     f32. NaN elements make it NaN, Inf elements make it Inf, and a
@@ -70,13 +99,15 @@ def health_word(seg: jax.Array) -> jax.Array:
     return jnp.sum(jnp.abs(seg.astype(jnp.float32)))
 
 
-def flags_from_census(census: jax.Array, limit: float) -> HealthFlags:
+def flags_from_census(census: jax.Array, limit) -> HealthFlags:
     """Fold a census vector (per-bucket health words or CSC's per-chunk
-    L1 norms) into the step verdict."""
+    L1 norms) into the step verdict. ``limit`` may be a scalar or a
+    per-chunk array (``per_chunk_limit``) — the comparison broadcasts."""
     finite = jnp.isfinite(census)
     return HealthFlags(
         nonfinite=jnp.any(~finite),
-        overflow=jnp.any(finite & (census >= jnp.float32(limit))))
+        overflow=jnp.any(finite &
+                         (census >= jnp.asarray(limit, jnp.float32))))
 
 
 def flags_from_words(words: Sequence[jax.Array],

@@ -1,0 +1,179 @@
+"""Low-bit wire formats with error feedback (int8 / fp8-e4m3 transport).
+
+The paper's mixed-precision communication (§2.5) halves wire traffic by
+casting gradients to fp16/bf16 for transport. This module goes one rung
+lower — the standard next step in the communication-optimization
+literature (arXiv 2003.03009): quantize each gradient chunk to int8 or
+fp8-e4m3 with a **per-chunk scale**, transport 1-byte words, and keep
+convergence intact with **error feedback** — the per-rank quantization
+error is carried in a pool-shaped residual and re-injected into the next
+step's gradient, so the quantizer's bias telescopes away over steps.
+
+The scales come from the chunk-L1 census the pack pipeline already emits
+(one pass, no new sweep over the pool). Everything is derived so the ring
+transport stays overflow-free and — for int8 — *exact*:
+
+* ``meanabs_c = census_sum_c / (num_shards * chunk_elems)`` where
+  ``census_sum_c`` is the **rank-invariant** (allreduced) chunk-L1 sum,
+  so every rank derives bit-identical scales with no side channel.
+* grid step ``s_c = WIRE_MARGIN * num_shards * meanabs_c / qmax`` and a
+  per-rank clip at ``±floor(qmax / num_shards)``: each rank's quantized
+  magnitude is at most ``qmax / num_shards``, so any partial sum along
+  the ring is bounded by ``qmax`` — the wire word never saturates
+  mid-flight, at any ring skew, on any subset of ranks.
+* for int8 the wire words are integers and partial sums of integers stay
+  on the quantization grid, so the in-kernel requant at every ring hop is
+  **exact**: the ring result equals the sum of the per-rank quantized
+  values bit-for-bit, and ALL quantization error is the local quantize
+  step — fully captured by the residual. fp8-e4m3's non-uniform grid
+  reintroduces a per-hop rounding error (bounded, tolerance-gated in
+  ``BENCH_kernels.json``).
+
+``WIRE_MARGIN`` trades coverage against resolution: the per-rank
+representable range is ``WIRE_MARGIN * meanabs_c`` (values beyond it clip
+into the residual). 16 covers ≈13σ of a roughly-Gaussian chunk while
+keeping the grid step near ``0.13 * meanabs`` on one shard.
+
+See docs/numerics.md for the full derivation and the wire-bytes
+accounting; guard composition (per-chunk overflow limits, residual in the
+atomic skip set) lives in ``repro.core.guard``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Per-rank coverage in multiples of the chunk's mean |g|. Values beyond
+# WIRE_MARGIN * meanabs clip (saturating) and flow into the residual.
+WIRE_MARGIN = 16.0
+
+# Scales never collapse to zero (an all-zero chunk quantizes to zeros
+# against the floor instead of dividing by zero).
+SCALE_FLOOR = 1e-30
+
+
+class WireSpec(NamedTuple):
+    """One low-bit wire format: storage dtype + quantization range."""
+
+    name: str
+    dtype: jnp.dtype
+    qmax: float          # largest representable |value| on the wire grid
+    integer_grid: bool   # partial sums stay on the grid (int8) or not
+
+
+def _formats() -> dict:
+    fmts = {"int8": WireSpec("int8", jnp.dtype(jnp.int8), 127.0, True)}
+    # fp8-e4m3 only where this jax build ships the dtype.
+    if hasattr(jnp, "float8_e4m3fn"):
+        fmts["fp8_e4m3"] = WireSpec(
+            "fp8_e4m3", jnp.dtype(jnp.float8_e4m3fn), 448.0, False)
+    return fmts
+
+
+def supported_formats() -> Tuple[str, ...]:
+    """Names accepted by ``GradientFlowConfig.wire_format``."""
+    return ("native",) + tuple(sorted(_formats()))
+
+
+def resolve(wire_format: Optional[str]) -> Optional[WireSpec]:
+    """Map a config string to a WireSpec; ``None``/``'native'`` -> None
+    (the bf16-cast transport of §2.5, unchanged). Unknown or unavailable
+    formats raise at build time, not at trace time."""
+    if wire_format in (None, "native"):
+        return None
+    fmts = _formats()
+    if wire_format not in fmts:
+        if wire_format == "fp8_e4m3":
+            raise ValueError(
+                "wire_format='fp8_e4m3' needs a jax with jnp.float8_e4m3fn; "
+                "use 'int8' or 'native'")
+        raise ValueError(
+            f"unknown wire_format {wire_format!r}; "
+            f"expected one of {supported_formats()}")
+    return fmts[wire_format]
+
+
+def is_quantized(wire_format: Optional[str]) -> bool:
+    return wire_format not in (None, "native")
+
+
+def rank_clip(spec: WireSpec, num_shards: int) -> float:
+    """Per-rank wire clip ``floor(qmax / num_shards)``: guarantees every
+    ring partial sum over <= num_shards ranks fits in ``qmax``."""
+    return float(max(1.0, spec.qmax // max(1, num_shards)))
+
+
+def chunk_l1(pool: jax.Array, chunk_elems: int) -> jax.Array:
+    """Per-chunk L1 census, f32 accumulate. Fallback for callers that do
+    not already hold the pack pipeline's fused census (the pool must be
+    padded to a chunk multiple, as the quantized pipeline requires)."""
+    assert pool.shape[0] % chunk_elems == 0, (pool.shape, chunk_elems)
+    return jnp.sum(jnp.abs(pool.reshape((-1, chunk_elems))),
+                   axis=1, dtype=jnp.float32)
+
+
+def scales_from_census(census_sum: jax.Array, *, chunk_elems: int,
+                       num_shards: int, spec: WireSpec) -> jax.Array:
+    """Per-chunk grid step from the rank-invariant census sum.
+
+    ``census_sum`` must be identical on every participating rank (the
+    allreduced chunk-L1: CSC's ``state.chunk_norms``, or the one tiny
+    census psum the dense/lazy quantized path issues)."""
+    meanabs = census_sum.astype(jnp.float32) / (num_shards * chunk_elems)
+    return jnp.maximum(meanabs * (WIRE_MARGIN * num_shards / spec.qmax),
+                       jnp.float32(SCALE_FLOOR))
+
+
+def segment_scales(scales: jax.Array, start: int, end: int,
+                   chunk_elems: int) -> jax.Array:
+    """Per-element scales for pool span [start, end) (static bounds).
+    Spans need not be chunk-aligned — buckets close at tensor boundaries,
+    chunks are fixed-size — so the chunk id is computed per element."""
+    idx = (start + jnp.arange(end - start, dtype=jnp.int32)) // chunk_elems
+    return jnp.take(scales, idx)
+
+
+def quantize_pool(g: jax.Array, scales: jax.Array, *, chunk_elems: int,
+                  spec: WireSpec,
+                  num_shards: int) -> Tuple[jax.Array, jax.Array]:
+    """One pool pass: quantize ``g`` (f32, chunk-padded) onto the wire
+    grid and return ``(q, err)`` where ``err = g - dequantize(q)`` is the
+    error-feedback residual contribution. int8 rounds-to-nearest then
+    clips at the per-rank clip; fp8 clips in f32 and lets the cast round
+    onto the e4m3 grid (err is computed from the *actual* wire values
+    either way, so feedback is exact for both)."""
+    assert g.shape[0] % chunk_elems == 0, (g.shape, chunk_elems)
+    clip = rank_clip(spec, num_shards)
+    scaled = g.reshape((-1, chunk_elems)).astype(jnp.float32) / scales[:, None]
+    if spec.integer_grid:
+        scaled = jnp.clip(jnp.round(scaled), -clip, clip)
+    else:
+        scaled = jnp.clip(scaled, -clip, clip)
+    q = scaled.reshape(g.shape).astype(spec.dtype)
+    return q, g.astype(jnp.float32) - dequantize_pool(q, scales, chunk_elems)
+
+
+def dequantize_pool(q: jax.Array, scales: jax.Array,
+                    chunk_elems: int) -> jax.Array:
+    """Wire words (or their f32 ring sums) back to gradient units."""
+    vals = q.astype(jnp.float32).reshape((-1, chunk_elems)) * scales[:, None]
+    return vals.reshape((q.shape[0],))
+
+
+def dequantize_segment(seg: jax.Array, scales: jax.Array, start: int,
+                       end: int, chunk_elems: int) -> jax.Array:
+    """Per-bucket dequant: ``seg`` is the summed scaled-domain segment a
+    ``reduce_bucket`` returned for pool span [start, end)."""
+    return seg.astype(jnp.float32) * segment_scales(
+        scales, start, end, chunk_elems)
+
+
+def wire_itemsize(wire_format: Optional[str], wire_dtype) -> int:
+    """Bytes per pool element on the wire: 1 for the low-bit formats,
+    the storage dtype's size for native transport."""
+    spec = resolve(wire_format)
+    if spec is None:
+        return jnp.dtype(wire_dtype).itemsize
+    return spec.dtype.itemsize

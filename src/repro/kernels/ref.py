@@ -122,6 +122,18 @@ def pool_unpack_update(
     return leaves, new_mom
 
 
+def _requant(vals: jax.Array, wire) -> jax.Array:
+    """Accumulator values -> the wire grid, the twin of the ring
+    kernel's in-kernel requant. Integer wires (the int8 low-bit format,
+    repro.core.wire) round-to-nearest explicitly — astype truncates —
+    and stay lossless because quantized ring inputs are per-rank-clipped
+    to qmax/N, so partial sums are exact integers within the grid.
+    Float wires (bf16, fp8-e4m3) round via the cast."""
+    if jnp.issubdtype(jnp.dtype(wire), jnp.integer):
+        vals = jnp.round(vals)
+    return vals.astype(wire)
+
+
 def _ring_reduce_scatter(acc: jax.Array, axis: str, n: int, seg: int,
                          wire, accum):
     """The reduce-scatter half of the ring: N-1 ``ppermute`` neighbor
@@ -140,7 +152,7 @@ def _ring_reduce_scatter(acc: jax.Array, axis: str, n: int, seg: int,
 
     for t in range(n - 1):
         send_idx = (me - t) % n
-        recv = jax.lax.ppermute(seg_slice(acc, send_idx).astype(wire),
+        recv = jax.lax.ppermute(_requant(seg_slice(acc, send_idx), wire),
                                 axis, perm)
         recv_idx = (me - t - 1) % n
         acc = jax.lax.dynamic_update_slice(
@@ -153,7 +165,7 @@ def _ring_reduce_scatter(acc: jax.Array, axis: str, n: int, seg: int,
         # extra f32 precision would otherwise make the result device-
         # varying, which the optimizer's replicated update cannot absorb).
         acc = jax.lax.dynamic_update_slice(
-            acc, seg_slice(acc, own).astype(wire).astype(accum),
+            acc, _requant(seg_slice(acc, own), wire).astype(accum),
             (own * seg,))
     return acc, own
 
@@ -200,7 +212,7 @@ def ring_allreduce(x: jax.Array, axis: str, *, wire_dtype=None,
     for t in range(n - 1):
         send_idx = (me + 1 - t) % n
         chunk = jax.lax.dynamic_slice(acc, (send_idx * seg,), (seg,))
-        recv = jax.lax.ppermute(chunk.astype(wire), axis, perm)
+        recv = jax.lax.ppermute(_requant(chunk, wire), axis, perm)
         recv_idx = (me - t) % n
         acc = jax.lax.dynamic_update_slice(acc, recv.astype(accum_dtype),
                                            (recv_idx * seg,))
@@ -228,7 +240,7 @@ def ring_allreduce_invariant(x: jax.Array, axis: str, *, wire_dtype=None,
     if n == 1:
         return x
     acc, own = _ring_reduce_scatter(acc, axis, n, seg, wire, accum_dtype)
-    shard = jax.lax.dynamic_slice(acc, (own * seg,), (seg,)).astype(wire)
+    shard = _requant(jax.lax.dynamic_slice(acc, (own * seg,), (seg,)), wire)
     full = _all_gather_invariant(shard, axis, n, idx=own)
     return full[:x.shape[0]].astype(out_dtype)
 

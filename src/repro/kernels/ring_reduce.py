@@ -15,11 +15,22 @@ Schedule (rank d of N, segments of ``seg`` elements, see ``plan``):
 2(N-1) neighbor exchanges total, each carrying one ``seg``-sized segment:
 the bandwidth-optimal ring of the paper's Fig 7a. Mechanics:
 
-* Segments travel in the **wire dtype** (bf16 in production) while the
-  local accumulator stays **f32 in HBM** — the same mixed-precision wire
-  contract as the pool pipeline (§2.5). Before the gather phase the owned
-  segment is rounded through the wire dtype once, so every rank ends
-  bit-identical (the optimizer's replicated update requires it).
+* Segments travel in the **wire dtype** while the local accumulator
+  stays **f32 in HBM** — the same mixed-precision wire contract as the
+  pool pipeline (§2.5). Before the gather phase the owned segment is
+  rounded through the wire dtype once, so every rank ends bit-identical
+  (the optimizer's replicated update requires it).
+* **Low-bit wires** (int8 / fp8-e4m3, ``repro.core.wire``): the caller
+  passes pre-quantized scaled-domain words as ``x`` and the kernel runs
+  the dequant-accumulate-requant cycle per hop — recv words up-cast to
+  the f32 accumulator (dequant onto the in-flight grid), partial sums
+  accumulate in f32, and each send requants through the wire grid
+  (round-to-nearest for integer wires, where partial sums of per-rank
+  qmax/N-clipped words stay exact integers within the grid, making the
+  int8 ring lossless; fp8's non-uniform grid rounds per hop). The
+  per-chunk scales ride alongside the wire buffer at the jnp level —
+  dequantization to gradient units happens once after the ring, so the
+  kernel stays alignment-agnostic w.r.t. chunk boundaries.
 * Each exchange streams its segment through two VMEM send/recv slots of
   ~``tiling.TILE_TARGET_BYTES`` (the PR-3 slot pattern): the segment is
   padded up to a whole number of tiles (``plan``), so every sub-tile is
@@ -105,6 +116,11 @@ def plan(n_elems: int, n_ranks: int, wire_dtype,
     way around: collapsing the tile to the segment would make VMEM
     O(segment) and break the streaming bound for the ragged segment
     sizes tensor-aligned buckets routinely produce.
+
+    One-byte wire dtypes (int8 / fp8-e4m3) flow through unchanged:
+    ``wire_bytes_per_step`` scales with the 1-byte itemsize (the 2x-over-
+    bf16 reduction the kernel gate pins) and the default tile doubles in
+    elements at the same ~512KiB byte budget.
     """
     wsize = tiling.itemsize(wire_dtype)
     asize = tiling.itemsize(accum_dtype)
@@ -144,9 +160,23 @@ def _kernel(ids_ref, x_ref, out_ref, send_buf, recv_buf, stage, seed_buf,
     right = ids_ref[1]
     left = ids_ref[2]
     n_tiles = seg // tile
+    integer_wire = jnp.issubdtype(jnp.dtype(wire), jnp.integer)
 
     def tile_ds(base, j):
         return pl.ds(base + j * tile, tile)
+
+    def requant(vals):
+        """f32 accumulator values -> the wire grid (the requant half of
+        the low-bit dequant-accumulate-requant cycle; dequant is the
+        ``.astype(accum)`` on the recv side). Integer wires (int8)
+        round-to-nearest explicitly — astype truncates toward zero — and
+        need no clip: quantized ring inputs are per-rank-clipped to
+        qmax/N (repro.core.wire), so every partial sum is an exact
+        integer within the grid and this requant is lossless. Float
+        wires (bf16, fp8-e4m3) round via the cast itself."""
+        if integer_wire:
+            vals = jnp.round(vals)
+        return vals.astype(wire)
 
     def rdma(slot):
         return pltpu.make_async_remote_copy(
@@ -203,7 +233,7 @@ def _kernel(ids_ref, x_ref, out_ref, send_buf, recv_buf, stage, seed_buf,
                 stage.at[slot], copy_sems.at[slot])
             cp.start()
             cp.wait()
-            send_buf[slot] = stage[slot].astype(wire)
+            send_buf[slot] = requant(stage[slot])
             rd = rdma(slot)
             rd.start()
             rd.wait()
@@ -247,7 +277,7 @@ def _kernel(ids_ref, x_ref, out_ref, send_buf, recv_buf, stage, seed_buf,
                                        stage.at[0], copy_sems.at[0])
             cp.start()
             cp.wait()
-            stage[0] = stage[0].astype(wire).astype(accum)
+            stage[0] = requant(stage[0]).astype(accum)
             out = pltpu.make_async_copy(
                 stage.at[0], out_ref.at[tile_ds(own * seg, j)],
                 copy_sems.at[0])

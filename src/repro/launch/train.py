@@ -43,7 +43,9 @@ def build(args):
         mode=args.gf_mode, bucket_elems=args.bucket_elems,
         chunk_elems=args.chunk_elems, sparsity=args.sparsity,
         momentum=args.momentum, warmup_steps=args.csc_warmup,
-        warmup_stages=4, use_kernels=args.use_kernels)
+        warmup_stages=4, use_kernels=args.use_kernels,
+        wire_format=args.wire_format,
+        error_feedback=not args.no_error_feedback)
     opt = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, momentum=args.momentum,
         warmup_steps=max(args.steps // 20, 1), total_steps=args.steps,
@@ -75,6 +77,13 @@ def main(argv=None):
     p.add_argument("--momentum", type=float, default=0.9)
     p.add_argument("--attn-chunk", type=int, default=0)
     p.add_argument("--use-kernels", action="store_true")
+    p.add_argument("--wire-format", default="native",
+                   choices=["native", "int8", "fp8_e4m3"],
+                   help="low-bit wire with per-chunk scales; 'native' "
+                        "keeps the plain wire_dtype cast")
+    p.add_argument("--no-error-feedback", action="store_true",
+                   help="drop the quantization-error residual "
+                        "(ablation; biased wire)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None,
                    help="default: a fresh temp dir (pass a path to resume)")

@@ -80,6 +80,14 @@ class TrainState(NamedTuple):
     # pytree leaves — otherwise, so unguarded states, their checkpoints,
     # and positional construction all predate-compatibly ignore it.
     guard: Any = ()
+    # The pack staging buffer (repro.core.pool.pack_into): the previous
+    # step's packed gradient pool, threaded back through the donated
+    # state so the fwd-region pack writes fully in place — steady-state
+    # steps allocate nothing pool-sized. A step built with donate=False
+    # passes it through untouched (donation is the whole point). The
+    # empty-tuple default keeps positionally-constructed legacy states
+    # valid; ``Trainer.init_state`` always materializes the buffer.
+    staging: Any = ()
 
 
 _pvary = compat_pvary
@@ -113,7 +121,10 @@ class Trainer:
             from repro.launch.mesh import mesh_topology
             gf_cfg = dataclasses.replace(
                 gf_cfg, topology=mesh_topology(mesh, self.data_axes))
-        pad = gf_cfg.chunk_elems if gf_cfg.csc_enabled else 1
+        # CSC chunking and per-chunk quantization scales both key off
+        # whole chunks: pad the pool to a chunk multiple for either.
+        pad = gf_cfg.chunk_elems \
+            if (gf_cfg.csc_enabled or gf_cfg.quantized) else 1
         self.pool = GradientPool(sh.abstract_params(self.local_specs),
                                  pad_to=pad)
         self.gf = GradientFlow(gf_cfg, self.pool, self.num_data)
@@ -182,6 +193,15 @@ class Trainer:
         return NamedSharding(self.mesh, P(row, col))
 
     def _gf_abstract(self) -> GFState:
+        # Error-feedback residual: per-data-shard pool state, exactly
+        # hg's layout (a stacked row per shard). Zero-size placeholder
+        # keeps the pytree uniform when feedback is off.
+        rep = NamedSharding(self.mesh, P(None, None))
+        residual = jax.ShapeDtypeStruct(
+            (self.num_data, self.global_pool), jnp.float32,
+            sharding=self._hg_sharding()) \
+            if self.gf_cfg.feedback_enabled else \
+            jax.ShapeDtypeStruct((1, 0), jnp.float32, sharding=rep)
         if self.gf_cfg.csc_enabled:
             return GFState(
                 hg=jax.ShapeDtypeStruct((self.num_data, self.global_pool),
@@ -189,13 +209,14 @@ class Trainer:
                                         sharding=self._hg_sharding()),
                 chunk_norms=jax.ShapeDtypeStruct(
                     (self.num_chunks_global,), jnp.float32,
-                    sharding=self._pool_sharding()))
-        rep = NamedSharding(self.mesh, P(None, None))
+                    sharding=self._pool_sharding()),
+                residual=residual)
         return GFState(
             hg=jax.ShapeDtypeStruct((1, 0), jnp.float32, sharding=rep),
             chunk_norms=jax.ShapeDtypeStruct((0,), jnp.float32,
                                              sharding=NamedSharding(
-                                                 self.mesh, P(None))))
+                                                 self.mesh, P(None))),
+            residual=residual)
 
     def abstract_state(self) -> TrainState:
         params = jax.tree_util.tree_map(
@@ -212,10 +233,13 @@ class Trainer:
             lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
             scaler_mod.abstract(self.gf_cfg.guard)) \
             if self.gf_cfg.guarded else ()
+        staging = jax.ShapeDtypeStruct(
+            (self.num_data, self.global_pool), self._staging_dtype,
+            sharding=self._hg_sharding())
         return TrainState(
             params=params, opt=opt, gf=self._gf_abstract(),
             step=jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
-            guard=guard)
+            guard=guard, staging=staging)
 
     def init_state(self, key: jax.Array) -> TrainState:
         with compat_set_mesh(self.mesh):
@@ -227,6 +251,11 @@ class Trainer:
                     jnp.zeros((self.global_pool,), a.dtype),
                     self._pool_sharding()),
                 opt_init_state(self.opt_name, 1))
+            residual = jax.device_put(
+                jnp.zeros((self.num_data, self.global_pool), jnp.float32),
+                self._hg_sharding()) \
+                if self.gf_cfg.feedback_enabled else \
+                jnp.zeros((1, 0), jnp.float32)
             if self.gf_cfg.csc_enabled:
                 from repro.core import csc as csc_mod
                 # per-shard init tiled across model shards
@@ -239,14 +268,20 @@ class Trainer:
                         self._hg_sharding()),
                     chunk_norms=jax.device_put(
                         jnp.tile(one.chunk_norms, self.model_size),
-                        self._pool_sharding()))
+                        self._pool_sharding()),
+                    residual=residual)
             else:
                 gf = GFState(hg=jnp.zeros((1, 0), jnp.float32),
-                             chunk_norms=jnp.zeros((0,), jnp.float32))
+                             chunk_norms=jnp.zeros((0,), jnp.float32),
+                             residual=residual)
             guard = scaler_mod.init(self.gf_cfg.guard) \
                 if self.gf_cfg.guarded else ()
+            staging = jax.device_put(
+                jnp.zeros((self.num_data, self.global_pool),
+                          self._staging_dtype), self._hg_sharding())
             return TrainState(params=params, opt=opt, gf=gf,
-                              step=jnp.zeros((), jnp.int32), guard=guard)
+                              step=jnp.zeros((), jnp.int32), guard=guard,
+                              staging=staging)
 
     # -- batch specs ----------------------------------------------------------
 
@@ -274,13 +309,35 @@ class Trainer:
     def _pack_dtype(self):
         """Pool dtype of the grad handoff: dense/lazy pack straight to the
         wire dtype (the reduce then skips its per-bucket cast); CSC packs
-        to f32 because hg accumulation precedes the wire cast."""
-        prepacked = self.gf_cfg.mode in ("dense", "lazy")
+        to f32 because hg accumulation precedes the wire cast, and the
+        quantized wire formats pack to f32 because the update region
+        quantizes AFTER error-feedback injection (repro.core.wire)."""
+        prepacked = self.gf_cfg.mode in ("dense", "lazy") \
+            and self.gf.wire_spec is None
         return jnp.dtype(self.gf_cfg.wire_dtype) if prepacked \
             else jnp.float32
 
+    @property
+    def _staging_dtype(self):
+        """Dtype of the pack staging buffer (``pool.pack_into``): the
+        wire dtype when the streaming kernel aliases the pool to its
+        staging, else the leaves' (f32) source dtype — the ref twin's
+        stage-then-cast contract."""
+        pd = self._pack_dtype
+        if pd == jnp.dtype(jnp.float32) or self.gf_cfg.use_kernels:
+            return pd
+        return jnp.dtype(jnp.float32)
+
+    @property
+    def _census_on(self) -> bool:
+        """Quantized dense/lazy: the fwd-region pack emits the fused
+        chunk-L1 census the wire scales derive from (one pass, no new
+        sweep); it rides the region boundary next to the pool."""
+        return self.gf.wire_spec is not None \
+            and self.gf_cfg.mode in ("dense", "lazy")
+
     def _inner_update(self, gpool, params, opt, gfstate, lr, stage,
-                      scaler=None):
+                      scaler=None, census=None):
         """Runs fully manual (data+model), as the SIBLING region of the
         fwd/bwd shard_map. Everything here is local; ``gpool`` arrives
         already packed (the fwd region ravels grads into the local pool
@@ -296,20 +353,25 @@ class Trainer:
         primitives and are numerically equivalent (tests/test_engine.py).
         """
         cfg = self.gf_cfg
-        gf_local = GFState(hg=gfstate.hg[0], chunk_norms=gfstate.chunk_norms)
+        gf_local = GFState(hg=gfstate.hg[0], chunk_norms=gfstate.chunk_norms,
+                           residual=gfstate.residual[0])
         if scaler is not None:
             return self._inner_update_guarded(gpool, params, opt, gf_local,
-                                              scaler, lr, stage)
+                                              scaler, lr, stage,
+                                              census=census)
         if cfg.overlap == "staged":
             plan = self.engine.plan_for(stage)
             new_params, opt2, gf2 = self.engine.run(
-                plan, gpool, params, opt, gf_local, lr)
+                plan, gpool, params, opt, gf_local, lr, census=census)
             return new_params, opt2, GFState(hg=gf2.hg[None],
-                                             chunk_norms=gf2.chunk_norms)
+                                             chunk_norms=gf2.chunk_norms,
+                                             residual=gf2.residual[None])
         assert cfg.overlap == "monolithic", cfg.overlap
-        prepacked = cfg.mode in ("dense", "lazy")
+        prepacked = cfg.mode in ("dense", "lazy") \
+            and self.gf.wire_spec is None
         reduced, mask, gf2 = self.gf.reduce(gpool, gf_local, stage=stage,
-                                            prepacked=prepacked)
+                                            prepacked=prepacked,
+                                            census=census)
         master, _ = self.pool.pack(params, dtype=jnp.float32,
                                    use_kernels=cfg.use_kernels)
         scale = ratios = None
@@ -326,11 +388,12 @@ class Trainer:
             self.opt_name, self.pool, master, reduced, opt, mask,
             self.cfg.optimizer, lr, scale=scale, ratios=ratios,
             use_kernels=cfg.use_kernels)
-        gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms)
+        gf2 = GFState(hg=gf2.hg[None], chunk_norms=gf2.chunk_norms,
+                      residual=gf2.residual[None])
         return new_params, opt2, gf2
 
     def _inner_update_guarded(self, gpool, params, opt, gf_local, scaler,
-                              lr, stage):
+                              lr, stage, census=None):
         """Guard-railed reduce+update: the SAME collectives as the
         unguarded paths (the `--guard-check` jaxpr gate pins this), plus
         the census-derived health verdict and one atomic ``lax.cond``
@@ -344,25 +407,52 @@ class Trainer:
 
         cfg = self.gf_cfg
         gcfg = cfg.guard
+        quantized = self.gf.wire_spec is not None
         if cfg.overlap == "staged":
             plan = self.engine.plan_for(stage)
             new_params, opt2, gf2, sc2, _ = self.engine.run_guarded(
-                plan, gpool, params, opt, gf_local, scaler, lr)
+                plan, gpool, params, opt, gf_local, scaler, lr,
+                census=census)
             return new_params, opt2, GFState(
-                hg=gf2.hg[None], chunk_norms=gf2.chunk_norms), sc2
+                hg=gf2.hg[None], chunk_norms=gf2.chunk_norms,
+                residual=gf2.residual[None]), sc2
         assert cfg.overlap == "monolithic", cfg.overlap
         limit = guard_mod.overflow_limit(gcfg, cfg.wire_dtype)
-        prepacked = cfg.mode in ("dense", "lazy")
-        gin = gpool if prepacked \
+        prepacked = cfg.mode in ("dense", "lazy") and not quantized
+        census_sum = None
+        if quantized and not cfg.csc_enabled:
+            # Low-bit wires saturate instead of overflowing to Inf, so
+            # the census psum (which the wire scales need anyway) is the
+            # health channel; passing the sum back into reduce() keeps
+            # the guarded step at the unguarded collective count.
+            from repro.core import wire as wire_mod
+            from repro.parallel.collectives import reduce_pool
+            if census is None:
+                census = wire_mod.chunk_l1(gpool.astype(jnp.float32),
+                                           cfg.chunk_elems)
+            census_sum = reduce_pool(census, self.data_axes)
+        gin = gpool if (prepacked or quantized and not cfg.csc_enabled) \
             else gpool.astype(jnp.float32) / scaler.scale
-        reduced, mask, gf2 = self.gf.reduce(gin, gf_local, stage=stage,
-                                            prepacked=prepacked)
+        reduced, mask, gf2 = self.gf.reduce(
+            gin, gf_local, stage=stage, prepacked=prepacked,
+            census_sum=census_sum,
+            loss_scale=scaler.scale if quantized else None)
         if cfg.csc_enabled:
             # The allreduced chunk census (already issued for selection /
             # warm-up tracking) IS the health channel; `reduced` is
-            # already unscaled since `gin` was.
-            flags = guard_mod.flags_from_census(gf2.chunk_norms, limit)
+            # already unscaled since `gin` was. Quantized sparse stages
+            # tighten the limit per chunk against the scale basis (the
+            # previous census) — int8's saturating clip never produces
+            # the Inf a scalar limit waits for.
+            limit_c = limit
+            if quantized and stage.num_selected < self.gf.num_chunks:
+                limit_c = guard_mod.per_chunk_limit(gf_local.chunk_norms,
+                                                    gcfg, limit)
+            flags = guard_mod.flags_from_census(gf2.chunk_norms, limit_c)
             red = reduced
+        elif quantized:
+            flags = guard_mod.flags_from_census(census_sum, limit)
+            red = reduced / scaler.scale
         else:
             flags = guard_mod.flags_from_words(
                 [guard_mod.health_word(reduced)], limit)
@@ -389,7 +479,8 @@ class Trainer:
             ok, commit, (params, opt, gf_local))
         sc2 = scaler_mod.update(scaler, ok, gcfg)
         return new_params, opt2, GFState(
-            hg=gf3.hg[None], chunk_norms=gf3.chunk_norms), sc2
+            hg=gf3.hg[None], chunk_norms=gf3.chunk_norms,
+            residual=gf3.residual[None]), sc2
 
     def _update_axes(self) -> set:
         axes = set(self.data_axes)
@@ -419,29 +510,60 @@ class Trainer:
         # (size 1 per shard once the data axes split it).
         data_lead = (self.data_axes if len(self.data_axes) > 1 else
                      self.data_axes[0]) if self.data_axes else None
+        lead_spec = P(data_lead, "model") if self.model_size > 1 \
+            else P(data_lead, None)
+        res_spec = lead_spec if self.gf_cfg.feedback_enabled \
+            else P(None, None)
         if self.gf_cfg.csc_enabled:
-            gf_specs = GFState(hg=P(data_lead, "model")
-                               if self.model_size > 1
-                               else P(data_lead, None),
-                               chunk_norms=pool_spec)
+            gf_specs = GFState(hg=lead_spec, chunk_norms=pool_spec,
+                               residual=res_spec)
         else:
-            gf_specs = GFState(hg=P(None, None), chunk_norms=P(None))
+            gf_specs = GFState(hg=P(None, None), chunk_norms=P(None),
+                               residual=res_spec)
 
-        def pack_local(grads):
+        staging_on = donate
+        census_on = self._census_on
+        norms_chunk = self.gf_cfg.chunk_elems if census_on else 0
+
+        def pack_local(grads, *st):
             """Grad pytree → local 1-D pool (runs where leaf shapes are
             local: directly in the fwd region when model is unsharded,
             else inside the nested pack shard_map below — pure local
-            compute, no collectives, so both jax generations accept it)."""
-            gpool, _ = self.pool.pack(grads, dtype=self._pack_dtype,
-                                      use_kernels=self.gf_cfg.use_kernels)
-            return gpool
+            compute, no collectives, so both jax generations accept it).
 
-        def fwd_bwd(params, batch, *scale_arg):
+            ``st`` threads the previous step's staging buffer
+            (``pack_into`` donation: the pack writes fully in place);
+            ``norms_chunk`` fuses the chunk-L1 census into the same pass
+            when the wire scales need it (quantized dense/lazy). Returns
+            (gpool[, staging][, census]) per the static flags."""
+            if st:
+                gpool, census, staging = self.pool.pack_into(
+                    st[0], grads, dtype=self._pack_dtype,
+                    norms_chunk=norms_chunk,
+                    use_kernels=self.gf_cfg.use_kernels)
+            else:
+                gpool, census = self.pool.pack(
+                    grads, dtype=self._pack_dtype, norms_chunk=norms_chunk,
+                    use_kernels=self.gf_cfg.use_kernels)
+                staging = gpool
+            outs = (gpool,)
+            if staging_on:
+                outs += (staging,)
+            if census_on:
+                outs += (census,)
+            return outs
+
+        def fwd_bwd(params, batch, *rest):
             # When guarded, the loss is multiplied by the live scaler
             # scale BEFORE autodiff, so every gradient (and the bf16 pool
             # pack below) carries it — small gradients survive the wire
             # cast; the update region divides it back out.
-            loss_scale = scale_arg[0] if scale_arg else None
+            i = 0
+            loss_scale = None
+            if guarded:
+                loss_scale = rest[i]
+                i += 1
+            staging_in = rest[i] if staging_on else None
             params_v = jax.tree_util.tree_map(
                 lambda x: _pvary(x, self.data_axes), params)
 
@@ -471,21 +593,34 @@ class Trainer:
             # gradient ever crosses the region boundary — only a flat 1-D
             # pool, stacked along a leading data dim (each shard keeps
             # holding exactly its own row; a relabeling, not a transfer).
+            # The staging buffer and the fused census (when on) ride the
+            # same boundary next to the pool.
+            pk_args = (grads,)
+            if staging_on:
+                pk_args += (staging_in[0],)
             if self.model_size > 1:
-                gpool = compat_shard_map(
+                n_out = len(pk_args) + (1 if census_on else 0)
+                pk_in = (self.param_pspecs,) + \
+                    ((pool_spec,) if staging_on else ())
+                outs = compat_shard_map(
                     pack_local, legacy_mesh=self.mesh,
-                    in_specs=(self.param_pspecs,), out_specs=pool_spec,
-                    axis_names={"model"}, check_vma=False)(grads)
+                    in_specs=pk_in, out_specs=(pool_spec,) * n_out,
+                    axis_names={"model"}, check_vma=False)(*pk_args)
             else:
-                gpool = pack_local(grads)
+                outs = pack_local(*pk_args)
             if self.data_axes:
-                gpool = gpool[None]
-            return gpool, metrics
+                outs = tuple(x[None] for x in outs)
+            return outs, metrics
 
         def update_body(gpool_st, params, opt, gfstate, lr, *extra):
-            # extra = (scaler?, step?) depending on guarded / fault_hook.
+            # extra = (census?, scaler?, step?) depending on the quantized
+            # wire format / guarded / fault_hook flags.
             gpool = gpool_st[0] if self.data_axes else gpool_st
             i = 0
+            census = None
+            if census_on:
+                census = extra[i][0] if self.data_axes else extra[i]
+                i += 1
             scaler = None
             if guarded:
                 scaler = extra[i]
@@ -493,7 +628,7 @@ class Trainer:
             if fault_hook is not None:
                 gpool = fault_hook(gpool, extra[i])
             return self._inner_update(gpool, params, opt, gfstate, lr,
-                                      stage, scaler=scaler)
+                                      stage, scaler=scaler, census=census)
 
         # The jit-level batch is GLOBAL; in_specs split dim 0 over the data
         # axes so each shard sees its per-shard slice.
@@ -519,10 +654,12 @@ class Trainer:
             pool_out_spec = P()
             pool_in_spec = pool_spec
 
-        fwd_in_specs = (params_in, batch_in) + ((P(),) if guarded else ())
+        n_handoff = 1 + int(staging_on) + int(census_on)
+        fwd_in_specs = (params_in, batch_in) + ((P(),) if guarded else ()) \
+            + ((pool_out_spec,) if staging_on else ())
         sm_fwd = compat_shard_map(
             fwd_bwd, mesh=self.mesh, in_specs=fwd_in_specs,
-            out_specs=(pool_out_spec, metrics_out),
+            out_specs=((pool_out_spec,) * n_handoff, metrics_out),
             axis_names=manual_axes)
         # check_vma=False: model-replicated params flow through the
         # (model-sharded) pool, so the static checker tags their updates
@@ -536,6 +673,9 @@ class Trainer:
         upd_in_specs = (pool_in_spec, self.param_pspecs, opt_specs,
                         gf_specs, P())
         upd_out_specs = (self.param_pspecs, opt_specs, gf_specs)
+        if census_on:
+            # The census rides the boundary in the pool's stacked layout.
+            upd_in_specs = upd_in_specs + (pool_in_spec,)
         if guarded:
             upd_in_specs = upd_in_specs + (scaler_specs,)
             upd_out_specs = upd_out_specs + (scaler_specs,)
@@ -550,9 +690,16 @@ class Trainer:
             fwd_args = (state.params, batch)
             if guarded:
                 fwd_args = fwd_args + (state.guard.scale,)
-            gpool_st, metrics = sm_fwd(*fwd_args)
+            if staging_on:
+                fwd_args = fwd_args + (state.staging,)
+            handoff, metrics = sm_fwd(*fwd_args)
+            gpool_st = handoff[0]
+            staging_st = handoff[1] if staging_on else state.staging
+            census_st = handoff[-1] if census_on else None
             lr = lr_at(cfg.optimizer, state.step)
             upd_args = (gpool_st, state.params, state.opt, state.gf, lr)
+            if census_on:
+                upd_args = upd_args + (census_st,)
             if guarded:
                 upd_args = upd_args + (state.guard,)
             if fault_hook is not None:
@@ -563,7 +710,8 @@ class Trainer:
             else:
                 (new_params, opt2, gf2), sc2 = out, state.guard
             return TrainState(params=new_params, opt=opt2, gf=gf2,
-                              step=state.step + 1, guard=sc2), metrics
+                              step=state.step + 1, guard=sc2,
+                              staging=staging_st), metrics
 
         return jax.jit(step, donate_argnums=(0,) if donate else ())
 

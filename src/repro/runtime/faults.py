@@ -149,7 +149,7 @@ class GuardLane:
 
     def __init__(self, guard: Optional[GuardConfig] = None, *,
                  mode: str = "lazy", wire_dtype: str = "bfloat16",
-                 seed: int = 0):
+                 wire_format: str = "native", seed: int = 0):
         from repro.configs.base import GradientFlowConfig, OptimizerConfig
         from repro.core.engine import OverlapEngine
         from repro.core.gradientflow import GradientFlow
@@ -160,7 +160,7 @@ class GuardLane:
             mode=mode, bucket_elems=64, chunk_elems=self.CHUNK,
             sparsity=0.5, warmup_steps=0, wire_dtype=wire_dtype,
             reduce_axes=("data",), collective_algo="flat",
-            overlap="staged", guard=self.guard)
+            overlap="staged", wire_format=wire_format, guard=self.guard)
         rng = np.random.default_rng(seed)
         tree = {f"t{i}": jnp.asarray(rng.uniform(0.25, 1.0, s),
                                      jnp.float32)
@@ -169,7 +169,8 @@ class GuardLane:
         self.pool = GradientPool(
             jax.tree_util.tree_map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree),
-            pad_to=self.CHUNK if mode == "csc" else 1)
+            pad_to=self.CHUNK
+            if (mode == "csc" or self.cfg.quantized) else 1)
         self.gf = GradientFlow(self.cfg, self.pool, num_data_shards=1)
         opt_cfg = OptimizerConfig(name="momentum_sgd", momentum=0.9,
                                   weight_decay=0.0)
@@ -194,8 +195,10 @@ class GuardLane:
         by_step = {ev.step: ev for ev in events}
         plan = self.engine.plan_for()
         csc = self.cfg.csc_enabled
-        prepack_dtype = jnp.dtype(self.cfg.wire_dtype) if not csc \
-            else jnp.float32
+        # CSC and the quantized wire formats consume the f32 pool (the
+        # wire cast / quantization happens inside the guarded engine).
+        prepack_dtype = jnp.float32 if (csc or self.cfg.quantized) \
+            else jnp.dtype(self.cfg.wire_dtype)
 
         def body(params, opt, gfstate, scaler, step):
             # The lane's "backward pass": the fixed base gradients times
@@ -224,7 +227,8 @@ class GuardLane:
                 before = (np.asarray(self.pool.pack(
                               params, dtype=jnp.float32)[0]),
                           np.asarray(opt.momentum),
-                          np.asarray(gfstate.hg))
+                          np.asarray(gfstate.hg),
+                          np.asarray(gfstate.residual))
                 params, opt, gfstate, scaler, flags = stepped(
                     params, opt, gfstate, scaler, jnp.int32(t))
                 tripped = bool(np.asarray(flags.nonfinite) |
@@ -234,7 +238,8 @@ class GuardLane:
                     after = (np.asarray(self.pool.pack(
                                  params, dtype=jnp.float32)[0]),
                              np.asarray(opt.momentum),
-                             np.asarray(gfstate.hg))
+                             np.asarray(gfstate.hg),
+                             np.asarray(gfstate.residual))
                     frozen = all(np.array_equal(a, b, equal_nan=True)
                                  for a, b in zip(before, after))
                 ev = by_step.get(t)

@@ -222,3 +222,79 @@ def test_compact_scatter_inverse(nchunks, chunk, k, seed):
     np.testing.assert_array_equal(np.asarray(back)[emask],
                                   np.asarray(pool)[emask])
     np.testing.assert_array_equal(np.asarray(back)[~emask], 0.0)
+
+
+# -- low-bit wire formats (repro.core.wire) -----------------------------------
+
+from repro.core import wire as wire_mod
+
+
+@hypothesis.given(
+    nchunks=st.integers(1, 16),
+    chunk=st.sampled_from([8, 32, 128]),
+    shards=st.integers(1, 16),
+    seed=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_wire_round_trip_error_bounded_by_grid(nchunks, chunk, shards,
+                                               seed):
+    """Per-chunk scale round-trip: every in-range element's quantization
+    error is at most half the chunk's grid step; clipped elements err
+    exactly to the clip boundary. Holds for any shard count because the
+    scale construction widens the grid as the per-rank clip tightens."""
+    spec = wire_mod.resolve("int8")
+    g = jax.random.normal(jax.random.PRNGKey(seed), (nchunks * chunk,),
+                          jnp.float32)
+    # census_sum as if `shards` identical ranks contributed (the scale
+    # math only sees the rank-invariant SUM).
+    census = shards * wire_mod.chunk_l1(g, chunk)
+    s = wire_mod.scales_from_census(census, chunk_elems=chunk,
+                                    num_shards=shards, spec=spec)
+    q, err = wire_mod.quantize_pool(g, s, chunk_elems=chunk, spec=spec,
+                                    num_shards=shards)
+    clip = wire_mod.rank_clip(spec, shards)
+    sn = np.repeat(np.asarray(s), chunk)
+    gn, en = np.asarray(g), np.abs(np.asarray(err))
+    in_range = np.abs(gn) <= clip * sn
+    assert (en[in_range] <= sn[in_range] / 2 + 1e-7).all()
+    # clipped elements saturate to +-clip on the wire
+    np.testing.assert_allclose(
+        np.abs(np.asarray(q, np.float32))[~in_range], clip, rtol=0)
+
+
+@hypothesis.given(
+    nchunks=st.integers(1, 8),
+    chunk=st.sampled_from([16, 64]),
+    steps=st.integers(2, 12),
+    fmt=st.sampled_from(["int8", "fp8_e4m3"]),
+    seed=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_error_feedback_conserves_gradient_mass(nchunks, chunk, steps,
+                                                fmt, seed):
+    """EF telescoping over k steps: cumulative dequantized wire traffic
+    plus the final residual equals the cumulative raw gradient — the
+    quantizer's bias cancels instead of accumulating. (The same identity
+    through the real {dense,lazy,csc} x {flat,pallas_ring} reduce paths
+    is pinned by test_wire.py's multi-device matrix.)"""
+    spec = wire_mod.resolve(fmt)
+    if spec is None:
+        pytest.skip(f"{fmt} unsupported in this jax build")
+    key = jax.random.PRNGKey(seed)
+    r = jnp.zeros((nchunks * chunk,), jnp.float32)
+    total_in = np.zeros((nchunks * chunk,), np.float64)
+    total_out = np.zeros((nchunks * chunk,), np.float64)
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        g = jax.random.normal(sub, r.shape, jnp.float32)
+        send = g + r
+        s = wire_mod.scales_from_census(wire_mod.chunk_l1(send, chunk),
+                                        chunk_elems=chunk, num_shards=1,
+                                        spec=spec)
+        q, r = wire_mod.quantize_pool(send, s, chunk_elems=chunk,
+                                      spec=spec, num_shards=1)
+        total_in += np.asarray(g, np.float64)
+        total_out += np.asarray(wire_mod.dequantize_pool(q, s, chunk),
+                                np.float64)
+    np.testing.assert_allclose(total_out + np.asarray(r, np.float64),
+                               total_in, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,222 @@
+"""Low-bit wire formats (repro.core.wire): per-chunk scales from the
+census, quantize/dequantize round-trip bounds, ring-losslessness of the
+int8 grid, error-feedback exactness through the real reduce paths, and
+the guard composition (per-chunk skip + bit-identical restore).
+
+The multi-device matrix ({lazy, csc} x {flat, pallas_ring}) runs in a
+placeholder-device subprocess via conftest.run_multi_device; everything
+else is single-device and fast. Statistical/randomized variants of the
+round-trip and telescoping invariants live in test_properties.py
+(hypothesis, dev-only dependency).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multi_device
+from repro.core import wire
+
+
+def _spec(name):
+    spec = wire.resolve(name)
+    if spec is None:
+        pytest.skip(f"{name} not supported by this jax build")
+    return spec
+
+
+def test_resolve_and_supported_formats():
+    assert wire.resolve("native") is None
+    assert wire.resolve(None) is None
+    assert "int8" in wire.supported_formats()
+    spec = wire.resolve("int8")
+    assert spec.qmax == 127.0 and spec.integer_grid
+    with pytest.raises(ValueError):
+        wire.resolve("int4")
+
+
+def test_rank_clip_bounds_ring_partial_sums():
+    spec = wire.resolve("int8")
+    for n in (1, 2, 7, 8, 64):
+        clip = wire.rank_clip(spec, n)
+        assert clip * n <= spec.qmax or clip == 1.0
+    # 1 rank: full grid.
+    assert wire.rank_clip(spec, 1) == 127.0
+
+
+def test_scales_are_rank_invariant_and_floored():
+    spec = wire.resolve("int8")
+    census = jnp.asarray([0.0, 1.0, 1e-28, 640.0], jnp.float32)
+    s = wire.scales_from_census(census, chunk_elems=64, num_shards=4,
+                                spec=spec)
+    s = np.asarray(s)
+    assert (s >= wire.SCALE_FLOOR).all()
+    # meanabs = census / (n*chunk); grid = meanabs * margin * n / qmax
+    expect = (640.0 / (4 * 64)) * wire.WIRE_MARGIN * 4 / 127.0
+    np.testing.assert_allclose(s[3], expect, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8_e4m3"])
+def test_quantize_round_trip_error_bound(fmt):
+    """Within the representable range the round-trip error obeys the
+    grid: int8 (round-to-nearest on a uniform grid) err <= scale/2;
+    fp8-e4m3 err <= half-ulp, i.e. |g|*2^-4 plus the subnormal step."""
+    spec = _spec(fmt)
+    chunk = 128
+    g = jax.random.normal(jax.random.PRNGKey(0), (32 * chunk,),
+                          jnp.float32)
+    census = wire.chunk_l1(g, chunk)
+    s = wire.scales_from_census(census, chunk_elems=chunk, num_shards=1,
+                                spec=spec)
+    q, err = wire.quantize_pool(g, s, chunk_elems=chunk, spec=spec,
+                                num_shards=1)
+    assert q.dtype == spec.dtype
+    aerr = np.abs(np.asarray(err)).reshape((-1, chunk))
+    sn = np.asarray(s)[:, None]
+    if spec.integer_grid:
+        assert (aerr <= sn / 2 + 1e-7).all()
+    else:
+        bound = np.maximum(np.abs(np.asarray(g)).reshape((-1, chunk))
+                           * 2.0 ** -4, sn * 2.0 ** -9)
+        assert (aerr <= bound + 1e-7).all()
+    # grid idempotence: values already on the wire grid quantize to
+    # themselves with zero error — the telescoping EF needs the grid to
+    # be a fixed point, or the residual would never drain.
+    back = wire.dequantize_pool(q, s, chunk)
+    q2, err2 = wire.quantize_pool(back, s, chunk_elems=chunk, spec=spec,
+                                  num_shards=1)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(err2), 0.0)
+
+
+def test_int8_rank_sums_stay_on_grid_and_exact():
+    """The whole point of rank_clip: summing N ranks' int8 words never
+    leaves the int8 range, so the ring's in-flight requant is exact —
+    the sum of quantized values survives transport bit-for-bit."""
+    spec = wire.resolve("int8")
+    n, chunk = 8, 64
+    key = jax.random.PRNGKey(1)
+    gs = jax.random.normal(key, (n, 4 * chunk), jnp.float32)
+    census = sum(wire.chunk_l1(gs[r], chunk) for r in range(n))
+    s = wire.scales_from_census(census, chunk_elems=chunk, num_shards=n,
+                                spec=spec)
+    qs = [wire.quantize_pool(gs[r], s, chunk_elems=chunk, spec=spec,
+                             num_shards=n)[0] for r in range(n)]
+    exact = np.sum([np.asarray(q, np.int32) for q in qs], axis=0)
+    assert (np.abs(exact) <= 127).all()
+    # int8 hop-by-hop accumulation (the kernel's requant cycle) == exact
+    acc = np.asarray(qs[0])
+    for q in qs[1:]:
+        acc = (acc.astype(np.int32) + np.asarray(q, np.int32)) \
+            .astype(np.int8)
+    np.testing.assert_array_equal(acc.astype(np.int32), exact)
+
+
+def test_quantized_configs_validate_and_price_wire_bytes():
+    from repro.configs.base import GradientFlowConfig
+    from repro.core.gradientflow import GradientFlow
+    from repro.core.pool import GradientPool
+
+    pool = GradientPool({"a": jnp.zeros((1000,))}, pad_to=64)
+    native = GradientFlowConfig(mode="lazy", bucket_elems=512,
+                                chunk_elems=64, wire_dtype="bfloat16",
+                                reduce_axes=("data",),
+                                collective_algo="flat")
+    int8 = GradientFlowConfig(mode="lazy", bucket_elems=512,
+                              chunk_elems=64, wire_dtype="bfloat16",
+                              wire_format="int8", reduce_axes=("data",),
+                              collective_algo="flat")
+    assert not native.quantized and int8.quantized and int8.feedback_enabled
+    gf_n = GradientFlow(native, pool, num_data_shards=4)
+    gf_q = GradientFlow(int8, pool, num_data_shards=4)
+    bn, bq = gf_n.wire_bytes_per_step(), gf_q.wire_bytes_per_step()
+    # 1-byte words halve bf16 traffic; the census psum rides on top.
+    assert bq < bn
+    with pytest.raises(ValueError):
+        GradientFlow(GradientFlowConfig(mode="lazy", wire_format="int4",
+                                        reduce_axes=("data",)),
+                     pool, num_data_shards=1)
+
+
+@pytest.mark.slow
+def test_error_feedback_exact_across_modes_and_algos():
+    """EF exactness through the REAL reduce paths, 4 ranks:
+    wire-delivered sum + residual delta == intended send, every step, for
+    {lazy, csc} x {flat, pallas_ring} on int8 (the ring is lossless, so
+    the identity holds to f32 rounding)."""
+    run_multi_device("""
+        from repro.configs.base import GradientFlowConfig
+        from repro.core import GradientPool, GradientFlow
+        CHUNK, NCH = 64, 8
+        POOL = CHUNK * NCH
+        N = 4
+        mesh = compat_make_mesh((N,), ("data",))
+        for mode in ("lazy", "csc"):
+            for algo in ("flat", "pallas_ring"):
+                cfg = GradientFlowConfig(
+                    mode=mode, bucket_elems=2 * CHUNK, chunk_elems=CHUNK,
+                    sparsity=0.5, warmup_steps=0, momentum=1.0,
+                    wire_dtype="bfloat16", wire_format="int8",
+                    reduce_axes=("data",), collective_algo=algo)
+                pool = GradientPool({"a": jnp.zeros((POOL,))},
+                                    pad_to=CHUNK)
+                gf = GradientFlow(cfg, pool, num_data_shards=N)
+                stage = gf.stages[-1]
+                def step(g, hg, norms, res):
+                    from repro.core.gradientflow import GFState
+                    st = GFState(hg=hg[0], chunk_norms=norms,
+                                 residual=res[0])
+                    red, mask, st2 = gf.reduce(g[0], st, stage=stage)
+                    return (red, mask, st2.hg[None], st2.chunk_norms,
+                            st2.residual[None])
+                sm = compat_shard_map(
+                    step, mesh=mesh,
+                    in_specs=(P("data"), P("data"), P(None), P("data")),
+                    out_specs=(P(None), P(None), P("data"), P(None),
+                               P("data")),
+                    axis_names={"data"}, check_vma=False)
+                rng = np.random.default_rng(3)
+                hg = jnp.zeros((N, POOL), jnp.float32)
+                res = jnp.zeros((N, POOL), jnp.float32)
+                norms = jnp.arange(NCH, 0, -1, dtype=jnp.float32)
+                stepped = jax.jit(sm)
+                for t in range(4):
+                    g = jnp.asarray(rng.normal(size=(N, POOL)),
+                                    jnp.float32)
+                    send = np.asarray(g) + np.asarray(hg) + np.asarray(res)
+                    red, mask, hg2, norms2, res2 = stepped(g, hg, norms,
+                                                           res)
+                    m = np.asarray(mask)
+                    wiresum = N * np.asarray(red)
+                    delivered = (send - np.asarray(res2)).sum(axis=0)
+                    np.testing.assert_allclose(
+                        wiresum[m], delivered[m], rtol=1e-5, atol=1e-4)
+                    hg, norms, res = hg2, norms2, res2
+                print("OK", mode, algo)
+        print("DONE")
+    """, devices=4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["lazy", "csc"])
+def test_guarded_int8_skips_per_chunk_and_restores_bit_identical(mode):
+    """ISSUE acceptance: a guarded int8 run with injected overflow trips
+    (per-chunk limit for CSC — int8's saturating clip never surfaces Inf
+    post-reduce) and the rejected step leaves params, momentum, hg AND
+    the error-feedback residual bit-identical."""
+    from repro.runtime.faults import FaultEvent, GuardLane, truth_table
+
+    lane = GuardLane(mode=mode, wire_format="int8")
+    events = [FaultEvent(step=2, kind="nan"),
+              FaultEvent(step=4, kind="overflow"),
+              FaultEvent(step=6, kind="bitflip")]
+    records = lane.run(8, events)
+    tt = truth_table(records)
+    for kind in ("nan", "overflow", "bitflip"):
+        assert tt["classes"][kind]["caught"] == 1, (kind, records)
+    assert tt["false_trips"] == 0
+    # caught == tripped AND state_frozen: the frozen check covers the
+    # residual (GuardLane's before/after tuples include it).
+    for r in records:
+        if r["fault"] is not None:
+            assert r["state_frozen"], r

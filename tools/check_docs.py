@@ -37,7 +37,34 @@ REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
                    "--overlap-check", "BENCH_overlap.json",
                    "StepPlan", "overlap", "exposed-comm",
                    "replan", "--soak", "BENCH_soak.json",
-                   "loss scale", "--guard-check", "BENCH_guard.json")
+                   "loss scale", "--guard-check", "BENCH_guard.json",
+                   # low-bit wire formats (docs/numerics.md)
+                   "wire_format", "int8", "fp8_e4m3", "error feedback",
+                   "residual", "--wire-format", "--no-error-feedback",
+                   "ring_max_err_int8", "WIRE_MARGIN", "rank_clip",
+                   "wire_bytes_per_step_int8")
+
+CONFIG_DRIFT = {
+    # every public field of these dataclasses must appear in the doc
+    # corpus — adding a knob without documenting it fails CI.
+    "GradientFlowConfig": ROOT / "src" / "repro" / "configs" / "base.py",
+}
+
+
+def dataclass_fields(src_path: pathlib.Path, cls: str) -> list:
+    """Field names of a dataclass, by source scan (no repro import: this
+    tool must run without jax installed)."""
+    text = src_path.read_text(encoding="utf-8")
+    m = re.search(rf"class {cls}\b.*?(?=\n(?:@|class )|\Z)", text,
+                  re.DOTALL)
+    if not m:
+        return []
+    fields = []
+    for line in m.group(0).splitlines():
+        fm = re.match(r"    (\w+)\s*:\s*\S", line)
+        if fm and not fm.group(1).startswith("_"):
+            fields.append(fm.group(1))
+    return fields
 
 
 def module_resolves(dotted: str) -> bool:
@@ -90,16 +117,28 @@ def main() -> int:
         broken += check_file(t)
     all_text = "\n".join(t.read_text(encoding="utf-8") for t in targets)
     undocumented = [tok for tok in REQUIRED_TOKENS if tok not in all_text]
-    if broken or undocumented:
+    drifted = []
+    for cls, src in CONFIG_DRIFT.items():
+        fields = dataclass_fields(src, cls)
+        if not fields:
+            drifted.append((cls, "<no fields parsed from source>"))
+        drifted += [(cls, f) for f in fields if f not in all_text]
+    if broken or undocumented or drifted:
         if broken:
             print(f"{len(broken)} broken reference(s):")
             for doc, ref in broken:
                 print(f"  {doc}: {ref}")
         for tok in undocumented:
             print(f"UNDOCUMENTED CI GATE: {tok} appears in no checked doc")
+        for cls, f in drifted:
+            print(f"CONFIG DRIFT: {cls}.{f} is in the code but no "
+                  "checked doc mentions it")
         return 1
+    nfields = sum(len(dataclass_fields(src, cls))
+                  for cls, src in CONFIG_DRIFT.items())
     print(f"docs check OK: {len(targets)} files, all references resolve, "
-          f"{len(REQUIRED_TOKENS)} gate tokens documented")
+          f"{len(REQUIRED_TOKENS)} gate tokens documented, "
+          f"{nfields} config fields covered")
     return 0
 
 
