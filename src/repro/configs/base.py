@@ -293,6 +293,10 @@ class TrainConfig:
     # Beyond-paper perf option: skip upper-triangular causal blocks
     # (~2x attention-FLOP saving). False = paper-era masked-full-grid.
     causal_skip: bool = False
+    # Compile-once loop: K steps per lax.scan window — one XLA program
+    # and one host sync per window (1 = per-step dispatch). CSC stage
+    # boundaries are snapped to this grid by the driver.
+    window_steps: int = 1
     seed: int = 0
 
     def replace(self, **kw: Any) -> "TrainConfig":

@@ -191,7 +191,14 @@ class OverlapEngine:
     Holds the same collaborators the monolithic update path uses
     (GradientFlow, optimizer config, optional LARS scaler) and emits the
     same math — just per bucket, with bucket *i*'s collective issued
-    before bucket *i-1*'s update ops."""
+    before bucket *i-1*'s update ops.
+
+    Compile-once loop contract: ``run`` / ``run_guarded`` are valid
+    ``lax.scan`` body code — no host syncs, ``plan_for`` resolves at
+    trace time (one StepPlan per stage executable), the guarded commit
+    is a single traced ``lax.cond``, and the scaler state is ordinary
+    carry data. ``run_guarded`` returns the HealthFlags so the scanned
+    window can stack per-step verdicts into its metrics."""
 
     def __init__(self, gf, opt_name: str, opt_cfg, lars=None):
         self.gf = gf

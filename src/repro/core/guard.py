@@ -119,6 +119,15 @@ def tripped(flags: HealthFlags) -> jax.Array:
     return flags.nonfinite | flags.overflow
 
 
+def as_metrics(flags: HealthFlags) -> dict:
+    """The step verdict as metrics (f32 scalars — the metric tree's
+    uniform dtype). Under the compile-once loop a whole window's metrics
+    come back stacked ``[K]`` in one host sync; folding the verdict in
+    keeps per-step guard visibility (which step tripped, not just the
+    window's final skip count) without any extra device round-trip."""
+    return {"guard_tripped": tripped(flags).astype(jnp.float32)}
+
+
 def guarded_commit(ok: jax.Array, commit: Callable[[], tuple],
                    fallback: tuple):
     """The atomic step commit: ``commit()`` computes the full update

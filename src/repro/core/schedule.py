@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import List
+from typing import Iterator, List, Tuple
 
 from repro.configs.base import GradientFlowConfig
 
@@ -70,3 +70,49 @@ def stage_at(stages: List[SparsityStage], step: int,
         else stage_first_steps(stages)
     i = bisect.bisect_right(firsts, step) - 1
     return stages[max(i, 0)]
+
+
+def snap_stages_to_window(stages: List[SparsityStage],
+                          window: int) -> List[SparsityStage]:
+    """Snap each stage's ``first_step`` to the nearest multiple of
+    ``window`` (the compile-once loop's scan length K) so no K-step
+    window ever straddles a stage boundary — each window then runs under
+    exactly one stage's executable.
+
+    Stage 0 stays pinned at 0 and the snapped ``first_step`` sequence is
+    kept nondecreasing. Two stages may snap onto the same step; the
+    later one wins every ``stage_at`` lookup (``bisect_right`` picks the
+    rightmost), so the shadowed stage simply never executes — callers
+    building one executable per stage should skip stages whose snapped
+    span is empty."""
+    if window <= 1:
+        return list(stages)
+    out: List[SparsityStage] = []
+    prev = 0
+    for s in stages:
+        first = int(round(s.first_step / window)) * window
+        first = max(first, prev)
+        out.append(dataclasses.replace(s, first_step=first))
+        prev = first
+    return out
+
+
+def window_schedule(start: int, num_steps: int, window: int,
+                    stages: List[SparsityStage]
+                    ) -> Iterator[Tuple[int, int, SparsityStage]]:
+    """Yield ``(step, length, stage)`` windows covering
+    ``[start, num_steps)``: each window is at most ``window`` steps,
+    ends on the window grid (so an off-grid ``start`` — e.g. a restore
+    from a pre-windowing checkpoint — realigns after one short window),
+    and never crosses a stage's ``first_step``. With stages already
+    snapped via ``snap_stages_to_window`` the stage clamp is a no-op and
+    every non-tail window is full-length."""
+    firsts = stage_first_steps(stages)
+    step = start
+    while step < num_steps:
+        end = min(step - step % window + window, num_steps)
+        i = bisect.bisect_right(firsts, step)
+        if i < len(firsts):  # next stage boundary caps the window
+            end = min(end, firsts[i])
+        yield step, end - step, stages[max(i - 1, 0)]
+        step = end

@@ -89,6 +89,18 @@ class DataPipeline:
         self._step += 1
         return batch
 
+    def next_at(self, step: int) -> Dict[str, Any]:
+        """Fetch THE batch for ``step`` — the consumer's step index is
+        authoritative, not the pipeline's internal cursor. When they
+        agree this is ``next()``; when they don't (a supervisor replay
+        after a restore the pipeline didn't hear about) the prefetcher
+        restarts at ``step`` so the replayed step re-reads exactly the
+        batch it saw the first time. Batches are pure in (step, shard),
+        so a resync costs one prefetch restart, never wrong data."""
+        if self._prefetcher is None or self._step != step:
+            self.start(step)
+        return self.next()
+
     def skip_to(self, step: int):
         """O(1) skip-ahead (restore-from-checkpoint path)."""
         self.start(step)

@@ -23,12 +23,43 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch, get_smoke
 from repro.configs.base import (GradientFlowConfig, OptimizerConfig,
                                 TrainConfig)
+from repro.core.schedule import (snap_stages_to_window, stage_at,
+                                 stage_first_steps)
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.launch.trainer import Trainer
 from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
 from repro.parallel.collectives import compat_set_mesh
+
+
+class ThroughputMeter:
+    """tok/s over steps executed in THIS process, with the first
+    completed window (the one that pays compilation) excluded: the clock
+    starts when that window finishes. Fixes the two historical log lies
+    — a resumed run crediting itself with the pre-resume steps
+    (``(step + 1) * batch * seq`` from a clock started this process),
+    and the compile time of step 0 folded into every later rate."""
+
+    def __init__(self, tokens_per_step: float):
+        self.tokens_per_step = tokens_per_step
+        self._t0: Optional[float] = None
+        self._steps = 0
+
+    def note(self, n_steps: int, now: Optional[float] = None) -> None:
+        """Record ``n_steps`` just finished."""
+        now = time.time() if now is None else now
+        if self._t0 is None:
+            self._t0 = now  # first (compile) window only starts the clock
+        else:
+            self._steps += n_steps
+
+    def rate(self, now: Optional[float] = None) -> Optional[float]:
+        """tok/s, or None until any post-compile step has finished."""
+        if self._t0 is None or self._steps == 0:
+            return None
+        now = time.time() if now is None else now
+        return self._steps * self.tokens_per_step / (now - self._t0)
 
 
 def build(args):
@@ -52,11 +83,12 @@ def build(args):
         schedule="warmup_cosine")
     cfg = TrainConfig(model=model_cfg, gradientflow=gf, optimizer=opt,
                       seq_len=args.seq_len, global_batch=args.batch,
-                      attn_chunk=args.attn_chunk, seed=args.seed)
+                      attn_chunk=args.attn_chunk, seed=args.seed,
+                      window_steps=args.window_steps)
     return Trainer(cfg, mesh, rules), cfg, mesh
 
 
-def main(argv=None):
+def _parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--reduced", action="store_true",
@@ -84,12 +116,20 @@ def main(argv=None):
     p.add_argument("--no-error-feedback", action="store_true",
                    help="drop the quantization-error residual "
                         "(ablation; biased wire)")
+    p.add_argument("--window-steps", type=int, default=8,
+                   help="K: steps per compiled lax.scan window (one XLA "
+                        "program, one host sync per window); 1 = per-step "
+                        "dispatch")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", default=None,
                    help="default: a fresh temp dir (pass a path to resume)")
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--log-every", type=int, default=10)
-    args = p.parse_args(argv)
+    return p
+
+
+def main(argv=None):
+    args = _parser().parse_args(argv)
 
     trainer, cfg, mesh = build(args)
     data = SyntheticLM(cfg.model.vocab_size, seed=args.seed,
@@ -103,39 +143,71 @@ def main(argv=None):
     sup = TrainSupervisor(ckpt, SupervisorConfig(
         checkpoint_every=args.ckpt_every))
 
+    K = max(cfg.window_steps, 1)
     with compat_set_mesh(mesh):
         state = trainer.init_state(jax.random.PRNGKey(args.seed))
-        # One compiled executable per CSC warm-up stage.
-        steps_by_stage = {s.index: trainer.build_train_step(stage=s)
-                          for s in trainer.gf.stages}
+        # Stage boundaries snapped to the window grid: no K-step window
+        # ever straddles a sparsity stage, so each stage costs exactly
+        # one compiled window executable (snapping can shadow a warm-up
+        # stage entirely — those are never built).
+        stages = snap_stages_to_window(trainer.gf.stages, K)
+        firsts = stage_first_steps(stages)
+        windows_by_stage = {}
 
-        t_start = time.time()
+        def window_exe(stage):
+            if stage.index not in windows_by_stage:
+                windows_by_stage[stage.index] = \
+                    trainer.build_train_window(K, stage=stage)
+            return windows_by_stage[stage.index]
+
+        t_wall = time.time()
+        meter = ThroughputMeter(cfg.global_batch * cfg.seq_len)
         losses = []
 
-        def step_fn(step, state):
-            stage = trainer.gf.stage_for_step(step)
-            batch = jax.device_put(pipe.next())
-            state, metrics = steps_by_stage[stage.index](state, batch)
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            if step % args.log_every == 0:
-                tok_s = (step + 1) * cfg.global_batch * cfg.seq_len / \
-                    (time.time() - t_start)
-                print(f"step {step:5d} stage {stage.index} "
-                      f"sparsity {stage.sparsity:.2f} loss {loss:.4f} "
-                      f"({tok_s:,.0f} tok/s)")
+        def window_fn(step, length, state):
+            stage = stage_at(stages, step, firsts)
+            # Batches fetched BY STEP INDEX (not a free-running cursor):
+            # a supervisor replay re-reads exactly the batches the failed
+            # attempt saw, then stacked on the leading scan axis.
+            batches = [pipe.next_at(step + i) for i in range(length)]
+            stacked = jax.device_put(
+                jax.tree_util.tree_map(lambda *xs: np.stack(xs), *batches))
+            state, metrics = window_exe(stage)(state, stacked)
+            # ONE host sync per window: the stacked [length] losses.
+            win_losses = np.asarray(metrics["loss"], np.float32)
+            losses.extend(float(x) for x in win_losses)
+            meter.note(length)
+            due = [s for s in range(step, step + length)
+                   if s % args.log_every == 0]
+            if due:
+                s = due[-1]
+                tok_s = meter.rate()
+                tail = f"({tok_s:,.0f} tok/s)" if tok_s is not None \
+                    else "(compiling)"
+                print(f"step {s:5d} stage {stage.index} "
+                      f"sparsity {stage.sparsity:.2f} "
+                      f"loss {win_losses[s - step]:.4f} {tail}")
             return state
 
-        start = ckpt.latest_step() or 0
-        if start:
+        # `is not None`, not truthiness: a checkpoint saved at step 0 is
+        # a real checkpoint and must restore (latest_step() is None only
+        # when the directory holds no checkpoint at all).
+        start = ckpt.latest_step()
+        if start is not None:
             start, state = ckpt.restore(state)
             print(f"resumed from checkpoint step {start}")
+        else:
+            start = 0
+        if start >= args.steps:
+            print(f"nothing to do: restored step {start} >= "
+                  f"--steps {args.steps}")
+            return losses
         pipe.start(start)
-        state = sup.run(state, start, args.steps, step_fn,
-                        on_restore=pipe.skip_to)
+        state = sup.run_windows(state, start, args.steps, window_fn, K,
+                                on_restore=pipe.skip_to)
         pipe.stop()
         print(f"done: final loss {losses[-1]:.4f} "
-              f"(start {losses[0]:.4f}) in {time.time()-t_start:.1f}s")
+              f"(start {losses[0]:.4f}) in {time.time()-t_wall:.1f}s")
         return losses
 
 

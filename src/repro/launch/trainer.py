@@ -402,7 +402,9 @@ class Trainer:
         while CSC unscales at entry so the hg residual stays
         scale-invariant across backoffs. A tripped verdict rejects the
         step — params, momentum, and hg bit-identical — and only the
-        scaler state advances."""
+        scaler state advances. Returns (params, opt, gfstate, scaler,
+        HealthFlags); the flags ride out to the step metrics so a
+        scanned window keeps per-step guard visibility."""
         from repro.core import guard as guard_mod
 
         cfg = self.gf_cfg
@@ -410,12 +412,12 @@ class Trainer:
         quantized = self.gf.wire_spec is not None
         if cfg.overlap == "staged":
             plan = self.engine.plan_for(stage)
-            new_params, opt2, gf2, sc2, _ = self.engine.run_guarded(
+            new_params, opt2, gf2, sc2, flags = self.engine.run_guarded(
                 plan, gpool, params, opt, gf_local, scaler, lr,
                 census=census)
             return new_params, opt2, GFState(
                 hg=gf2.hg[None], chunk_norms=gf2.chunk_norms,
-                residual=gf2.residual[None]), sc2
+                residual=gf2.residual[None]), sc2, flags
         assert cfg.overlap == "monolithic", cfg.overlap
         limit = guard_mod.overflow_limit(gcfg, cfg.wire_dtype)
         prepacked = cfg.mode in ("dense", "lazy") and not quantized
@@ -480,7 +482,7 @@ class Trainer:
         sc2 = scaler_mod.update(scaler, ok, gcfg)
         return new_params, opt2, GFState(
             hg=gf3.hg[None], chunk_norms=gf3.chunk_norms,
-            residual=gf3.residual[None]), sc2
+            residual=gf3.residual[None]), sc2, flags
 
     def _update_axes(self) -> set:
         axes = set(self.data_axes)
@@ -488,13 +490,21 @@ class Trainer:
             axes.add("model")
         return axes
 
-    def build_train_step(self, stage: Optional[SparsityStage] = None,
-                         donate: bool = True, fault_hook=None):
-        """``fault_hook(gpool, step) -> gpool`` (optional) is traced into
+    def _build_step_fn(self, stage: Optional[SparsityStage] = None,
+                       donate: bool = True, fault_hook=None):
+        """The un-jitted ``step(state, batch) -> (state, metrics)``
+        closure shared by ``build_train_step`` (jit per step) and
+        ``build_train_window`` (``lax.scan`` over a window of steps —
+        the closure is already in scan-body form).
+
+        ``fault_hook(gpool, step) -> gpool`` (optional) is traced into
         the update region on the LOCAL packed pool before the reduce —
         the data-plane fault-injection point (repro.runtime.faults): one
         compiled program, corruption gated on the step counter, hitting
-        the real wire path rather than the analytic timeline."""
+        the real wire path rather than the analytic timeline. The step
+        the hook sees is ``state.step`` — in-carry, so under a scanned
+        window the corruption still fires mid-window on exactly its
+        scheduled step."""
         cfg = self.cfg
         rules = self.rules
         stage = stage or self.gf.stages[-1]
@@ -677,8 +687,10 @@ class Trainer:
             # The census rides the boundary in the pool's stacked layout.
             upd_in_specs = upd_in_specs + (pool_in_spec,)
         if guarded:
+            from repro.core import guard as guard_mod
             upd_in_specs = upd_in_specs + (scaler_specs,)
-            upd_out_specs = upd_out_specs + (scaler_specs,)
+            upd_out_specs = upd_out_specs + \
+                (scaler_specs, guard_mod.HealthFlags(P(), P()))
         if fault_hook is not None:
             upd_in_specs = upd_in_specs + (P(),)
         sm_update = compat_shard_map(
@@ -706,14 +718,61 @@ class Trainer:
                 upd_args = upd_args + (state.step,)
             out = sm_update(*upd_args)
             if guarded:
-                new_params, opt2, gf2, sc2 = out
+                from repro.core import guard as guard_mod
+                new_params, opt2, gf2, sc2, flags = out
+                metrics = {**metrics, **guard_mod.as_metrics(flags)}
             else:
                 (new_params, opt2, gf2), sc2 = out, state.guard
             return TrainState(params=new_params, opt=opt2, gf=gf2,
                               step=state.step + 1, guard=sc2,
                               staging=staging_st), metrics
 
+        return step
+
+    def build_train_step(self, stage: Optional[SparsityStage] = None,
+                         donate: bool = True, fault_hook=None):
+        """One jitted training step (see ``_build_step_fn`` for the
+        closure semantics). ``donate=True`` donates the whole TrainState
+        — params, optimizer, GFState (incl. the error-feedback
+        residual), scaler, and the pack staging buffer update in
+        place."""
+        step = self._build_step_fn(stage=stage, donate=donate,
+                                   fault_hook=fault_hook)
         return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    def build_train_window(self, window_steps: int,
+                           stage: Optional[SparsityStage] = None,
+                           donate: bool = True, fault_hook=None):
+        """``window_steps`` training steps as ONE compiled XLA program:
+        ``lax.scan`` over the shared step closure with the full
+        TrainState as the (donated) carry, so a whole window runs with a
+        single dispatch and a single host sync.
+
+        The scan wraps the shard_map'd step from the OUTSIDE — the legal
+        direction on both jax generations (a scan *inside* a
+        manual-subgroup region at data>1 × model>1 crashes the jax<0.5
+        SPMD partitioner; see tests/test_distributed.py). Batches arrive
+        stacked on a leading scan axis (length ``window_steps``, or
+        shorter for a tail window — jit re-specializes per length, so
+        keep full windows on the hot path) and per-step metrics return
+        stacked ``[K]`` so the host reads the whole window at once.
+
+        A window is compiled per CSC ``stage`` exactly like
+        ``build_train_step``: snap stage boundaries to the window grid
+        (repro.core.schedule.snap_stages_to_window) so no window
+        straddles a stage and each stage costs one executable."""
+        assert window_steps >= 1, window_steps
+        step = self._build_step_fn(stage=stage, donate=donate,
+                                   fault_hook=fault_hook)
+
+        def window(state: TrainState, batches):
+            lens = {x.shape[0] for x in jax.tree_util.tree_leaves(batches)}
+            assert len(lens) == 1 and next(iter(lens)) <= window_steps, (
+                "stacked batch leading dims must agree and fit the "
+                "window", lens, window_steps)
+            return jax.lax.scan(step, state, batches)
+
+        return jax.jit(window, donate_argnums=(0,) if donate else ())
 
     def _accumulate(self, loss_fn, params_v, batch, loss_scale=None):
         """Gradient accumulation over microbatches (scan); grads in f32.

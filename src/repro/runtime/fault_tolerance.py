@@ -46,6 +46,17 @@ class Preempted(Exception):
     pass
 
 
+def round_checkpoint_every(every: int, window: int) -> int:
+    """Checkpoint cadence rounded to the compile-once loop's window
+    grid: the nearest positive multiple of ``window`` (at least one
+    window). Windows end on the grid, so a grid-multiple cadence means
+    every checkpoint lands exactly on a window edge — the supervisor
+    never has to split a compiled window to save."""
+    if window <= 1:
+        return every
+    return max(window, int(round(every / window)) * window)
+
+
 class TrainSupervisor:
     def __init__(self, ckpt: CheckpointManager, cfg: SupervisorConfig,
                  sleep_fn: Callable[[float], None] = time.sleep):
@@ -136,6 +147,62 @@ class TrainSupervisor:
                     step, state = self.ckpt.restore(state)
                 except (FileNotFoundError, CheckpointCorrupt):
                     # no (intact) checkpoint yet: restart from scratch
+                    step, state = start_step, initial_state
+                if on_restore is not None:
+                    on_restore(step)
+        self.ckpt.save(step, state, blocking=True)
+        return state
+
+    def run_windows(
+        self,
+        state: Any,
+        start_step: int,
+        num_steps: int,
+        window_fn: Callable[[int, int, Any], Any],  # (step, len, state)
+        window: int,
+        on_restore: Optional[Callable[[int], None]] = None,
+        fault_injector: Optional[Callable[[int], None]] = None,
+    ) -> Any:
+        """``run`` for the compile-once loop: ``window_fn(step, length,
+        state)`` advances ``length`` steps as one compiled program, so
+        the host only regains control (and can checkpoint) on window
+        edges. ``checkpoint_every`` is rounded to a multiple of
+        ``window`` (``round_checkpoint_every``); a save fires when a
+        window's end crosses a cadence multiple — with grid-aligned
+        windows that IS the multiple. ``fault_injector`` is probed for
+        every step a window covers before it launches (a host-visible
+        fault anywhere in a window kills the whole window; data-plane
+        faults inside the compiled program are ``runtime.faults``'
+        traced hooks instead). Restarts restore the newest valid
+        checkpoint — always a window edge — and resume on the grid."""
+        every = round_checkpoint_every(self.cfg.checkpoint_every, window)
+        step = start_step
+        initial_state = state
+        while step < num_steps:
+            length = min(window - step % window, num_steps - step)
+            try:
+                if self._preempt:
+                    raise Preempted()
+                if fault_injector is not None:
+                    for s in range(step, step + length):
+                        fault_injector(s)
+                state = window_fn(step, length, state)
+                prev, step = step, step + length
+                if step // every > prev // every:
+                    self.ckpt.save(step, state)
+            except Preempted:
+                self.ckpt.save(step, state, blocking=True)
+                raise
+            except Exception as e:
+                self.restarts += 1
+                self.restart_causes.append(f"{type(e).__name__}: {e}")
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self._backoff()
+                self.ckpt.wait()
+                try:
+                    step, state = self.ckpt.restore(state)
+                except (FileNotFoundError, CheckpointCorrupt):
                     step, state = start_step, initial_state
                 if on_restore is not None:
                     on_restore(step)

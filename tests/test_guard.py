@@ -218,21 +218,23 @@ def test_guard_rejected_step_bit_identical(mode, overlap, algo):
     def spec(tree):
         return jax.tree_util.tree_map(lambda _: P(), tree)
 
+    from repro.core.guard import HealthFlags
+
     sm = compat_shard_map(
         body, mesh=mesh,
         in_specs=(P("data"), spec(state.params), spec(state.opt),
                   spec(state.gf), spec(state.guard)),
         out_specs=(spec(state.params), spec(state.opt), spec(state.gf),
-                   spec(state.guard)),
+                   spec(state.guard), HealthFlags(P(), P())),
         axis_names={"data"}, check_vma=False)
     gclean = (base * 4.0).astype(t._pack_dtype)
     gbad = gclean.at[17:21].set(jnp.nan)
     with compat_set_mesh(mesh):
         stepped = jax.jit(sm)
-        p1, o1, g1, s1 = stepped(gclean, state.params, state.opt,
-                                 state.gf, state.guard)
-        p2, o2, g2, s2 = stepped(gbad, state.params, state.opt,
-                                 state.gf, state.guard)
+        p1, o1, g1, s1, f1 = stepped(gclean, state.params, state.opt,
+                                     state.gf, state.guard)
+        p2, o2, g2, s2, f2 = stepped(gbad, state.params, state.opt,
+                                     state.gf, state.guard)
 
     def flat(tree):
         return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
@@ -241,11 +243,13 @@ def test_guard_rejected_step_bit_identical(mode, overlap, algo):
     assert any(not np.array_equal(a, b)
                for a, b in zip(flat(p1), flat(state.params)))
     assert float(s1.scale) == 4.0 and int(s1.skipped) == 0
+    assert not bool(np.asarray(f1.nonfinite) | np.asarray(f1.overflow))
     # poisoned step: every leaf of params/opt/gf bit-identical
     for a, b in zip(flat((p2, o2, g2)),
                     flat((state.params, state.opt, state.gf))):
         np.testing.assert_array_equal(a, b)
     assert float(s2.scale) == 2.0 and int(s2.skipped) == 1
+    assert bool(np.asarray(f2.nonfinite) | np.asarray(f2.overflow))
 
 
 # -- trainer end-to-end -------------------------------------------------------

@@ -1,0 +1,370 @@
+"""Compile-once scan-over-steps loop (PR 9).
+
+Covers the tentpole and its driver bugfixes:
+  * a scanned K-step window is numerically the per-step loop (final
+    params / optimizer / scaler at 1e-6, stacked metrics == the per-step
+    stream) across the dense/lazy/csc x guarded/unguarded matrix;
+  * window/stage scheduling: snapped CSC stage boundaries land on the
+    window grid and no window ever straddles a stage;
+  * window-granular supervision: checkpoint cadence rounds to the
+    window, restarts restore window edges and replay the SAME batches;
+  * driver regressions: resume from a step-0 checkpoint, zero-step runs
+    summarize instead of crashing, tok/s counts only in-process
+    post-compile steps;
+  * data-plane faults keyed off the in-carry step fire mid-window, and
+    the windowed GuardLane reproduces the per-step record stream.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke
+from repro.configs.base import (GradientFlowConfig, GuardConfig,
+                                OptimizerConfig, TrainConfig)
+from repro.core.schedule import (build_stages, snap_stages_to_window,
+                                 stage_at, stage_first_steps,
+                                 window_schedule)
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.launch.trainer import Trainer
+from repro.parallel.collectives import compat_set_mesh
+from repro.runtime.fault_tolerance import (SupervisorConfig,
+                                           TrainSupervisor,
+                                           round_checkpoint_every)
+
+
+def _make_trainer(mode, guarded, seed=0):
+    model_cfg, rules = get_smoke("smollm-135m")
+    guard = GuardConfig(init_scale=2.0, growth_interval=1000) \
+        if guarded else None
+    gf = GradientFlowConfig(mode=mode, bucket_elems=4096, chunk_elems=512,
+                            sparsity=0.5, warmup_steps=0,
+                            wire_dtype="float32", guard=guard)
+    cfg = TrainConfig(
+        model=model_cfg, gradientflow=gf,
+        optimizer=OptimizerConfig(name="momentum_sgd", learning_rate=0.1,
+                                  momentum=0.9, warmup_steps=2,
+                                  total_steps=16, schedule="constant"),
+        seq_len=16, global_batch=2, attn_chunk=0, seed=seed)
+    mesh = make_host_mesh()
+    return Trainer(cfg, mesh, rules), cfg, mesh
+
+
+def _batches(cfg, n, seed=0):
+    data = SyntheticLM(cfg.model.vocab_size, seed=seed)
+    return [data.batch(t, cfg.global_batch, cfg.seq_len)
+            for t in range(n)]
+
+
+def _stack(batches):
+    return jax.device_put(jax.tree_util.tree_map(
+        lambda *xs: np.stack(xs), *batches))
+
+
+# -- scanned window == per-step loop ------------------------------------------
+
+
+MATRIX = [("dense", False), ("dense", True), ("lazy", False),
+          ("lazy", True), ("csc", False), ("csc", True)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,guarded", MATRIX)
+def test_window_matches_per_step(mode, guarded):
+    """One K=8 scanned window == 8 per-step dispatches: final params,
+    optimizer, and scaler at 1e-6; the stacked [8] loss equals the
+    per-step stream."""
+    K = 8
+    trainer, cfg, mesh = _make_trainer(mode, guarded)
+    batches = _batches(cfg, K)
+    with compat_set_mesh(mesh):
+        s_ref = trainer.init_state(jax.random.PRNGKey(0))
+        step = trainer.build_train_step()
+        ref_losses = []
+        for t in range(K):
+            s_ref, m = step(s_ref, jax.device_put(batches[t]))
+            ref_losses.append(float(m["loss"]))
+        s_win = trainer.init_state(jax.random.PRNGKey(0))
+        window = trainer.build_train_window(K)
+        s_win, metrics = window(s_win, _stack(batches))
+    np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                               np.asarray(ref_losses), rtol=1e-6)
+    for a, b in zip(
+            jax.tree_util.tree_leaves((s_ref.params, s_ref.opt,
+                                       s_ref.guard)),
+            jax.tree_util.tree_leaves((s_win.params, s_win.opt,
+                                       s_win.guard))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    assert int(s_win.step) == K
+    if guarded:
+        assert np.asarray(metrics["guard_tripped"]).shape == (K,)
+        assert not np.asarray(metrics["guard_tripped"]).any()
+
+
+def test_window_k1_matches_per_step():
+    """The degenerate K=1 window (scan of length one) is still the
+    per-step loop."""
+    trainer, cfg, mesh = _make_trainer("dense", False)
+    batches = _batches(cfg, 2)
+    with compat_set_mesh(mesh):
+        s_ref = trainer.init_state(jax.random.PRNGKey(0))
+        step = trainer.build_train_step()
+        for t in range(2):
+            s_ref, _ = step(s_ref, jax.device_put(batches[t]))
+        s_win = trainer.init_state(jax.random.PRNGKey(0))
+        window = trainer.build_train_window(1)
+        for t in range(2):
+            s_win, _ = window(s_win, _stack(batches[t:t + 1]))
+    for a, b in zip(jax.tree_util.tree_leaves((s_ref.params, s_ref.opt)),
+                    jax.tree_util.tree_leaves((s_win.params, s_win.opt))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# -- window/stage scheduling --------------------------------------------------
+
+
+def _csc_stages(warmup_steps=20, warmup_stages=4):
+    cfg = GradientFlowConfig(mode="csc", sparsity=0.85, chunk_elems=512,
+                             warmup_steps=warmup_steps,
+                             warmup_stages=warmup_stages)
+    return build_stages(cfg, num_chunks=64)
+
+
+def test_snap_stages_to_window_grid():
+    base = _csc_stages()
+    for K in (1, 4, 8, 32):
+        snapped = snap_stages_to_window(base, K)
+        firsts = [s.first_step for s in snapped]
+        assert snapped[0].first_step == 0
+        assert all(f % K == 0 for f in firsts)
+        assert firsts == sorted(firsts)
+        for a, b in zip(snapped, base):
+            assert (a.index, a.sparsity, a.num_selected) == \
+                (b.index, b.sparsity, b.num_selected)
+
+
+def test_window_schedule_never_straddles_stage():
+    for K in (4, 8, 32):
+        stages = snap_stages_to_window(_csc_stages(), K)
+        firsts = stage_first_steps(stages)
+        seen = 0
+        for step, length, stage in window_schedule(0, 100, K, stages):
+            assert step == seen and 1 <= length <= K
+            seen = step + length
+            # the whole window runs under ONE stage's executable
+            assert stage_at(stages, step, firsts) is stage
+            assert stage_at(stages, step + length - 1, firsts) is stage
+        assert seen == 100
+
+
+def test_window_schedule_realigns_offgrid_start():
+    """A restore landing off the window grid (e.g. a pre-windowing
+    checkpoint) costs one short window, then everything is grid-aligned
+    full windows again."""
+    stages = snap_stages_to_window(_csc_stages(), 8)
+    wins = list(window_schedule(3, 40, 8, stages))
+    assert wins[0][:2] == (3, 5)
+    assert all(w[0] % 8 == 0 for w in wins[1:])
+
+
+# -- window-granular supervision ----------------------------------------------
+
+
+def _mini_state():
+    return {"x": jnp.zeros((4,)), "step_val": jnp.asarray(0, jnp.int32)}
+
+
+def test_round_checkpoint_every():
+    assert round_checkpoint_every(50, 1) == 50
+    assert round_checkpoint_every(50, 8) == 48
+    assert round_checkpoint_every(5, 4) == 4
+    assert round_checkpoint_every(2, 8) == 8  # at least one window
+    assert round_checkpoint_every(64, 32) == 64
+
+
+def test_run_windows_checkpoint_cadence(tmp_path):
+    """checkpoint_every=5 with K=4 rounds to 4: every checkpoint lands
+    on a window edge, plus the final blocking save."""
+    ckpt = CheckpointManager(str(tmp_path), keep=100)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=5))
+
+    def window_fn(step, length, state):
+        return {"x": state["x"] + length,
+                "step_val": jnp.asarray(step + length, jnp.int32)}
+
+    final = sup.run_windows(_mini_state(), 0, 18, window_fn, 4)
+    assert float(final["x"][0]) == 18.0
+    assert ckpt.available_steps() == [4, 8, 12, 16, 18]
+
+
+def test_run_windows_restart_restores_window_edge(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=10)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=4,
+                                                 max_restarts=2))
+    calls = []
+    faulted = {"done": False}
+    restored = []
+
+    def window_fn(step, length, state):
+        calls.append((step, length))
+        return {"x": state["x"] + length,
+                "step_val": jnp.asarray(step + length, jnp.int32)}
+
+    def fault(step):
+        if step == 6 and not faulted["done"]:
+            faulted["done"] = True
+            raise RuntimeError("injected node failure")
+
+    final = sup.run_windows(_mini_state(), 0, 12, window_fn, 4,
+                            on_restore=restored.append,
+                            fault_injector=fault)
+    assert float(final["x"][0]) == 12.0
+    assert restored == [4]  # the step-4 window edge, not mid-window
+    assert calls == [(0, 4), (4, 4), (8, 4)]
+    assert sup.restarts == 1
+
+
+def test_supervisor_restore_replays_same_batch(tmp_path):
+    """Regression (PR 9): a mid-run restore replays the SAME batches.
+    Fetching by step index (``next_at``) pins batch identity to the step
+    even though the crash left the pipeline's own cursor ahead."""
+    data = SyntheticLM(64, seed=0)
+    pipe = DataPipeline(data, 2, 8)
+    ckpt = CheckpointManager(str(tmp_path), keep=10)
+    sup = TrainSupervisor(ckpt, SupervisorConfig(checkpoint_every=2,
+                                                 max_restarts=1))
+    got = {}
+    faulted = {"done": False}
+
+    def window_fn(step, length, state):
+        for i in range(length):
+            b = pipe.next_at(step + i)
+            got.setdefault(step + i, []).append(
+                np.asarray(b["tokens"]).copy())
+        if step <= 3 < step + length and not faulted["done"]:
+            faulted["done"] = True  # die AFTER consuming the batches
+            raise RuntimeError("node failure mid-window")
+        return {"x": state["x"] + length,
+                "step_val": jnp.asarray(step + length, jnp.int32)}
+
+    pipe.start(0)
+    sup.run_windows(_mini_state(), 0, 8, window_fn, 2,
+                    on_restore=pipe.skip_to)
+    pipe.stop()
+    assert any(len(bs) > 1 for bs in got.values())  # steps were replayed
+    for bs in got.values():
+        for b in bs[1:]:
+            np.testing.assert_array_equal(b, bs[0])
+
+
+def test_next_at_resyncs_without_on_restore():
+    """Even with no skip_to call at all, ``next_at`` re-reads the right
+    batch for the requested step."""
+    data = SyntheticLM(64, seed=0)
+    pipe = DataPipeline(data, 2, 8)
+    pipe.start(0)
+    want = {t: np.asarray(pipe.next_at(t)["tokens"]).copy()
+            for t in range(5)}
+    # cursor is now at 5; ask for step 2 again without any restore hook
+    np.testing.assert_array_equal(
+        np.asarray(pipe.next_at(2)["tokens"]), want[2])
+    np.testing.assert_array_equal(
+        np.asarray(pipe.next_at(3)["tokens"]), want[3])
+    pipe.stop()
+
+
+# -- driver regressions -------------------------------------------------------
+
+
+def _driver_argv(tmp_path, steps):
+    return ["--arch", "smollm-135m", "--reduced", "--steps", str(steps),
+            "--seq-len", "16", "--batch", "2", "--mesh", "1x1",
+            "--gf-mode", "dense", "--window-steps", "2",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+            "--log-every", "1"]
+
+
+def test_driver_resumes_from_step_zero_checkpoint(tmp_path, capsys):
+    """Regression (PR 9): `latest_step() or 0` treated a step-0
+    checkpoint as 'no checkpoint' and silently trained from scratch."""
+    from repro.launch import train as train_mod
+
+    argv = _driver_argv(tmp_path, 2)
+    args = train_mod._parser().parse_args(argv)
+    trainer, cfg, mesh = train_mod.build(args)
+    with compat_set_mesh(mesh):
+        state = trainer.init_state(jax.random.PRNGKey(args.seed))
+    CheckpointManager(str(tmp_path), keep=3).save(0, state, blocking=True)
+    losses = train_mod.main(argv)
+    out = capsys.readouterr().out
+    assert "resumed from checkpoint step 0" in out
+    assert len(losses) == 2
+
+
+def test_driver_zero_step_run(tmp_path, capsys):
+    """Regression (PR 9): a run that executes zero steps summarized via
+    losses[-1] -> IndexError; it must no-op cleanly."""
+    from repro.launch import train as train_mod
+
+    losses = train_mod.main(_driver_argv(tmp_path, 0))
+    out = capsys.readouterr().out
+    assert losses == []
+    assert "nothing to do" in out
+
+
+def test_throughput_meter_counts_only_in_process_steps():
+    """Regression (PR 9): tok/s assumed the run started at step 0 of
+    this process and folded compile time into the rate. The meter counts
+    only post-compile in-process steps."""
+    from repro.launch.train import ThroughputMeter
+
+    m = ThroughputMeter(tokens_per_step=10)
+    assert m.rate(now=0.0) is None
+    m.note(8, now=100.0)            # compile window: starts the clock
+    assert m.rate(now=100.0) is None
+    m.note(8, now=104.0)
+    assert m.rate(now=104.0) == pytest.approx(20.0)  # 8 steps / 4 s
+    m.note(8, now=108.0)
+    assert m.rate(now=108.0) == pytest.approx(20.0)
+
+
+# -- faults through the scanned window ----------------------------------------
+
+
+@pytest.mark.slow
+def test_fault_fires_mid_window():
+    """Data-plane fault injection keys off the IN-CARRY step counter:
+    scheduled for step 3, it trips exactly step 3 of a K=6 scanned
+    window (visible in the stacked per-step guard metric) and the
+    guarded commit skips only that step."""
+    from repro.runtime.faults import FaultEvent, make_hook
+
+    trainer, cfg, mesh = _make_trainer("lazy", True)
+    hook = make_hook([FaultEvent(step=3, kind="nan", offset=0, width=4)])
+    batches = _batches(cfg, 6)
+    with compat_set_mesh(mesh):
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        window = trainer.build_train_window(6, fault_hook=hook)
+        state, metrics = window(state, _stack(batches))
+    np.testing.assert_array_equal(np.asarray(metrics["guard_tripped"]),
+                                  [0.0, 0.0, 0.0, 1.0, 0.0, 0.0])
+    assert int(np.asarray(state.guard.skipped)) == 1
+    assert int(state.step) == 6
+
+
+def test_guard_lane_windowed_matches_per_step():
+    """GuardLane's scanned window reconstructs the exact per-step record
+    stream (verdicts, scaler trajectory, bit-identity frozen proof) from
+    stacked snapshots — one host sync per window."""
+    from repro.runtime.faults import FaultEvent, GuardLane
+
+    faults = (FaultEvent(step=2, kind="nan", offset=8, width=4),
+              FaultEvent(step=5, kind="overflow", offset=40, width=4))
+    a = GuardLane(mode="lazy").run(8, faults)
+    b = GuardLane(mode="lazy").run(8, faults, window=4)
+    assert a == b

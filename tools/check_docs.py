@@ -42,12 +42,15 @@ REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
                    "wire_format", "int8", "fp8_e4m3", "error feedback",
                    "residual", "--wire-format", "--no-error-feedback",
                    "ring_max_err_int8", "WIRE_MARGIN", "rank_clip",
-                   "wire_bytes_per_step_int8")
+                   "wire_bytes_per_step_int8",
+                   # compile-once scanned training loop
+                   "--loop-check", "BENCH_loop.json", "window_steps")
 
 CONFIG_DRIFT = {
     # every public field of these dataclasses must appear in the doc
     # corpus — adding a knob without documenting it fails CI.
     "GradientFlowConfig": ROOT / "src" / "repro" / "configs" / "base.py",
+    "TrainConfig": ROOT / "src" / "repro" / "configs" / "base.py",
 }
 
 
