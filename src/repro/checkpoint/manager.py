@@ -53,6 +53,22 @@ def _is_scratch(name: str) -> bool:
     return name.split("/")[-1] in SCRATCH_LEAF_NAMES
 
 
+def assert_flushed_state(state: Any, what: str = "checkpoint") -> None:
+    """Reject a TrainState carrying a live cross-step pipeline lane
+    (``state.inflight`` with leaves): its deferred tail-bucket updates
+    exist nowhere but in the scan carry, so persisting (or restarting
+    from) it would silently drop them. ``build_train_window`` flushes at
+    window edges — any state that legitimately reaches a save is
+    flushed. Duck-typed: states without an ``inflight`` field (plain
+    dicts, legacy tuples) pass untouched."""
+    lane = getattr(state, "inflight", ())
+    if jax.tree_util.tree_leaves(lane):
+        raise ValueError(
+            f"state carries an in-flight pipeline lane; {what} requires "
+            "a flushed state (use the state a build_train_window call "
+            "returned, not a mid-window carry)")
+
+
 def _sha256(a: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
 
@@ -86,6 +102,7 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        assert_flushed_state(state, what="CheckpointManager.save")
         self.wait()  # at most one in-flight save
         leaves = jax.tree_util.tree_leaves(state)
         names = _leaf_names(state)

@@ -195,6 +195,20 @@ class GradientFlowConfig:
     # re-inject it next step. Disable only for ablations — without it a
     # quantized run keeps the quantizer's bias.
     error_feedback: bool = True
+    # Cross-step pipelining inside the scanned window (repro.core.engine
+    # ``run_pipelined`` + ``Trainer.build_train_window``): the number of
+    # trailing buckets whose optimizer update is deferred into the scan
+    # carry and applied at the START of the next step, before the forward
+    # pass touches their params — so step t+1's fwd/pack overlaps step
+    # t's tail-bucket reduce+update while parameter values stay
+    # bit-identical to the unpipelined loop. 0 = off; -1 = auto (the cost
+    # model picks the tail set from per-bucket exposed comm); N > 0 pins
+    # the tail size (clamped to num_buckets - 1). Only native dense/lazy
+    # pool-space plans pipeline: CSC's dynamic chunk selection and the
+    # quantized wire formats keep the tail at 0. Windows always flush the
+    # in-flight lane at their edge, so checkpoints/replan see
+    # fully-applied state.
+    pipeline_tail_buckets: int = 0
     # Use Pallas fused kernels where available (CPU falls back to ref).
     use_kernels: bool = False
     # Numeric guard rail (None => unguarded, the pre-guard behavior):

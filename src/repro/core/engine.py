@@ -38,7 +38,7 @@ matrix in ``tests/test_engine.py`` pins it across
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,13 +63,21 @@ class BucketTask:
     ``update_span`` is the pool range whose optimizer update this task's
     result unblocks — for dense/lazy it equals the payload span (tensor
     aligned); for CSC it is None (selection is dynamic, the update side
-    has its own spans in ``StepPlan.update_spans``)."""
+    has its own spans in ``StepPlan.update_spans``).
+
+    ``commit_epoch`` is the cross-step pipeline tag: 0 = the update
+    commits in the same step (the default); 1 = the reduced segment is
+    deferred into the scan carry (``InflightLane``) and applied at the
+    START of the next step, before the forward pass touches the span's
+    params. Deferred tasks are always a contiguous suffix of the plan
+    (late buckets = early layers = last consumed by the next forward)."""
 
     index: int
     start: int
     end: int
     algo: Any                                   # topology.ReduceAlgorithm
     update_span: Optional[Tuple[int, int]] = None
+    commit_epoch: int = 0
 
     @property
     def size(self) -> int:
@@ -91,6 +99,12 @@ class StepPlan:
     warmup: bool = False                        # CSC dense warm-up stage
     num_selected: int = 0                       # CSC k (0 for dense/lazy)
     chunk_elems: int = 0
+    # Cross-step pipeline depth: the last ``pipeline_tail`` tasks carry
+    # commit_epoch=1 (their updates defer into the next step's prologue).
+    # 0 = classic within-step plan. Only native dense/lazy plans pipeline
+    # (CSC's update spans are dynamic; quantized wires would need their
+    # per-chunk scales carried too).
+    pipeline_tail: int = 0
     # The mesh-shape key the plan was compiled under
     # (GradientFlow.plan_cache_key()). After an elastic event the soak
     # harness asserts the active plan's key matches the NEW topology —
@@ -101,10 +115,22 @@ class StepPlan:
     def num_collectives(self) -> int:
         return len(self.tasks)
 
+    @property
+    def head_tasks(self) -> Tuple[BucketTask, ...]:
+        return self.tasks[:len(self.tasks) - self.pipeline_tail]
+
+    @property
+    def tail_tasks(self) -> Tuple[BucketTask, ...]:
+        """The deferred (commit_epoch=1) suffix, in plan order."""
+        return self.tasks[len(self.tasks) - self.pipeline_tail:]
+
     def validate(self) -> None:
         """The partition invariants the hypothesis property pins: tasks
         tile [0, payload_elems) and update spans tile [0, pool_size),
-        each exactly once, in order, with no overlap or gap."""
+        each exactly once, in order, with no overlap or gap. Deferred
+        tasks must be exactly the ``pipeline_tail``-long suffix, and
+        pipelining is only legal for native dense/lazy plans (static,
+        tensor-aligned update spans; values on the wire, not codes)."""
         pos = 0
         for t in self.tasks:
             assert t.start == pos and t.end > t.start, (t, pos)
@@ -115,6 +141,55 @@ class StepPlan:
             assert s == pos and e > s, ((s, e), pos)
             pos = e
         assert pos == self.pool_size, (pos, self.pool_size)
+        n = len(self.tasks)
+        assert 0 <= self.pipeline_tail < max(n, 1), (self.pipeline_tail, n)
+        for i, t in enumerate(self.tasks):
+            want = 1 if i >= n - self.pipeline_tail else 0
+            assert t.commit_epoch == want, (i, t.commit_epoch, want)
+        if self.pipeline_tail:
+            assert self.mode in ("dense", "lazy") and not self.warmup, self
+            for t in self.tail_tasks:
+                assert t.update_span == (t.start, t.end), t
+
+
+def resolve_pipeline_tail(gf, tasks) -> int:
+    """How many trailing buckets the cross-step pipeline defers.
+
+    ``GradientFlowConfig.pipeline_tail_buckets``: 0 = off, N > 0 = defer
+    the last min(N, buckets-1) tasks, -1 = auto — sweep every tail depth
+    through ``cost_model.select_pipeline_tail`` (cross-step two-row
+    timeline priced on the config's topology) and keep the steady-state
+    minimum. CSC (dynamic update spans) and quantized wires (the carry
+    would need per-chunk scales too) never pipeline."""
+    cfg = gf.cfg
+    want = cfg.pipeline_tail_buckets
+    n = len(tasks)
+    if want == 0 or n <= 1 or cfg.mode == "csc" or gf.wire_spec is not None:
+        return 0
+    if want > 0:
+        return min(want, n - 1)
+    assert want == -1, want
+    topo = cfg.topology
+    if topo is None:
+        return 1
+    elt = jnp.dtype(cfg.wire_dtype).itemsize
+    sizes = [t.size * elt for t in tasks]
+    backward_s = cost_model.ring_allreduce_time(
+        sum(t.size for t in tasks) * elt, topo.num_devices,
+        topo.slowest_fabric)
+    comm = [t.algo.predicted_time(b, topo) for t, b in zip(tasks, sizes)]
+    rel = cost_model.bucket_release_times(sizes, backward_s)
+    upd = [cost_model.update_time(t.size) for t in tasks]
+    return cost_model.select_pipeline_tail(comm, rel, upd, backward_s)
+
+
+def _tag_tail(tasks, tail: int):
+    """Stamp commit_epoch=1 on the deferred suffix."""
+    if not tail:
+        return tuple(tasks)
+    n = len(tasks)
+    return tuple(dataclasses.replace(t, commit_epoch=1)
+                 if i >= n - tail else t for i, t in enumerate(tasks))
 
 
 def compile_step_plan(gf, stage: Optional[schedule_mod.SparsityStage] = None,
@@ -147,13 +222,19 @@ def compile_step_plan(gf, stage: Optional[schedule_mod.SparsityStage] = None,
             bounds = [(0, pool.size)]
         algos = gf._algos_for(tuple(bounds))
         tasks = pool_tasks(bounds, algos)
-        return StepPlan(mode="dense", payload_elems=pool.size, tasks=tasks,
-                        update_spans=tuple(bounds), **common)
+        tail = resolve_pipeline_tail(gf, tasks)
+        return StepPlan(mode="dense", payload_elems=pool.size,
+                        tasks=_tag_tail(tasks, tail),
+                        update_spans=tuple(bounds), pipeline_tail=tail,
+                        **common)
 
     if cfg.mode == "lazy":
         tasks = pool_tasks(gf._lazy_bounds, gf._lazy_algos)
-        return StepPlan(mode="lazy", payload_elems=pool.size, tasks=tasks,
-                        update_spans=tuple(gf._lazy_bounds), **common)
+        tail = resolve_pipeline_tail(gf, tasks)
+        return StepPlan(mode="lazy", payload_elems=pool.size,
+                        tasks=_tag_tail(tasks, tail),
+                        update_spans=tuple(gf._lazy_bounds),
+                        pipeline_tail=tail, **common)
 
     assert cfg.mode == "csc", cfg.mode
     stage = stage or gf.stages[-1]
@@ -183,6 +264,24 @@ def compile_step_plan(gf, stage: Optional[schedule_mod.SparsityStage] = None,
 
 def _seg(x: jax.Array, start: int, end: int) -> jax.Array:
     return jax.lax.slice_in_dim(x, start, end)
+
+
+class InflightLane(NamedTuple):
+    """The cross-step pipeline's scan-carry lane: one mean-reduced
+    segment per deferred tail bucket (UNSCALED — guarded runs divide the
+    loss scale out before carrying, so a scaler backoff between emit and
+    apply cannot skew the carried update), plus the emitting step's
+    learning rate and verdict.
+
+    ``ok=False`` means nothing to apply: either the window prologue
+    (``OverlapEngine.empty_inflight``) or a guarded step that tripped —
+    its deferred buckets join the atomic skip set exactly like its head
+    buckets, so a rejected step leaves params/momentum untouched at both
+    commit epochs."""
+
+    segs: Tuple[jax.Array, ...]
+    lr: jax.Array                   # f32 scalar, the emitting step's lr
+    ok: jax.Array                   # bool scalar
 
 
 class OverlapEngine:
@@ -260,8 +359,10 @@ class OverlapEngine:
         commit. Every bucket's reduce is issued first (they still overlap
         each other and the backward release schedule); the combined
         per-bucket health words then gate the whole update stage through a
-        single ``lax.cond`` — so no bucket's update can commit when any
-        other bucket (earlier OR later) trips, and a rejected step leaves
+        single atomic verdict (a ``where``-select for native dense/lazy, a
+        ``lax.cond`` for csc/quantized) — so no bucket's update can commit
+        when any other bucket (earlier OR later) trips, and a rejected step
+        leaves
         params, momentum, and the CSC hg residual bit-identical while only
         the scaler state advances.
 
@@ -310,7 +411,17 @@ class OverlapEngine:
         prepacked in the wire dtype, scaled), derive each bucket's in-band
         health word from its reduced segment — the allreduce already mixed
         every shard, so the verdict is globally consistent with zero extra
-        collectives — then commit or skip the whole update sweep."""
+        collectives — then commit or skip the whole update sweep.
+
+        The skip gate is a ``where``-select over the computed update, not
+        a ``lax.cond``: XLA codegens an elementwise chain differently
+        inside a cond branch than in the main computation (different FMA
+        contraction), and the cross-step pipeline's bit-identity guarantee
+        needs ``run_guarded`` / ``run_pipelined_guarded`` / the lane apply
+        to emit each span's update with the SAME codegen context. A
+        rejected step still returns the pre-step values bit-identically
+        (the select takes the old operand wholesale — NaNs in the
+        discarded update never propagate)."""
         from repro.core import guard as guard_mod
 
         segs = []
@@ -320,16 +431,16 @@ class OverlapEngine:
                 algo=task.algo) / plan.num_data_shards)
         flags = guard_mod.flags_from_words(
             [guard_mod.health_word(s) for s in segs], limit)
+        ok = ~guard_mod.tripped(flags)
         scale = scaler_state.scale
-
-        def commit():
-            outs = [self._update_span(t.update_span, segs[t.index] / scale,
-                                      master, opt_state, lr, None)
-                    for t in plan.tasks]
-            return self._assemble(outs)
-
-        new_params, opt2 = guard_mod.guarded_commit(
-            ~guard_mod.tripped(flags), commit, (params_tree, opt_state))
+        outs = [self._update_span(t.update_span, segs[t.index] / scale,
+                                  master, opt_state, lr, None)
+                for t in plan.tasks]
+        new_params, opt2 = jax.lax.optimization_barrier(
+            self._assemble(outs))
+        pick = lambda new, old: jnp.where(ok, new, old)
+        new_params = jax.tree_util.tree_map(pick, new_params, params_tree)
+        opt2 = jax.tree_util.tree_map(pick, opt2, opt_state)
         return new_params, opt2, gfstate, flags
 
     # -- quantized wire formats (int8 / fp8) ----------------------------------
@@ -724,9 +835,6 @@ class OverlapEngine:
         are complete), and run the segment update through the same
         kernels as the whole-pool path (the streaming TilePlan restricted
         to the bucket span). Returns (leaves, new_state_seg)."""
-        from repro import optim
-
-        cfg = self.gf.cfg
         start, end = span
         view = self.pool.bucket_view(start, end)
         m_seg = _seg(master, start, end)
@@ -734,6 +842,23 @@ class OverlapEngine:
                                         opt_state)
         mask_seg = jnp.ones((view.size,), jnp.bool_) if mask is None \
             else _seg(mask, start, end)
+        return self._update_view_seg(view, m_seg, red_seg, st_seg, lr,
+                                     mask_seg)
+
+    def _update_view_seg(self, view, m_seg, red_seg, st_seg, lr, mask_seg):
+        """The span update on pre-sliced segments — shared by the in-step
+        path (``_update_span``), the guarded commit branch, and the
+        cross-step lane apply. ``optimization_barrier`` fences both sides
+        so the update math is an isolated fusion island with identical
+        ops in every calling context: XLA's FMA-contraction decisions
+        depend on what an elementwise chain fuses with (a ``lax.cond``
+        branch fuses differently from the main computation), and the
+        cross-step pipeline's bit-identity guarantee needs the SAME bits
+        whether a span commits in-step, inside a guarded commit, or one
+        step later from the carry."""
+        from repro import optim
+
+        cfg = self.gf.cfg
         scale = ratios = None
         if self.lars is not None:
             r = self.lars.ratios_view(view, m_seg, red_seg, self.opt_cfg,
@@ -743,11 +868,15 @@ class OverlapEngine:
             else:
                 from repro.kernels import ref
                 scale = ref.expand_ratios(r, view.sizes, view.size)
+        m_seg, red_seg, st_seg, mask_seg, lr, scale, ratios = \
+            jax.lax.optimization_barrier(
+                (m_seg, red_seg, st_seg, mask_seg,
+                 jnp.asarray(lr, jnp.float32), scale, ratios))
         leaves, st2 = optim.update_view(
             self.opt_name, view, m_seg, red_seg, st_seg, mask_seg,
             self.opt_cfg, lr, scale=scale, ratios=ratios,
             use_kernels=cfg.use_kernels)
-        return leaves, st2
+        return jax.lax.optimization_barrier((leaves, st2))
 
     def _assemble(self, outs):
         """Stitch the per-span outputs back together: leaves concatenate
@@ -765,6 +894,309 @@ class OverlapEngine:
             opt2 = jax.tree_util.tree_map(
                 lambda *segs: jnp.concatenate(segs), *states)
         return new_params, opt2
+
+    # -- cross-step pipelining (the deferred-tail lane) -----------------------
+
+    def lane_dtype(self, *, guarded: bool):
+        """Carry dtype of the lane segments. Unguarded native plans carry
+        the reduced mean exactly as the wire delivered it; guarded runs
+        divide the f32 loss scale out at emit time, which promotes to
+        f32 — the same value ``run_guarded``'s commit would have used."""
+        return jnp.float32 if guarded \
+            else jnp.dtype(self.gf.cfg.wire_dtype)
+
+    def empty_inflight(self, plan: StepPlan, *,
+                       guarded: bool = False) -> InflightLane:
+        """The window-prologue lane: zero segments, ok=False (nothing to
+        apply). Shape/dtype-stable with every lane ``run_pipelined``
+        emits, so it can seed the scan carry."""
+        dt = self.lane_dtype(guarded=guarded)
+        segs = tuple(jnp.zeros((t.size,), dt) for t in plan.tail_tasks)
+        return InflightLane(segs=segs, lr=jnp.zeros((), jnp.float32),
+                            ok=jnp.zeros((), jnp.bool_))
+
+    def _apply_lane_tree(self, plan, params_tree, opt_state, lane):
+        """The lane apply itself (ungated): each deferred span's update,
+        in pool (= fwd consumption) order, from the carried segments and
+        the emitting step's lr. Bit-for-bit the update the unpipelined
+        loop emitted in-step — same segments, same all-true mask, the
+        master slice rebuilt from params exactly as ``pool.pack`` lays it
+        out (zero-filled padding included, so momentum over the padding
+        advances identically)."""
+        leaves = self.pool.flat_leaves(params_tree)
+        new_leaves = list(leaves)
+        opt2 = opt_state
+        for task, red in zip(plan.tail_tasks, lane.segs):
+            start, end = task.update_span
+            view = self.pool.bucket_view(start, end)
+            parts = [new_leaves[j].astype(jnp.float32)
+                     for j in range(view.leaf_lo, view.leaf_hi)]
+            if view.padding:
+                parts.append(jnp.zeros((view.padding,), jnp.float32))
+            m_seg = parts[0] if len(parts) == 1 \
+                else jnp.concatenate(parts)
+            st_seg = jax.tree_util.tree_map(
+                lambda a: _seg(a, start, end), opt_state)
+            out_leaves, st2 = self._update_view_seg(
+                view, m_seg, red, st_seg, lane.lr,
+                jnp.ones((view.size,), jnp.bool_))
+            for k, nl in enumerate(out_leaves):
+                new_leaves[view.leaf_lo + k] = nl
+            opt2 = jax.tree_util.tree_map(
+                lambda full, s: jax.lax.dynamic_update_slice(
+                    full, s.astype(full.dtype), (start,)), opt2, st2)
+        return self.pool.unflatten(new_leaves), opt2
+
+    def apply_inflight(self, plan: StepPlan, params_tree, opt_state,
+                       lane: InflightLane):
+        """Apply the PREVIOUS step's carried tail-bucket updates before
+        this step's forward pass touches those spans; a prologue or
+        rejected lane (``ok=False``) applies nothing.
+
+        The gate is an ``optimization_barrier`` + ``where``-select, NOT a
+        ``lax.cond``: XLA contracts mul+add into FMA differently inside a
+        cond branch than in the main computation, and bit-identity with
+        the unpipelined loop requires the lane's update math to codegen in
+        the same (main-computation) context every baseline emits it in —
+        ``run`` directly, ``run_guarded`` via ``_guarded_pool``'s own
+        where-select. The update is computed unconditionally and the
+        select takes old values wholesale on a dead lane, so a rejected
+        emitter's segments can never perturb params."""
+        if not plan.pipeline_tail:
+            return params_tree, opt_state
+        new_params, opt2 = jax.lax.optimization_barrier(
+            self._apply_lane_tree(plan, params_tree, opt_state, lane))
+        pick = lambda new, old: jnp.where(lane.ok, new, old)
+        return (jax.tree_util.tree_map(pick, new_params, params_tree),
+                jax.tree_util.tree_map(pick, opt2, opt_state))
+
+    def _identity_span(self, span, master, opt_state):
+        """The no-op twin of ``_update_span``: the span's current master
+        leaves (cast back to their spec dtype — exact for f32 and for
+        any dtype that round-trips through f32) and its optimizer-state
+        slice, unchanged. What a deferred task contributes to THIS
+        step's assembly."""
+        start, end = span
+        view = self.pool.bucket_view(start, end)
+        leaves = [_seg(master, start + o, start + o + s).astype(spec.dtype)
+                  for spec, o, s in zip(view.specs, view.offsets,
+                                        view.sizes)]
+        st_seg = jax.tree_util.tree_map(lambda a: _seg(a, start, end),
+                                        opt_state)
+        return leaves, st_seg
+
+    def _pipelined_pool_stage(self, plan, gpool, master, opt_state, lr):
+        """Staged loop with a deferred suffix: head tasks run the usual
+        reduce_i ∥ update_{i-1} pipeline; tail tasks still reduce (their
+        collectives overlap the release schedule exactly as before) but
+        contribute identity spans and park their mean segments in the
+        returned lane."""
+        outs: List[Any] = [None] * len(plan.tasks)
+        pending = None
+        tail_segs = []
+        for task in plan.tasks:
+            red = lazy_mod.reduce_bucket(
+                gpool, task.start, task.end, plan.reduce_axes, None,
+                algo=task.algo) / plan.num_data_shards
+            if pending is not None:
+                pt, pr = pending
+                outs[pt.index] = self._update_span(
+                    pt.update_span, pr, master, opt_state, lr, None)
+                pending = None
+            if task.commit_epoch:
+                tail_segs.append(red)
+                outs[task.index] = self._identity_span(
+                    task.update_span, master, opt_state)
+            else:
+                pending = (task, red)
+        if pending is not None:
+            pt, pr = pending
+            outs[pt.index] = self._update_span(pt.update_span, pr, master,
+                                               opt_state, lr, None)
+        lane = InflightLane(segs=tuple(tail_segs),
+                            lr=jnp.asarray(lr, jnp.float32),
+                            ok=jnp.ones((), jnp.bool_))
+        return outs, lane
+
+    def run_pipelined(self, plan: StepPlan, gpool, params_tree, opt_state,
+                      gfstate, lr, census=None):
+        """Pipelined twin of ``run`` for plans with a deferred tail:
+        commits head buckets in-step (same staged loop) and returns the
+        tail buckets' reduced segments in an ``InflightLane`` instead of
+        applying them. The caller owns applying the lane at the start of
+        the NEXT step (``apply_inflight``) and flushing it at window
+        edges. Native dense/lazy only. Returns (new_params_tree,
+        new_opt_state, new_gfstate, lane)."""
+        cfg = self.gf.cfg
+        assert plan.pipeline_tail and cfg.mode in ("dense", "lazy") \
+            and self.gf.wire_spec is None, plan
+        master, _ = self.pool.pack(params_tree, dtype=jnp.float32,
+                                   use_kernels=cfg.use_kernels)
+        outs, lane = self._pipelined_pool_stage(plan, gpool, master,
+                                                opt_state, lr)
+        new_params, opt2 = self._assemble(outs)
+        return new_params, opt2, gfstate, lane
+
+    def run_pipelined_guarded(self, plan: StepPlan, gpool, params_tree,
+                              opt_state, gfstate, scaler_state, lr,
+                              census=None):
+        """Guarded twin of ``run_pipelined``. The verdict covers EVERY
+        bucket's reduced segment — deferred ones included — and gates
+        both commit epochs: head updates go through the same atomic
+        ``where``-select as ``_guarded_pool`` (identical codegen context,
+        so head spans are bit-for-bit the unpipelined guarded commit) and
+        the lane is emitted with ``ok = verdict``, so a tripped step's
+        carried segments are rejected by the next step's
+        ``apply_inflight`` select. The carried segments divide the loss
+        scale out at emit time — exact, the scaler scale is a power of
+        two — so a backoff between emit and apply cannot skew them. The
+        scaler advances exactly as in ``run_guarded``. Returns
+        (new_params_tree, new_opt_state, new_gfstate, new_scaler_state,
+        lane, HealthFlags)."""
+        from repro.core import guard as guard_mod
+        from repro.optim import scaler as scaler_mod
+
+        cfg = self.gf.cfg
+        gcfg = cfg.guard
+        assert gcfg is not None, \
+            "run_pipelined_guarded needs GradientFlowConfig.guard"
+        assert plan.pipeline_tail and cfg.mode in ("dense", "lazy") \
+            and self.gf.wire_spec is None, plan
+        limit = guard_mod.overflow_limit(gcfg, cfg.wire_dtype)
+        master, _ = self.pool.pack(params_tree, dtype=jnp.float32,
+                                   use_kernels=cfg.use_kernels)
+        segs = []
+        for task in plan.tasks:
+            segs.append(lazy_mod.reduce_bucket(
+                gpool, task.start, task.end, plan.reduce_axes, None,
+                algo=task.algo) / plan.num_data_shards)
+        flags = guard_mod.flags_from_words(
+            [guard_mod.health_word(s) for s in segs], limit)
+        ok = ~guard_mod.tripped(flags)
+        scale = scaler_state.scale
+        outs = [self._identity_span(t.update_span, master, opt_state)
+                if t.commit_epoch else
+                self._update_span(t.update_span, segs[t.index] / scale,
+                                  master, opt_state, lr, None)
+                for t in plan.tasks]
+        new_params, opt2 = jax.lax.optimization_barrier(
+            self._assemble(outs))
+        pick = lambda new, old: jnp.where(ok, new, old)
+        new_params = jax.tree_util.tree_map(pick, new_params, params_tree)
+        opt2 = jax.tree_util.tree_map(pick, opt2, opt_state)
+        lane = InflightLane(
+            segs=tuple(segs[t.index] / scale for t in plan.tail_tasks),
+            lr=jnp.asarray(lr, jnp.float32), ok=ok)
+        new_scaler = scaler_mod.update(scaler_state, ok, gcfg)
+        return new_params, opt2, gfstate, new_scaler, lane, flags
+
+    # -- segment-carry pipelined entry points (the zero-copy window form) -----
+
+    def pool_split(self, plan: StepPlan, master, opt_state):
+        """Window-entry for the segment-carry form: the resident f32
+        master and optimizer pools sliced into per-task segments. The
+        scan then carries the tuples instead of the pools, so a step
+        never writes (or copies) anything bigger than the spans it
+        actually updates — no dynamic-update-slice chain for XLA to
+        materialize full-pool copies around."""
+        spans = [t.update_span for t in plan.tasks]
+        m_segs = tuple(_seg(master, s, e) for s, e in spans)
+        st_segs = tuple(
+            jax.tree_util.tree_map(lambda a: _seg(a, s, e), opt_state)
+            for s, e in spans)
+        return m_segs, st_segs
+
+    def pool_join(self, plan: StepPlan, m_segs, st_segs):
+        """Window-edge inverse of ``pool_split``: task spans tile the
+        pool in order, so one concatenation per pool rebuilds the
+        master/optimizer state for checkpoints, replan, and the
+        unflatten back to tree form."""
+        master = m_segs[0] if len(m_segs) == 1 \
+            else jnp.concatenate(m_segs)
+        opt = st_segs[0] if len(st_segs) == 1 \
+            else jax.tree_util.tree_map(
+                lambda *segs: jnp.concatenate(segs), *st_segs)
+        return master, opt
+
+    def _seg_update(self, task, m_seg, st_seg, red, lr, ok):
+        """One task's updated segment pair, in segment space. ``ok``
+        (when given) gates with a span-sized ``where``-select — old
+        bytes pass through wholesale on a dead/rejected lane. Bucket
+        padding passes through from the old segment (the master's
+        padding is pinned at pack-time zeros; the optimizer state over
+        padding advances inside ``st2`` exactly as the in-step commit
+        would have advanced it)."""
+        start, end = task.update_span
+        view = self.pool.bucket_view(start, end)
+        leaves, st2 = self._update_view_seg(
+            view, m_seg, red, st_seg, lr,
+            jnp.ones((view.size,), jnp.bool_))
+        new = leaves[0] if len(leaves) == 1 else jnp.concatenate(leaves)
+        new = new.astype(m_seg.dtype)
+        if ok is not None:
+            new = jnp.where(ok, new, m_seg[:new.shape[0]])
+            st2 = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(ok, n.astype(o.dtype), o),
+                st2, st_seg)
+        if new.shape[0] != m_seg.shape[0]:
+            new = jnp.concatenate([new, m_seg[new.shape[0]:]])
+        return new, st2
+
+    def run_pipelined_segs(self, plan: StepPlan, gpool, m_segs, st_segs,
+                           lr, lane: InflightLane):
+        """Segment-carry pipelined step — the formulation the
+        ``--pipeline-check`` bench scans. The staged loop runs as usual
+        (reduce_i ∥ update_{i-1}); head tasks' new segments replace
+        their carry slots functionally, tail tasks park their mean
+        segment in the outgoing lane, and the INCOMING lane's updates
+        land in the tail slots from the same pre-step segments (head
+        and tail spans are disjoint, so this is bit-identical to
+        apply-then-stage). Returns (new_m_segs, new_st_segs,
+        new_lane)."""
+        nds = plan.num_data_shards
+        new_m, new_st = list(m_segs), list(st_segs)
+        pending = None
+        tail_segs = []
+        for task in plan.tasks:
+            red = lazy_mod.reduce_bucket(
+                gpool, task.start, task.end, plan.reduce_axes, None,
+                algo=task.algo) / nds
+            if pending is not None:
+                pt, pr = pending
+                new_m[pt.index], new_st[pt.index] = self._seg_update(
+                    pt, m_segs[pt.index], st_segs[pt.index], pr, lr,
+                    None)
+                pending = None
+            if task.commit_epoch:
+                tail_segs.append(red)
+            else:
+                pending = (task, red)
+        if pending is not None:
+            pt, pr = pending
+            new_m[pt.index], new_st[pt.index] = self._seg_update(
+                pt, m_segs[pt.index], st_segs[pt.index], pr, lr, None)
+        for task, red in zip(plan.tail_tasks, lane.segs):
+            new_m[task.index], new_st[task.index] = self._seg_update(
+                task, m_segs[task.index], st_segs[task.index], red,
+                lane.lr, lane.ok)
+        lane2 = InflightLane(segs=tuple(tail_segs),
+                             lr=jnp.asarray(lr, jnp.float32),
+                             ok=jnp.ones((), jnp.bool_))
+        return tuple(new_m), tuple(new_st), lane2
+
+    def apply_inflight_segs(self, plan: StepPlan, m_segs, st_segs,
+                            lane: InflightLane):
+        """Segment-carry lane flush (the window epilogue): the carried
+        tail updates land in their slots, gated exactly like the in-scan
+        apply."""
+        if not plan.pipeline_tail:
+            return m_segs, st_segs
+        new_m, new_st = list(m_segs), list(st_segs)
+        for task, red in zip(plan.tail_tasks, lane.segs):
+            new_m[task.index], new_st[task.index] = self._seg_update(
+                task, m_segs[task.index], st_segs[task.index], red,
+                lane.lr, lane.ok)
+        return tuple(new_m), tuple(new_st)
 
 
 # -- the analytic twin (timeline simulation) ---------------------------------
@@ -838,4 +1270,64 @@ def render_timeline(plan: StepPlan, topo, *,
         f"comm busy {summary['comm_busy_s'] * ms:.2f} ms | exposed comm "
         f"{summary['exposed_comm_s'] * ms:.2f} ms | overlap efficiency "
         f"{summary['overlap_efficiency'] * 100:.1f}%")
+    return "\n".join(lines)
+
+
+def simulate_plan_pipelined(plan: StepPlan, topo, *,
+                            tail: Optional[int] = None,
+                            backward_s: Optional[float] = None,
+                            hbm_bw: float = cost_model.HBM_BW) -> dict:
+    """Price the cross-step pipelined execution of a dense/lazy plan:
+    the cost model's two-row timeline where the last ``tail`` buckets'
+    updates retire during the NEXT step's forward window, each gated by
+    its span's fwd need-time. ``tail`` defaults to the plan's own
+    ``pipeline_tail`` (auto-selected when that is 0 — the what-if the
+    dryrun table shows). Returns the ``cross_step_timeline`` dict plus
+    the staged (within-step) baseline for comparison."""
+    assert plan.mode in ("dense", "lazy") or plan.warmup, plan.mode
+    elt = jnp.dtype(plan.wire_dtype).itemsize
+    sizes = [t.size * elt for t in plan.tasks]
+    if backward_s is None:
+        backward_s = cost_model.ring_allreduce_time(
+            plan.payload_elems * elt, topo.num_devices, topo.slowest_fabric)
+    comm = [t.algo.predicted_time(b, topo) for t, b in zip(plan.tasks,
+                                                           sizes)]
+    rel = cost_model.bucket_release_times(sizes, backward_s)
+    upd = [cost_model.update_time(t.size, hbm_bw) for t in plan.tasks]
+    if tail is None:
+        tail = plan.pipeline_tail or cost_model.select_pipeline_tail(
+            comm, rel, upd, backward_s)
+    sim = cost_model.cross_step_timeline(comm, rel, upd, tail, backward_s)
+    sim["backward_s"] = backward_s
+    sim["staged_finish_s"] = cost_model.staged_finish_time(comm, rel, upd)
+    rows = cost_model.staged_timeline(comm, rel, upd)
+    sim["staged_exposed_comm_s"] = cost_model.timeline_summary(
+        rows, backward_s)["exposed_comm_s"]
+    return sim
+
+
+def render_cross_step_timeline(plan: StepPlan, topo, *,
+                               backward_s: Optional[float] = None) -> str:
+    """Human-readable cross-step (two-row) schedule: one steady-state
+    step with carried tail applies up front, head buckets committing
+    in-step, and the new tail handed to step t+1 — the second table
+    ``launch/dryrun.py --timeline`` prints for pipelineable plans."""
+    sim = simulate_plan_pipelined(plan, topo, backward_s=backward_s)
+    ms = 1e3
+    lines = [
+        f"cross-step pipeline: tail={sim['tail']} of {len(plan.tasks)} "
+        f"buckets deferred into the scan carry",
+        f"{'bkt':>3} {'lane':>8} {'comm_start':>10} {'comm_end':>9} "
+        f"{'retire':>8}   (ms)",
+    ]
+    for idx, deferred, cs, ce, retire in sim["rows"]:
+        lane = "carry" if deferred else "in-step"
+        lines.append(f"{idx:>3} {lane:>8} {cs * ms:>10.2f} "
+                     f"{ce * ms:>9.2f} {retire * ms:>8.2f}")
+    lines.append(
+        f"steady-state period {sim['period_s'] * ms:.2f} ms vs staged "
+        f"{sim['staged_finish_s'] * ms:.2f} ms | exposed comm "
+        f"{sim['exposed_comm_s'] * ms:.2f} ms vs staged "
+        f"{sim['staged_exposed_comm_s'] * ms:.2f} ms | window prologue "
+        f"{sim['prologue_s'] * ms:.2f} ms")
     return "\n".join(lines)

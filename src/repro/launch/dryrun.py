@@ -196,12 +196,18 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
 
 def print_timeline(mode: str = "lazy", bucket_elems: int = 0,
                    nodes: int = 64, gpus: int = 8,
-                   wire_dtype: str = "float16") -> None:
+                   wire_dtype: str = "float16",
+                   pipeline_tail: int = -1) -> None:
     """Simulate + print the overlap engine's StepPlan timeline for the
     AlexNet-class pool on the paper's Cluster-V (pure cost model, no
     devices): per-bucket comm/update start+end, exposed comm, and the
     overlap-efficiency summary. ``bucket_elems=0`` auto-tunes θ against
-    the staged pipeline (the production default)."""
+    the staged pipeline (the production default). Plans that can
+    cross-step pipeline (native dense/lazy with a deferred tail;
+    ``pipeline_tail`` -1 lets the cost model pick it) also render the
+    two-row cross-step schedule — carry-lane applies vs in-step
+    commits — with its period / exposed-comm deltas vs the staged
+    (within-step-only) timeline."""
     from repro.configs.shapes import ALEXNET_GRAD_SHAPES
     from repro.core import engine
     from repro.core.gradientflow import GradientFlow
@@ -218,7 +224,8 @@ def print_timeline(mode: str = "lazy", bucket_elems: int = 0,
         chunk_elems=chunk, sparsity=0.85,
         bucket_elems=bucket_elems or 16 * 1024 * 1024,
         auto_bucket=bucket_elems == 0, topology=topo,
-        reduce_axes=("node", "gpu"), collective_algo="auto")
+        reduce_axes=("node", "gpu"), collective_algo="auto",
+        pipeline_tail_buckets=0 if mode == "csc" else pipeline_tail)
     gf = GradientFlow(gf_cfg, pool, num_data_shards=topo.num_devices)
     plan = gf.plan()
     plan.validate()
@@ -226,6 +233,9 @@ def print_timeline(mode: str = "lazy", bucket_elems: int = 0,
           f"Cluster-V {nodes}x{gpus}, mode={mode}, "
           f"theta={gf.bucket_elems} elems")
     print(engine.render_timeline(plan, topo))
+    if plan.pipeline_tail:
+        print()
+        print(engine.render_cross_step_timeline(plan, topo))
 
 
 def print_soak(num_steps: int = 300, seed: int = 0) -> None:
@@ -262,6 +272,9 @@ def main():
                    choices=["dense", "lazy", "csc"])
     p.add_argument("--timeline-theta", type=int, default=0,
                    help="bucket elems for the timeline (0 = auto-tune)")
+    p.add_argument("--timeline-tail", type=int, default=-1,
+                   help="deferred tail buckets for the cross-step "
+                        "schedule (-1 = cost-model auto, 0 = off)")
     p.add_argument("--soak", action="store_true",
                    help="run the simulated elastic soak (fault-injected "
                         "512-way churn with StepPlan replan) and print "
@@ -276,7 +289,8 @@ def main():
         return
     if args.timeline:
         print_timeline(mode=args.timeline_mode,
-                       bucket_elems=args.timeline_theta)
+                       bucket_elems=args.timeline_theta,
+                       pipeline_tail=args.timeline_tail)
         return
 
     archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]

@@ -88,9 +88,40 @@ class TrainState(NamedTuple):
     # empty-tuple default keeps positionally-constructed legacy states
     # valid; ``Trainer.init_state`` always materializes the buffer.
     staging: Any = ()
+    # Cross-step pipeline lane (repro.core.engine.InflightLane): the
+    # deferred tail buckets' reduced-but-unapplied mean segments. LIVE
+    # ONLY inside a pipelined scanned window — ``build_train_window``
+    # seeds it from zeros and flushes it before returning, so every
+    # TrainState that crosses the jit boundary (checkpoints, replan,
+    # eval) carries the empty tuple: fully-applied params, by
+    # construction. ``assert_flushed`` is the seam that pins this.
+    inflight: Any = ()
 
 
 _pvary = compat_pvary
+
+
+def is_flushed(state: TrainState) -> bool:
+    """True when the state carries no live cross-step pipeline lane —
+    i.e. every emitted bucket update has been applied to params. Only a
+    flushed state may be checkpointed, replanned, or handed to a
+    non-pipelined step: a live lane's deferred segments exist nowhere
+    but in the carry."""
+    return not jax.tree_util.tree_leaves(state.inflight)
+
+
+def assert_flushed(state: TrainState, what: str = "checkpoint") -> None:
+    """The window-edge seam: refuse to let a mid-pipeline TrainState
+    escape. ``build_train_window`` flushes its lane before returning, so
+    hitting this means a caller reached into the scan carry (or built a
+    state by hand) — saving it would silently drop the in-flight tail
+    updates."""
+    if not is_flushed(state):
+        raise ValueError(
+            f"TrainState carries an in-flight pipeline lane; {what} "
+            "requires a flushed state (window edges flush — pass the "
+            "state a build_train_window call returned, not a mid-window "
+            "carry)")
 
 
 class Trainer:
@@ -484,6 +515,83 @@ class Trainer:
             hg=gf3.hg[None], chunk_norms=gf3.chunk_norms,
             residual=gf3.residual[None]), sc2, flags
 
+    def _inner_update_pipelined(self, gpool, params, opt, gfstate, lr,
+                                stage, scaler=None):
+        """Pipelined twin of ``_inner_update`` (staged native dense/lazy
+        only): commits head buckets in-step and returns the deferred
+        tail's reduced segments as an ``InflightLane`` instead of
+        applying them — the NEXT step's prologue region applies the lane
+        before its forward pass. Returns (params, opt, gf, lane) or,
+        guarded, (params, opt, gf, scaler, flags, lane)."""
+        gf_local = GFState(hg=gfstate.hg[0],
+                           chunk_norms=gfstate.chunk_norms,
+                           residual=gfstate.residual[0])
+        plan = self.engine.plan_for(stage)
+        if scaler is not None:
+            new_params, opt2, gf2, sc2, lane, flags = \
+                self.engine.run_pipelined_guarded(
+                    plan, gpool, params, opt, gf_local, scaler, lr)
+            return new_params, opt2, GFState(
+                hg=gf2.hg[None], chunk_norms=gf2.chunk_norms,
+                residual=gf2.residual[None]), sc2, flags, lane
+        new_params, opt2, gf2, lane = self.engine.run_pipelined(
+            plan, gpool, params, opt, gf_local, lr)
+        return new_params, opt2, GFState(
+            hg=gf2.hg[None], chunk_norms=gf2.chunk_norms,
+            residual=gf2.residual[None]), lane
+
+    def _pipeline_plan(self, stage: Optional[SparsityStage] = None):
+        """The StepPlan a pipelined window would run, or None when the
+        config can't pipeline (no deferred tail, monolithic overlap, csc
+        / quantized wire, warmup)."""
+        if self.gf_cfg.overlap != "staged":
+            return None
+        plan = self.engine.plan_for(stage or self.gf.stages[-1])
+        return plan if plan.pipeline_tail else None
+
+    def _lane_specs(self, plan):
+        from repro.core.engine import InflightLane
+        pool_spec = P("model") if self.model_size > 1 else P(None)
+        return InflightLane(
+            segs=tuple(pool_spec for _ in plan.tail_tasks),
+            lr=P(), ok=P())
+
+    def _build_lane_apply(self, stage: Optional[SparsityStage] = None):
+        """The prologue/flush region: a fully-manual (data+model)
+        shard_map applying the carried lane to (params, opt) — the same
+        axes as the update region, since the lane lives in local pool
+        space. Runs before the fwd region each pipelined step and once
+        more at the window edge (the flush). Every data shard computes
+        the identical update (the lane is data-replicated), mirroring
+        the update region's determinism contract."""
+        stage = stage or self.gf.stages[-1]
+        plan = self.engine.plan_for(stage)
+        pool_spec = P("model") if self.model_size > 1 else P(None)
+        opt_specs = jax.tree_util.tree_map(
+            lambda _: pool_spec, opt_abstract_state(self.opt_name, 1))
+
+        def apply_body(params, opt, lane):
+            return self.engine.apply_inflight(plan, params, opt, lane)
+
+        return compat_shard_map(
+            apply_body, mesh=self.mesh,
+            in_specs=(self.param_pspecs, opt_specs,
+                      self._lane_specs(plan)),
+            out_specs=(self.param_pspecs, opt_specs),
+            axis_names=self._update_axes(), check_vma=False)
+
+    def _empty_inflight_global(self, plan, *, guarded: bool):
+        """Zero lane in GLOBAL (cross-model-shard) layout: each model
+        shard's local tail segment concatenates along the pool axis,
+        exactly as the pipelined update region's out_specs lay it out."""
+        from repro.core.engine import InflightLane
+        dt = self.engine.lane_dtype(guarded=guarded)
+        return InflightLane(
+            segs=tuple(jnp.zeros((t.size * self.model_size,), dt)
+                       for t in plan.tail_tasks),
+            lr=jnp.zeros((), jnp.float32),
+            ok=jnp.zeros((), jnp.bool_))
+
     def _update_axes(self) -> set:
         axes = set(self.data_axes)
         if "model" in self.mesh.axis_names:
@@ -491,11 +599,21 @@ class Trainer:
         return axes
 
     def _build_step_fn(self, stage: Optional[SparsityStage] = None,
-                       donate: bool = True, fault_hook=None):
+                       donate: bool = True, fault_hook=None,
+                       pipelined: bool = False):
         """The un-jitted ``step(state, batch) -> (state, metrics)``
         closure shared by ``build_train_step`` (jit per step) and
         ``build_train_window`` (``lax.scan`` over a window of steps —
         the closure is already in scan-body form).
+
+        ``pipelined=True`` (windows only; requires
+        ``_pipeline_plan(stage)``) makes the step a one-step software
+        pipeline: a prologue region applies the PREVIOUS step's carried
+        tail-bucket updates to (params, opt) before the forward pass
+        reads them — so fwd sees exactly the fully-updated params the
+        unpipelined loop would have — and the update region commits head
+        buckets in-step while deferring the tail's reduced segments into
+        ``TrainState.inflight`` for the next iteration.
 
         ``fault_hook(gpool, step) -> gpool`` (optional) is traced into
         the update region on the LOCAL packed pool before the reduce —
@@ -534,6 +652,10 @@ class Trainer:
         staging_on = donate
         census_on = self._census_on
         norms_chunk = self.gf_cfg.chunk_elems if census_on else 0
+        if pipelined:
+            plan = self._pipeline_plan(stage)
+            assert plan is not None, "config cannot pipeline (no tail)"
+            assert not census_on, "quantized wires never pipeline"
 
         def pack_local(grads, *st):
             """Grad pytree → local 1-D pool (runs where leaf shapes are
@@ -637,6 +759,9 @@ class Trainer:
                 i += 1
             if fault_hook is not None:
                 gpool = fault_hook(gpool, extra[i])
+            if pipelined:
+                return self._inner_update_pipelined(
+                    gpool, params, opt, gfstate, lr, stage, scaler=scaler)
             return self._inner_update(gpool, params, opt, gfstate, lr,
                                       stage, scaler=scaler, census=census)
 
@@ -693,13 +818,27 @@ class Trainer:
                 (scaler_specs, guard_mod.HealthFlags(P(), P()))
         if fault_hook is not None:
             upd_in_specs = upd_in_specs + (P(),)
+        if pipelined:
+            # The outgoing lane exits in the pool's model-sharded layout
+            # (each model shard emits its local tail segments).
+            upd_out_specs = upd_out_specs + (self._lane_specs(plan),)
         sm_update = compat_shard_map(
             update_body, mesh=self.mesh,
             in_specs=upd_in_specs, out_specs=upd_out_specs,
             axis_names=self._update_axes(), check_vma=False)
 
+        sm_apply = self._build_lane_apply(stage) if pipelined else None
+
         def step(state: TrainState, batch):
-            fwd_args = (state.params, batch)
+            if pipelined:
+                # Apply step t-1's carried tail updates BEFORE fwd reads
+                # the params: fwd then sees bit-for-bit the params the
+                # unpipelined loop's step t would have started from.
+                params0, opt0 = sm_apply(state.params, state.opt,
+                                         state.inflight)
+            else:
+                params0, opt0 = state.params, state.opt
+            fwd_args = (params0, batch)
             if guarded:
                 fwd_args = fwd_args + (state.guard.scale,)
             if staging_on:
@@ -709,7 +848,7 @@ class Trainer:
             staging_st = handoff[1] if staging_on else state.staging
             census_st = handoff[-1] if census_on else None
             lr = lr_at(cfg.optimizer, state.step)
-            upd_args = (gpool_st, state.params, state.opt, state.gf, lr)
+            upd_args = (gpool_st, params0, opt0, state.gf, lr)
             if census_on:
                 upd_args = upd_args + (census_st,)
             if guarded:
@@ -717,6 +856,9 @@ class Trainer:
             if fault_hook is not None:
                 upd_args = upd_args + (state.step,)
             out = sm_update(*upd_args)
+            lane = state.inflight
+            if pipelined:
+                out, lane = out[:-1], out[-1]
             if guarded:
                 from repro.core import guard as guard_mod
                 new_params, opt2, gf2, sc2, flags = out
@@ -725,7 +867,7 @@ class Trainer:
                 (new_params, opt2, gf2), sc2 = out, state.guard
             return TrainState(params=new_params, opt=opt2, gf=gf2,
                               step=state.step + 1, guard=sc2,
-                              staging=staging_st), metrics
+                              staging=staging_st, inflight=lane), metrics
 
         return step
 
@@ -760,17 +902,48 @@ class Trainer:
         A window is compiled per CSC ``stage`` exactly like
         ``build_train_step``: snap stage boundaries to the window grid
         (repro.core.schedule.snap_stages_to_window) so no window
-        straddles a stage and each stage costs one executable."""
+        straddles a stage and each stage costs one executable.
+
+        When the plan carries a deferred tail
+        (``GradientFlowConfig.pipeline_tail_buckets`` != 0, staged
+        overlap, native dense/lazy) and the window has more than one
+        step, the scan body runs cross-step pipelined: the carry grows
+        an ``InflightLane`` of reduced-but-unapplied tail segments,
+        seeded from zeros at window entry and FLUSHED before the window
+        returns — the TrainState crossing the jit boundary is always
+        fully applied (``assert_flushed``). The lane apply runs before
+        each fwd, so every step's forward pass sees bit-for-bit the
+        params the unpipelined scan's would (the per-step loss stream is
+        bitwise identical); the pipelined update SEQUENCE is itself
+        bit-identical as a computation (tests/test_engine.py asserts
+        exact zero on per-step dispatches), but embedded in a scan the
+        final params can pick up ~1-ulp noise from XLA's
+        context-sensitive FMA contraction of the scan body — the same
+        codegen noise the scan-vs-per-step equivalence tests already
+        tolerate at rtol 1e-6."""
         assert window_steps >= 1, window_steps
+        plan = self._pipeline_plan(stage) if window_steps > 1 else None
+        pipelined = plan is not None
         step = self._build_step_fn(stage=stage, donate=donate,
-                                   fault_hook=fault_hook)
+                                   fault_hook=fault_hook,
+                                   pipelined=pipelined)
+        sm_flush = self._build_lane_apply(stage) if pipelined else None
+        guarded = self.gf_cfg.guarded
 
         def window(state: TrainState, batches):
             lens = {x.shape[0] for x in jax.tree_util.tree_leaves(batches)}
             assert len(lens) == 1 and next(iter(lens)) <= window_steps, (
                 "stacked batch leading dims must agree and fit the "
                 "window", lens, window_steps)
-            return jax.lax.scan(step, state, batches)
+            if not pipelined:
+                return jax.lax.scan(step, state, batches)
+            state = state._replace(inflight=self._empty_inflight_global(
+                plan, guarded=guarded))
+            state, metrics = jax.lax.scan(step, state, batches)
+            params, opt = sm_flush(state.params, state.opt,
+                                   state.inflight)
+            return state._replace(params=params, opt=opt,
+                                  inflight=()), metrics
 
         return jax.jit(window, donate_argnums=(0,) if donate else ())
 

@@ -277,3 +277,161 @@ def staged_finish_time(bucket_comm_s: Sequence[float],
     before the update engine existed."""
     rows = staged_timeline(bucket_comm_s, release_s, bucket_update_s)
     return rows[-1].update_end_s if rows else 0.0
+
+
+# -- cross-step (two-row) pipeline timeline ----------------------------------
+#
+# The staged timeline above barriers at the step edge: every bucket's comm
+# AND update must retire before the next step's compute starts, so the
+# tail buckets' wire time past the backward is fully exposed. Cross-step
+# pipelining (engine.run_pipelined + the scanned-window carry) exempts a
+# trailing tail set from that barrier — their reduced segments ride the
+# scan carry and their updates run at the START of the next step, before
+# the forward pass first touches those params. The model here prices that
+# two-row schedule: a serial compute row (fwd/bwd, length ``backward_s``
+# per step, producing releases back-to-front and consuming params
+# front-to-back in the mirrored order) against the shared serial comm and
+# update engines, iterated to steady state.
+
+
+def fwd_need_times(bucket_bytes: Sequence[float],
+                   backward_s: float) -> List[float]:
+    """Offset into a step's compute at which each bucket's params are
+    FIRST consumed. The pool is laid out in reverse generation order
+    (top layers at offset 0), so the forward pass consumes buckets from
+    the pool END backwards: the last bucket is needed immediately
+    (need 0), bucket i once the bytes after it have been traversed —
+    the mirror of ``bucket_release_times``."""
+    total = sum(bucket_bytes) or 1.0
+    need, acc = [], 0.0
+    for b in bucket_bytes:
+        need.append(backward_s * (total - acc - b) / total)
+        acc += b
+    return need
+
+
+def cross_step_timeline(bucket_comm_s: Sequence[float],
+                        release_s: Sequence[float],
+                        bucket_update_s: Sequence[float],
+                        tail: int, backward_s: float, *,
+                        need_s: Sequence[float] = None,
+                        steps: int = 8) -> dict:
+    """Simulate the cross-step pipeline to steady state.
+
+    ``tail`` trailing buckets defer their update into the next step: the
+    update (now an "apply") runs as the next step's prologue and only has
+    to land before that step's compute first touches the bucket's params
+    (``need_s``); head buckets keep the within-step barrier. The comm and
+    update engines are serial and shared across steps (one in-flight
+    collective, one in-flight update sweep — the §3.1 model, extended
+    across the scan-body boundary).
+
+    Returns the steady-state per-step period, the per-step exposed comm
+    (sum over buckets of comm time past each bucket's deadline — the
+    own-step backward end for head buckets, the next step's need time
+    minus the apply sweep for tail buckets), and the last simulated
+    step's schedule rows as (index, deferred, comm_start, comm_end,
+    retire_s) tuples relative to that step's compute start."""
+    n = len(bucket_comm_s)
+    assert 0 <= tail < max(n, 1), (tail, n)
+    if n == 0:
+        return {"period_s": backward_s, "exposed_comm_s": 0.0,
+                "prologue_s": 0.0, "rows": [], "tail": 0}
+    if need_s is None:
+        # Uniform-rate mirror of the release schedule.
+        need_s = [max(0.0, backward_s - r) for r in release_s]
+    head = n - tail
+    comm_free = upd_free = 0.0
+    start = 0.0
+    exposed = 0.0
+    rows = []
+    periods = []
+    inflight = []  # (index, comm_start, comm_end) of the carried tail
+    prev_start = None
+    for _ in range(max(int(steps), 2)):
+        rows = []
+        exposed = 0.0
+        # Apply the PREVIOUS step's in-flight tail (deferred updates):
+        # fwd-consumption order (pool end first), each gated on its own
+        # collective having landed.
+        applied = []
+        for i, cs, ce in reversed(inflight):
+            u0 = max(upd_free, ce)
+            upd_free = u0 + bucket_update_s[i]
+            applied.append((i, cs, ce, upd_free))
+        # This step's compute starts once the compute row is free AND
+        # every carried apply beats its bucket's first consumption.
+        nxt = max([start] + [ready - need_s[i]
+                             for i, _, _, ready in applied])
+        if prev_start is not None:
+            periods.append(nxt - prev_start)
+        prev_start = nxt
+        for i, cs, ce, ready in applied:
+            rows.append((i, True, cs, ce, ready))
+            # Deadline: the comm had to land early enough for the apply
+            # sweep to finish by the time fwd first reads the bucket.
+            exposed += max(0.0, ce - max(cs, nxt + need_s[i]
+                                         - bucket_update_s[i]))
+        start = nxt
+        bwd_end = start + backward_s
+        # This step's collectives; head updates keep the step barrier,
+        # tail reduces retire into the carry.
+        inflight = []
+        barrier = bwd_end
+        for i in range(n):
+            c0 = max(comm_free, start + release_s[i])
+            comm_free = c0 + bucket_comm_s[i]
+            if i < head:
+                u0 = max(upd_free, comm_free)
+                upd_free = u0 + bucket_update_s[i]
+                barrier = max(barrier, upd_free)
+                exposed += max(0.0, comm_free - max(c0, bwd_end))
+                rows.append((i, False, c0, comm_free, upd_free))
+            else:
+                inflight.append((i, c0, comm_free))
+        start = barrier
+    # Steady state: the last iteration's period (converges within a
+    # couple of steps — the serial engines drain any startup skew).
+    period = periods[-1] if periods else backward_s
+    return {"period_s": period,
+            "exposed_comm_s": exposed,
+            "prologue_s": sum(bucket_update_s[head:]),
+            "rows": sorted(rows), "tail": tail}
+
+
+def pipelined_finish_time(bucket_comm_s: Sequence[float],
+                          release_s: Sequence[float],
+                          bucket_update_s: Sequence[float],
+                          tail: int, backward_s: float) -> float:
+    """Steady-state per-step period of the cross-step pipeline — the
+    number a tail set must shrink below ``staged_finish_time`` to pay
+    for itself. ``tail=0`` reproduces the staged barrier exactly."""
+    sim = cross_step_timeline(bucket_comm_s, release_s, bucket_update_s,
+                              tail, backward_s)
+    return sim["period_s"]
+
+
+def select_pipeline_tail(bucket_comm_s: Sequence[float],
+                         release_s: Sequence[float],
+                         bucket_update_s: Sequence[float],
+                         backward_s: float) -> int:
+    """Auto-choose the deferred tail set (``pipeline_tail_buckets=-1``):
+    the tail size minimizing modeled steady-state period PLUS deadline
+    exposure (both seconds — the period is the hard wall-clock term, the
+    exposure the latency-slack a real interleaving scheduler can still
+    convert), ties going to the SMALLEST tail (deferring a bucket whose
+    comm already hides buys nothing and costs carry state). At most
+    ``n - 1`` buckets may defer — the first bucket always commits
+    in-step, so a window edge is never more than one step from fully
+    applied."""
+    n = len(bucket_comm_s)
+    if n <= 1:
+        return 0
+    best_tail, best_t = 0, None
+    for tail in range(n):
+        sim = cross_step_timeline(bucket_comm_s, release_s,
+                                  bucket_update_s, tail, backward_s)
+        t = sim["period_s"] + sim["exposed_comm_s"]
+        if best_t is None or t < best_t - 1e-12:
+            best_tail, best_t = tail, t
+    return best_tail

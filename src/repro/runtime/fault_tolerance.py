@@ -21,7 +21,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointCorrupt, CheckpointManager
+from repro.checkpoint.manager import (CheckpointCorrupt, CheckpointManager,
+                                      assert_flushed_state)
 
 
 @dataclasses.dataclass
@@ -187,6 +188,10 @@ class TrainSupervisor:
                     for s in range(step, step + length):
                         fault_injector(s)
                 state = window_fn(step, length, state)
+                # Window edges flush the cross-step pipeline lane; a
+                # state escaping a window with one still in flight is a
+                # harness bug — fail fast, not just at checkpoint time.
+                assert_flushed_state(state, what="run_windows")
                 prev, step = step, step + length
                 if step // every > prev // every:
                     self.ckpt.save(step, state)

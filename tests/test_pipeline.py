@@ -1,0 +1,568 @@
+"""Cross-step pipelining inside the scanned window (PR 10).
+
+Covers the tentpole and its seams:
+  * analytic cross-step timeline properties: ``tail=0`` reproduces the
+    staged barrier exactly, busy totals and exposure bookkeeping agree
+    between the engine-rendered timeline and the cost model's analytic
+    one for random plans (they are maintained in two places and used to
+    drift silently), and the auto-selected tail never loses to staged on
+    its own objective;
+  * engine bit-identity: a K-step pipelined chain (apply carried lane,
+    then run_pipelined) equals the unpipelined chain bit-for-bit on a
+    4-device mesh — including a guarded chain where a fault trips while
+    tail buckets are in flight (the carried segments must be rejected);
+  * the segment-carry form (``run_pipelined_segs`` — what the
+    ``--pipeline-check`` bench scans) equals the tree form bit-for-bit;
+  * trainer windows: a pipelined ``build_train_window`` reproduces the
+    unpipelined loss stream bitwise and the final state at scan
+    tolerance, and returns a flushed state;
+  * the flush seam: CheckpointManager.save / assert_flushed /
+    run_windows all reject a TrainState carrying a live lane, and a
+    checkpoint from a pipelined run restores onto a non-pipelined
+    config (and vice versa) and keeps training on the same trajectory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multi_device
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke
+from repro.configs.base import (GradientFlowConfig, GuardConfig,
+                                OptimizerConfig, TrainConfig)
+from repro.core import engine
+from repro.core.gradientflow import GradientFlow
+from repro.core.pool import GradientPool
+from repro.data.synthetic import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.launch.trainer import Trainer, assert_flushed, is_flushed
+from repro.parallel import cost_model
+from repro.parallel.collectives import (compat_make_mesh, compat_set_mesh,
+                                        compat_shard_map)
+from repro.runtime.fault_tolerance import (SupervisorConfig,
+                                           TrainSupervisor)
+from jax.sharding import PartitionSpec as P
+
+
+# -- analytic cross-step timeline properties ---------------------------------
+
+
+def _random_timings(rng):
+    n = int(rng.integers(1, 10))
+    comm = rng.uniform(0.001, 0.05, n).tolist()
+    upd = rng.uniform(0.0005, 0.01, n).tolist()
+    backward = float(rng.uniform(0.01, 0.2))
+    sizes = rng.uniform(1e5, 1e8, n).tolist()
+    rel = cost_model.bucket_release_times(sizes, backward)
+    return comm, rel, upd, backward
+
+
+def test_cross_step_tail0_reproduces_staged():
+    """The cross-step model with an empty tail IS the staged barrier —
+    any gap means the two timeline implementations drifted."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        comm, rel, upd, bwd = _random_timings(rng)
+        staged = cost_model.staged_finish_time(comm, rel, upd)
+        p0 = cost_model.pipelined_finish_time(comm, rel, upd, 0, bwd)
+        assert p0 == pytest.approx(staged, abs=1e-9)
+
+
+def test_timeline_busy_totals_and_exposure_bookkeeping():
+    """Conservation properties of the staged timeline: the serial
+    engines' busy totals are exactly the summed inputs, and (releases
+    never exceeding backward) the per-bucket exposed comm sums to the
+    summary's last-collective-past-backward definition."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        comm, rel, upd, bwd = _random_timings(rng)
+        rows = cost_model.staged_timeline(comm, rel, upd)
+        summ = cost_model.timeline_summary(rows, bwd)
+        assert summ["comm_busy_s"] == pytest.approx(sum(comm), abs=1e-12)
+        assert summ["update_busy_s"] == pytest.approx(sum(upd), abs=1e-12)
+        per_bucket = sum(r.exposed_comm_s(bwd) for r in rows)
+        assert per_bucket == pytest.approx(summ["exposed_comm_s"],
+                                           abs=1e-9)
+
+
+def test_auto_tail_never_loses_to_staged_on_objective():
+    """``select_pipeline_tail`` minimizes period + deadline exposure;
+    whatever it picks must be no worse than not pipelining at all (and
+    over-deferring CAN be worse — that is the point of the search)."""
+    rng = np.random.default_rng(2)
+    for _ in range(50):
+        comm, rel, upd, bwd = _random_timings(rng)
+        n = len(comm)
+        tail = cost_model.select_pipeline_tail(comm, rel, upd, bwd)
+        assert 0 <= tail < max(n, 1)
+
+        def objective(t):
+            sim = cost_model.cross_step_timeline(comm, rel, upd, t, bwd)
+            assert sim["period_s"] >= bwd - 1e-9
+            return sim["period_s"] + sim["exposed_comm_s"]
+
+        assert objective(tail) <= objective(0) + 1e-9
+
+
+def _random_plan(rng):
+    nt = int(rng.integers(2, 8))
+    sizes = [tuple(int(x) for x in
+                   rng.integers(1, 40, int(rng.integers(1, 3))))
+             for _ in range(nt)]
+    tree = {f"t{i}": jnp.zeros(s, jnp.float32)
+            for i, s in enumerate(sizes)}
+    pool = GradientPool(tree, pad_to=1)
+    mode = ["dense", "lazy"][int(rng.integers(0, 2))]
+    cfg = GradientFlowConfig(mode=mode,
+                             bucket_elems=int(rng.integers(40, 400)),
+                             chunk_elems=32, sparsity=0.5, warmup_steps=0,
+                             wire_dtype="float32", reduce_axes=("data",),
+                             collective_algo="flat",
+                             pipeline_tail_buckets=-1)
+    gf = GradientFlow(cfg, pool, num_data_shards=1)
+    from repro.parallel.topology import Topology
+    topo = Topology.cluster_v(nodes=int(rng.integers(1, 16)),
+                              gpus_per_node=8)
+    return gf.plan(), topo
+
+
+def _analytic_inputs(plan, topo):
+    """The cost-model inputs derived from a plan the way the ISSUE's
+    analytic row derives them — independently of simulate_plan."""
+    elt = jnp.dtype(plan.wire_dtype).itemsize
+    sizes = [t.size * elt for t in plan.tasks]
+    bwd = cost_model.ring_allreduce_time(plan.payload_elems * elt,
+                                         topo.num_devices,
+                                         topo.slowest_fabric)
+    comm = [t.algo.predicted_time(b, topo)
+            for t, b in zip(plan.tasks, sizes)]
+    rel = cost_model.bucket_release_times(sizes, bwd)
+    upd = [cost_model.update_time(t.size, cost_model.HBM_BW)
+           for t in plan.tasks]
+    return comm, rel, upd, bwd
+
+
+def test_simulate_plan_matches_analytic_timeline():
+    """Property (random plans): the engine-rendered staged timeline is
+    exactly ``cost_model.staged_timeline`` of the plan's own analytic
+    inputs — same rows, same busy totals, same exposed comm."""
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        plan, topo = _random_plan(rng)
+        sim = engine.simulate_plan(plan, topo)
+        comm, rel, upd, bwd = _analytic_inputs(plan, topo)
+        if plan.mode == "csc" and not plan.warmup:
+            upd = [0.0] * len(comm)
+        assert sim["rows"] == cost_model.staged_timeline(comm, rel, upd)
+        s = sim["summary"]
+        assert s["comm_busy_s"] == pytest.approx(sum(comm), abs=1e-12)
+        assert s["update_busy_s"] == pytest.approx(sum(upd), abs=1e-12)
+        assert s["exposed_comm_s"] == pytest.approx(
+            cost_model.timeline_summary(sim["rows"], bwd)
+            ["exposed_comm_s"], abs=1e-12)
+
+
+def test_simulate_plan_pipelined_matches_analytic_timeline():
+    """Property (random plans): the engine's cross-step simulation is
+    exactly ``cost_model.cross_step_timeline`` on the same inputs, and
+    its staged comparison row matches the staged summary."""
+    rng = np.random.default_rng(4)
+    for _ in range(8):
+        plan, topo = _random_plan(rng)
+        sim = engine.simulate_plan_pipelined(plan, topo)
+        comm, rel, upd, bwd = _analytic_inputs(plan, topo)
+        ref = cost_model.cross_step_timeline(comm, rel, upd, sim["tail"],
+                                             bwd)
+        assert sim["rows"] == ref["rows"]
+        assert sim["period_s"] == pytest.approx(ref["period_s"],
+                                                abs=1e-12)
+        assert sim["exposed_comm_s"] == pytest.approx(
+            ref["exposed_comm_s"], abs=1e-12)
+        assert sim["staged_finish_s"] == pytest.approx(
+            cost_model.staged_finish_time(comm, rel, upd), abs=1e-12)
+        assert sim["staged_exposed_comm_s"] == pytest.approx(
+            cost_model.timeline_summary(
+                cost_model.staged_timeline(comm, rel, upd), bwd)
+            ["exposed_comm_s"], abs=1e-12)
+
+
+# -- engine bit-identity (multi-device) --------------------------------------
+
+_BITID_BODY = """
+from repro.configs.base import GradientFlowConfig, OptimizerConfig, \\
+    GuardConfig
+from repro.core.engine import OverlapEngine
+from repro.core.gradientflow import GradientFlow
+from repro.core.pool import GradientPool
+from repro.optim import sgd, scaler as scaler_mod
+
+SIZES = [(7,), (33, 5), (2, 3, 4), (129,), (64, 2), (300,)]
+tree_struct = {f"t{i}": jnp.zeros(s) for i, s in enumerate(SIZES)}
+mesh = compat_make_mesh((N,), ("data",))
+rng = np.random.default_rng(0)
+pool = GradientPool(tree_struct, pad_to=1)
+
+def build(guard=None):
+    cfg = GradientFlowConfig(mode="lazy", bucket_elems=150,
+                             chunk_elems=64, sparsity=0.5, warmup_steps=0,
+                             wire_dtype="float32", reduce_axes=("data",),
+                             collective_algo="flat",
+                             pipeline_tail_buckets=2, guard=guard)
+    gf = GradientFlow(cfg, pool, num_data_shards=N)
+    opt_cfg = OptimizerConfig(name="momentum_sgd", momentum=0.9,
+                              weight_decay=1e-4)
+    eng = OverlapEngine(gf, "momentum_sgd", opt_cfg)
+    return gf, eng, eng.plan_for()
+
+params = {k: jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+          for k, v in tree_struct.items()}
+mom0 = jnp.asarray(rng.normal(size=pool.size), jnp.float32)
+K = 4
+gpools = np.asarray(rng.normal(size=(K, N * pool.size)), np.float32)
+lrs = [0.1, 0.05, 0.2, 0.1]
+
+gf, eng, plan = build()
+assert plan.pipeline_tail == 2, plan
+st0 = gf.init_state()
+
+def base_step(gpool_all, params, mom, lr):
+    def body(gpool):
+        p2, o2, _ = eng.run(plan, gpool, params,
+                            sgd.SGDState(momentum=mom), st0, lr)
+        return tuple(jax.tree_util.tree_leaves(p2)) + (o2.momentum,)
+    return smap(body, mesh, (P("data"),), P(), ("data",))(gpool_all)
+
+def pipe_step(gpool_all, params, mom, lr, lane):
+    def body(gpool, lane):
+        p1, o1 = eng.apply_inflight(plan, params,
+                                    sgd.SGDState(momentum=mom), lane)
+        p2, o2, _, lane2 = eng.run_pipelined(plan, gpool, p1, o1, st0, lr)
+        return (tuple(jax.tree_util.tree_leaves(p2)) + (o2.momentum,),
+                lane2)
+    return smap(body, mesh, (P("data"), P()), (P(), P()),
+                ("data",))(gpool_all, lane)
+
+def flush(params, mom, lane):
+    def body(lane):
+        p1, o1 = eng.apply_inflight(plan, params,
+                                    sgd.SGDState(momentum=mom), lane)
+        return tuple(jax.tree_util.tree_leaves(p1)) + (o1.momentum,)
+    return smap(body, mesh, (P(),), P(), ("data",))(lane)
+
+p, m = params, mom0
+for k in range(K):
+    out = base_step(jnp.asarray(gpools[k]), p, m, lrs[k])
+    p = {f"t{i}": l for i, l in enumerate(out[:-1])}; m = out[-1]
+base_out = [np.asarray(x) for x in out]
+
+p, m = params, mom0
+lane = eng.empty_inflight(plan)
+for k in range(K):
+    out, lane = pipe_step(jnp.asarray(gpools[k]), p, m, lrs[k], lane)
+    p = {f"t{i}": l for i, l in enumerate(out[:-1])}; m = out[-1]
+out = flush(p, m, lane)
+pipe_out = [np.asarray(x) for x in out]
+worst = max(float(np.max(np.abs(a - b)))
+            for a, b in zip(base_out, pipe_out))
+assert worst == 0.0, f"unguarded chain diverged: {worst}"
+
+# Guarded: a NaN lands at step 2 while tail buckets from step 1 ride the
+# carry — the trip must reject the carried segments too, and the whole
+# chain (params, momentum, final scale, trip stream) must match the
+# unpipelined guarded chain bit-for-bit.
+gcfg = GuardConfig()
+gfg, engg, plang = build(gcfg)
+stg = gfg.init_state()
+gpools_g = gpools.copy()
+gpools_g[2, 5] = np.nan
+
+def base_gstep(gpool_all, params, mom, sc, lr):
+    def body(gpool):
+        p2, o2, _, sc2, fl = engg.run_guarded(
+            plang, gpool, params, sgd.SGDState(momentum=mom), stg, sc, lr)
+        return (tuple(jax.tree_util.tree_leaves(p2)) + (o2.momentum,),
+                sc2, fl)
+    return smap(body, mesh, (P("data"),), (P(), P(), P()),
+                ("data",))(gpool_all)
+
+def pipe_gstep(gpool_all, params, mom, sc, lr, lane):
+    def body(gpool, lane):
+        p1, o1 = engg.apply_inflight(plang, params,
+                                     sgd.SGDState(momentum=mom), lane)
+        p2, o2, _, sc2, lane2, fl = engg.run_pipelined_guarded(
+            plang, gpool, p1, o1, stg, sc, lr)
+        return (tuple(jax.tree_util.tree_leaves(p2)) + (o2.momentum,),
+                sc2, lane2, fl)
+    return smap(body, mesh, (P("data"), P()), (P(), P(), P(), P()),
+                ("data",))(gpool_all, lane)
+
+def gflush(params, mom, lane):
+    def body(lane):
+        p1, o1 = engg.apply_inflight(plang, params,
+                                     sgd.SGDState(momentum=mom), lane)
+        return tuple(jax.tree_util.tree_leaves(p1)) + (o1.momentum,)
+    return smap(body, mesh, (P(),), P(), ("data",))(lane)
+
+sc0 = scaler_mod.init(gcfg)
+p, m, sc = params, mom0, sc0
+trips_b = []
+for k in range(K):
+    out, sc, fl = base_gstep(jnp.asarray(gpools_g[k]), p, m, sc, lrs[k])
+    trips_b.append(bool(fl.nonfinite | fl.overflow))
+    p = {f"t{i}": l for i, l in enumerate(out[:-1])}; m = out[-1]
+base_out = [np.asarray(x) for x in out] + [np.asarray(sc.scale)]
+
+p, m, sc = params, mom0, sc0
+lane = engg.empty_inflight(plang, guarded=True)
+trips_p = []
+for k in range(K):
+    out, sc, lane, fl = pipe_gstep(jnp.asarray(gpools_g[k]), p, m, sc,
+                                   lrs[k], lane)
+    trips_p.append(bool(fl.nonfinite | fl.overflow))
+    p = {f"t{i}": l for i, l in enumerate(out[:-1])}; m = out[-1]
+out = gflush(p, m, lane)
+pipe_out = [np.asarray(x) for x in out] + [np.asarray(sc.scale)]
+assert trips_b == trips_p and any(trips_b), (trips_b, trips_p)
+worst = max(float(np.max(np.abs(a - b)))
+            for a, b in zip(base_out, pipe_out))
+assert worst == 0.0, f"guarded chain diverged: {worst}"
+print("OK bit-identical, trips", trips_b)
+"""
+
+
+@pytest.mark.slow
+def test_pipelined_chain_bit_identical_including_guarded_trip():
+    """ISSUE acceptance: pipelined-vs-unpipelined training is
+    bit-identical on a 4-device mesh, including a guarded chain where a
+    fault trips while two tail buckets are in flight."""
+    out = run_multi_device(_BITID_BODY, devices=4)
+    assert "OK bit-identical" in out
+
+
+# -- segment-carry form vs tree form -----------------------------------------
+
+
+def test_segment_carry_form_matches_unpipelined_chain():
+    """``run_pipelined_segs`` (what the bench window scans) must be
+    bit-identical to the unpipelined ``run`` chain once flushed. Each
+    step runs as its own shard_map call — matched compilation contexts,
+    the same contract the scanned windows and the multi-device chain
+    test verify; unrolling both K-step chains into ONE jit is allowed
+    to fuse across steps differently and is not the shipped shape."""
+    from repro.core.engine import InflightLane, OverlapEngine
+    from repro.optim import sgd
+
+    SIZES = [(7,), (33, 5), (2, 3, 4), (129,), (64, 2), (300,)]
+    tree = {f"t{i}": jnp.zeros(s) for i, s in enumerate(SIZES)}
+    pool = GradientPool(tree, pad_to=1)
+    cfg = GradientFlowConfig(mode="lazy", bucket_elems=150,
+                             chunk_elems=64, sparsity=0.5, warmup_steps=0,
+                             wire_dtype="float32", reduce_axes=("data",),
+                             collective_algo="flat",
+                             pipeline_tail_buckets=2)
+    gf = GradientFlow(cfg, pool, num_data_shards=1)
+    eng = OverlapEngine(gf, "momentum_sgd",
+                        OptimizerConfig(name="momentum_sgd", momentum=0.9,
+                                        weight_decay=1e-4))
+    plan = eng.plan_for()
+    assert plan.pipeline_tail == 2
+    st0 = gf.init_state()
+    rng = np.random.default_rng(0)
+    params = {k: jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+              for k, v in tree.items()}
+    mom0 = jnp.asarray(rng.normal(size=pool.size), jnp.float32)
+    K = 3
+    gpools = np.asarray(rng.normal(size=(K, pool.size)), np.float32)
+    lrs = [0.1, 0.05, 0.2]
+    mesh = compat_make_mesh((1,), ("data",))
+    lane_specs = InflightLane(segs=(P(None),) * len(plan.tail_tasks),
+                              lr=P(), ok=P())
+
+    def smap(f, in_specs, out_specs):
+        return compat_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, axis_names={"data"},
+                                check_vma=False)
+
+    def seg_specs(segs):
+        return tuple(jax.tree_util.tree_map(lambda _: P(None), s)
+                     for s in segs)
+
+    with compat_set_mesh(mesh):
+        p, o = params, sgd.SGDState(momentum=mom0)
+        for k in range(K):
+            def b(gp, mom, pp, _k=k):
+                p2, o2, _ = eng.run(plan, gp, pp,
+                                    sgd.SGDState(momentum=mom), st0,
+                                    lrs[_k])
+                return tuple(jax.tree_util.tree_leaves(p2)) \
+                    + (o2.momentum,)
+            out = smap(b, (P(None), P(None), P(None)),
+                       P(None))(gpools[k], o.momentum, p)
+            p = {f"t{i}": l for i, l in enumerate(out[:-1])}
+            o = sgd.SGDState(momentum=out[-1])
+        base_master, _ = pool.pack(p, dtype=jnp.float32)
+        base_mom = o.momentum
+
+        master0, _ = pool.pack(params, dtype=jnp.float32)
+        m_segs, st_segs = smap(
+            lambda m, mom: eng.pool_split(plan, m,
+                                          sgd.SGDState(momentum=mom)),
+            (P(None), P(None)), (P(None), P(None)))(master0, mom0)
+        lane = eng.empty_inflight(plan)
+        for k in range(K):
+            def s(gp, ms, ss, ln, _k=k):
+                return eng.run_pipelined_segs(plan, gp, ms, ss, lrs[_k],
+                                              ln)
+            m_segs, st_segs, lane = smap(
+                s, (P(None), seg_specs(m_segs), seg_specs(st_segs),
+                    lane_specs),
+                (seg_specs(m_segs), seg_specs(st_segs), lane_specs)
+            )(gpools[k], m_segs, st_segs, lane)
+
+        def fl(ms, ss, ln):
+            ms2, ss2 = eng.apply_inflight_segs(plan, ms, ss, ln)
+            return eng.pool_join(plan, ms2, ss2)
+        master, o_segs = smap(
+            fl, (seg_specs(m_segs), seg_specs(st_segs), lane_specs),
+            (P(None), P(None)))(m_segs, st_segs, lane)
+
+    for a, b in ((base_master, master), (base_mom, o_segs.momentum)):
+        assert float(np.max(np.abs(np.asarray(a) - np.asarray(b)))) \
+            == 0.0
+
+
+# -- trainer windows ---------------------------------------------------------
+
+
+def _make_trainer(tail, guarded, total_steps=16):
+    model_cfg, rules = get_smoke("smollm-135m")
+    guard = GuardConfig(init_scale=2.0, growth_interval=1000) \
+        if guarded else None
+    gf = GradientFlowConfig(mode="lazy", bucket_elems=4096,
+                            chunk_elems=512, sparsity=0.5, warmup_steps=0,
+                            wire_dtype="float32", guard=guard,
+                            pipeline_tail_buckets=tail)
+    cfg = TrainConfig(
+        model=model_cfg, gradientflow=gf,
+        optimizer=OptimizerConfig(name="momentum_sgd", learning_rate=0.1,
+                                  momentum=0.9, warmup_steps=2,
+                                  total_steps=total_steps,
+                                  schedule="constant"),
+        seq_len=16, global_batch=2, attn_chunk=0, seed=0)
+    mesh = make_host_mesh()
+    return Trainer(cfg, mesh, rules), cfg, mesh
+
+
+def _batches(cfg, n):
+    data = SyntheticLM(cfg.model.vocab_size, seed=0)
+    return [data.batch(t, cfg.global_batch, cfg.seq_len)
+            for t in range(n)]
+
+
+def _stack(bs):
+    return jax.device_put(
+        jax.tree_util.tree_map(lambda *xs: np.stack(xs), *bs))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("guarded", [False, True])
+def test_window_pipelined_matches_unpipelined(guarded):
+    """A pipelined scanned window reproduces the unpipelined window's
+    loss stream bitwise, lands the final state at scan tolerance, and
+    hands back a flushed state."""
+    K = 4
+    t0, cfg, mesh = _make_trainer(0, guarded)
+    t2, _, _ = _make_trainer(2, guarded)
+    plan = t2._pipeline_plan()
+    assert plan is not None and plan.pipeline_tail == 2, plan
+    assert t0._pipeline_plan() is None
+    bs = _batches(cfg, K)
+    with compat_set_mesh(mesh):
+        s0 = t0.init_state(jax.random.PRNGKey(0))
+        s0, m0 = t0.build_train_window(K)(s0, _stack(bs))
+        s2 = t2.init_state(jax.random.PRNGKey(0))
+        s2, m2 = t2.build_train_window(K)(s2, _stack(bs))
+    assert is_flushed(s2) and is_flushed(s0)
+    dl = float(np.max(np.abs(np.asarray(m0["loss"])
+                             - np.asarray(m2["loss"]))))
+    assert dl == 0.0
+    for a, b in zip(
+            jax.tree_util.tree_leaves((s0.params, s0.opt, s0.guard)),
+            jax.tree_util.tree_leaves((s2.params, s2.opt, s2.guard))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# -- the flush seam ----------------------------------------------------------
+
+
+class _FakeState:
+    """Duck-typed stand-in for a TrainState mid-pipeline."""
+
+    def __init__(self, live):
+        self.inflight = (jnp.zeros((3,)),) if live else ()
+
+
+def test_flush_seam_rejects_live_lane(tmp_path):
+    """Every escape hatch for a mid-pipeline state must slam shut:
+    assert_flushed, CheckpointManager.save, and run_windows."""
+    live = _FakeState(live=True)
+    with pytest.raises(ValueError, match="in-flight pipeline lane"):
+        CheckpointManager(str(tmp_path)).save(0, live)
+    t2, _, _ = _make_trainer(2, guarded=False)
+    with compat_set_mesh(t2.mesh):
+        s2 = t2.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="in-flight pipeline lane"):
+        assert_flushed(s2._replace(inflight=(jnp.zeros((3,)),)))
+    # run_windows: a window_fn leaking its carry must fail fast (no
+    # checkpoint of it may ever exist).
+    sup = TrainSupervisor(CheckpointManager(str(tmp_path / "w")),
+                          SupervisorConfig(max_restarts=0))
+    with pytest.raises(ValueError, match="in-flight pipeline lane"):
+        sup.run_windows(_FakeState(live=False), 0, 4,
+                        lambda step, length, state: _FakeState(live=True),
+                        window=4)
+
+
+@pytest.mark.slow
+def test_checkpoint_restores_across_pipeline_configs(tmp_path):
+    """A window-edge checkpoint is pipeline-agnostic: a pipelined run's
+    snapshot restores onto a non-pipelined config (and vice versa) and
+    the continued trajectory matches an unpipelined straight-through
+    run at scan tolerance."""
+    K = 4
+    t0, cfg, mesh = _make_trainer(0, guarded=False, total_steps=2 * K)
+    t2, _, _ = _make_trainer(2, guarded=False, total_steps=2 * K)
+    bs = _batches(cfg, 2 * K)
+    first, second = _stack(bs[:K]), _stack(bs[K:])
+    with compat_set_mesh(mesh):
+        w0 = t0.build_train_window(K)
+        w2 = t2.build_train_window(K)
+        # straight-through unpipelined baseline
+        sa = t0.init_state(jax.random.PRNGKey(0))
+        sa, _ = w0(sa, first)
+        sa, _ = w0(sa, second)
+        # pipelined first window -> checkpoint -> unpipelined continue
+        sb = t2.init_state(jax.random.PRNGKey(0))
+        sb, _ = w2(sb, first)
+        assert is_flushed(sb)
+        ckpt = CheckpointManager(str(tmp_path / "p2"))
+        ckpt.save(K, sb, blocking=True)
+        step, sb0 = ckpt.restore(t0.init_state(jax.random.PRNGKey(1)))
+        assert step == K and is_flushed(sb0)
+        sb0, _ = w0(sb0, second)
+        # unpipelined first window -> checkpoint -> pipelined continue
+        sc = t0.init_state(jax.random.PRNGKey(0))
+        sc, _ = w0(sc, first)
+        ckpt2 = CheckpointManager(str(tmp_path / "p0"))
+        ckpt2.save(K, sc, blocking=True)
+        step, sc2 = ckpt2.restore(t2.init_state(jax.random.PRNGKey(1)))
+        assert step == K and is_flushed(sc2)
+        sc2, _ = w2(sc2, second)
+    for final in (sb0, sc2):
+        for a, b in zip(
+                jax.tree_util.tree_leaves((sa.params, sa.opt)),
+                jax.tree_util.tree_leaves((final.params, final.opt))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)

@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""Collate every ``BENCH_*.json`` baseline into one trajectory table.
+
+The bench gates each maintain their own committed baseline at the repo
+root; until now the only way to see the measured trajectory (how much
+the fused pool saves, what the overlap engine exposes, what the
+cross-step pipeline buys) was to open seven JSON files. This tool prints
+the headline metrics of every gate in one table, and is run at the end
+of the CI bench jobs so the trajectory lands in the job log.
+
+Columns:
+  gate      the micro.py gate name (``--<gate>-json`` / ``--<gate>-check``)
+  metric    dotted path into the gate's JSON
+  baseline  value committed at the repo root
+  measured  value from ``--measured DIR`` when a freshly emitted JSON of
+            the same name exists there (CI refresh runs), else ``-``
+
+Wall-clock metrics are machine-dependent and marked with ``~``; they are
+context, not gated surfaces. Exits 1 if a registered gate's baseline
+file is missing (a deleted baseline should fail loudly, not vanish from
+the table). Stdlib only — must run in the CI bench env without [dev].
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (metric dotted-path, machine_dependent) per gate. Curated headline
+# metrics only — the JSON files stay the source of truth for the rest.
+GATES: Dict[str, Sequence[Tuple[str, bool]]] = {
+    "pool": (
+        ("legacy.total_ops", False),
+        ("fused.total_ops", False),
+        ("fused.dynamic-update-slice", False),
+        ("fused.wall_us", True),
+    ),
+    "kernels": (
+        ("pack.num_copies", False),
+        ("pack.pool_exact", False),
+        ("unpack.mom_max_abs_err", False),
+        ("ring.total_wire_bytes", False),
+        ("ring.ppermute_count", False),
+        ("wire.reduction_csc_int8_vs_dense_bf16", False),
+        ("wire.final_loss_rel_diff", False),
+    ),
+    "overlap": (
+        ("issue_order.interleaved", False),
+        ("issue_order.pipelined", False),
+        ("timeline.finish_s", False),
+        ("timeline.exposed_comm_s", False),
+        ("timeline.overlap_efficiency", False),
+    ),
+    "guard": (
+        ("clean_run.false_trips", False),
+        ("clean_run.growth_events", False),
+        ("census_overhead.extra_ops", False),
+    ),
+    "soak": (
+        ("final.completed_steps", False),
+        ("final.restarts_consumed", False),
+        ("final.elastic_events", False),
+        ("final.final_predicted_step_s", False),
+    ),
+    "loop": (
+        ("speedup_8_vs_1", True),
+        ("speedup_32_vs_1", True),
+        ("equivalence.params_max_rel_err", False),
+    ),
+    "pipeline": (
+        ("pipeline_tail", False),
+        ("speedup.pipelined_vs_baseline", True),
+        ("speedup.params_max_rel_err", False),
+        ("bit_identity.unguarded_max_abs_diff", False),
+        ("bit_identity.guarded_max_abs_diff", False),
+        ("analytic.exposed_comm_s", False),
+        ("analytic.staged_exposed_comm_s", False),
+    ),
+}
+
+
+def _lookup(d: Dict, path: str) -> Any:
+    cur: Any = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _fmt(v: Any) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def _load(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def collect(root: str, measured_dir: Optional[str]
+            ) -> Tuple[List[Tuple[str, str, str, str]], List[str]]:
+    rows: List[Tuple[str, str, str, str]] = []
+    missing: List[str] = []
+    seen = set()
+    for gate, metrics in GATES.items():
+        fname = f"BENCH_{gate}.json"
+        seen.add(fname)
+        base = _load(os.path.join(root, fname))
+        if base is None:
+            missing.append(fname)
+            continue
+        meas = _load(os.path.join(measured_dir, fname)) \
+            if measured_dir else None
+        for path, machine_dep in metrics:
+            name = path + (" ~" if machine_dep else "")
+            rows.append((gate, name, _fmt(_lookup(base, path)),
+                         _fmt(_lookup(meas, path) if meas else None)))
+    # Baselines with no curated entry still show up (one row per
+    # top-level scalar) so a new gate is visible before curation.
+    for f in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        fname = os.path.basename(f)
+        if fname in seen:
+            continue
+        base = _load(f) or {}
+        gate = fname[len("BENCH_"):-len(".json")] + "?"
+        for k, v in base.items():
+            if isinstance(v, (int, float, bool, str)):
+                rows.append((gate, k, _fmt(v), "-"))
+    return rows, missing
+
+
+def render(rows: Sequence[Tuple[str, str, str, str]]) -> str:
+    header = ("gate", "metric", "baseline", "measured")
+    widths = [max(len(r[i]) for r in list(rows) + [header])
+              for i in range(4)]
+    out = []
+
+    def line(r, pad=" "):
+        out.append("  ".join(s.ljust(w, pad) for s, w in zip(r, widths)))
+
+    line(header)
+    line(("", "", "", ""), pad="-")
+    prev = None
+    for r in rows:
+        line((r[0] if r[0] != prev else "",) + r[1:])
+        prev = r[0]
+    return "\n".join(out)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=ROOT,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--measured", default=None, metavar="DIR",
+                    help="directory of freshly emitted BENCH_*.json to "
+                         "show alongside the baselines")
+    args = ap.parse_args(argv)
+    rows, missing = collect(args.root, args.measured)
+    print("bench trajectory (~ = machine-dependent wall time)")
+    print(render(rows))
+    for fname in missing:
+        print(f"MISSING BASELINE: {fname} (registered gate, no file)")
+    return 1 if missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,7 +44,10 @@ REQUIRED_TOKENS = ("--pool-check", "BENCH_pool.json",
                    "ring_max_err_int8", "WIRE_MARGIN", "rank_clip",
                    "wire_bytes_per_step_int8",
                    # compile-once scanned training loop
-                   "--loop-check", "BENCH_loop.json", "window_steps")
+                   "--loop-check", "BENCH_loop.json", "window_steps",
+                   # cross-step pipelining inside the scanned window
+                   "pipeline_tail_buckets", "--pipeline-check",
+                   "BENCH_pipeline.json")
 
 CONFIG_DRIFT = {
     # every public field of these dataclasses must appear in the doc
